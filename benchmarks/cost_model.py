@@ -1,0 +1,368 @@
+"""Analytic per-device cost model for the roofline (FLOPs / HBM / wire).
+
+Why analytic: XLA's ``compiled.cost_analysis()`` counts while-loop bodies
+ONCE regardless of trip count (verified: llama3-8b train_4k reports
+1.25e12 flops = exactly one layer x one microbatch + LM head + optimizer -
+the analytic single-trip value).  Every scan trip count here is static and
+the collective schedule is hand-written (shard_map), so this model
+reproduces the per-occurrence HLO numbers and multiplies by the true trip
+counts; benchmarks/roofline.py cross-checks the per-occurrence collective
+sizes against the dry-run HLO artifacts.
+
+Scopes (per device):
+  per-microbatch fwd work   x PASSES x n_micro   (PASSES: 1 fwd + 2 bwd +
+                                                  1 remat replay = 4 train)
+  weight HBM streams        x 3 x n_micro train  (fwd, bwd, remat replay)
+  activation HBM (C_ACT passes of the residual stream, covers fwd+bwd)
+                            x n_micro
+  TP collectives            x 3 x n_micro train  (fwd, bwd transpose,
+                                                  remat replay)
+  once-per-step             ZeRO RS/AG + optimizer, decode cache traffic
+
+FT modes: "off" | "unfused" (paper Sec. 5.1: checksum GEMVs re-touch HBM)
+| "fused" (paper Sec. 5.2: checksums ride in VMEM; extra FLOPs
+2MNK(1/bm + 1/bn), bm = bn = 128, ~zero extra HBM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+BF16 = 2
+F32 = 4
+C_ACT = 6
+FT_TILE = 128
+
+
+def _ring(nbytes: float, n: int) -> float:
+    return nbytes * (n - 1) / n if n > 1 else 0.0
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float
+    hbm: float
+    wire: float
+    model_flops: float
+    params_local: float
+    detail: Dict[str, float]
+
+
+def _ft_matmul_extra(m, k, n, ft: str):
+    if ft == "off":
+        return 0.0, 0.0
+    ref_flops = 2 * (2 * m * k + 2 * k * n) + 8 * (m + n)
+    if ft == "fused":
+        return ref_flops + 2 * m * n * k * (2 / FT_TILE), (m + n) * 4 * F32
+    extra_hbm = (m * k + k * n + 2 * m * n) * BF16
+    return ref_flops + 2 * (m * n) * 2, extra_hbm
+
+
+class _B:
+    """Per-scope accumulators (see module docstring)."""
+
+    def __init__(self, ft):
+        self.ft = ft
+        self.flops_mb = 0.0     # per-microbatch fwd flops
+        self.hbm_ft_mb = 0.0    # per-microbatch-per-pass FT re-read bytes
+        self.hbm_act_mb = 0.0   # per-microbatch activation bytes (C_ACT)
+        self.hbm_once = 0.0     # per-step bytes (caches, states, optimizer)
+        self.wire_mb = 0.0      # per-microbatch-per-pass collective bytes
+        self.wire_once = 0.0
+        self.weights = 0.0      # local param count (counted once)
+
+    def mm(self, m, k, n, w_params=0.0):
+        ef, eh = _ft_matmul_extra(m, k, n, self.ft)
+        self.flops_mb += 2 * m * k * n + ef
+        self.hbm_ft_mb += eh
+        self.weights += w_params
+
+
+def cell_costs(cfg: ArchConfig, cell: ShapeCell, *, ms: int = 16,
+               dp: int = 16, ft: str = "off",
+               remat: str = None, fsdp: bool = None,
+               kv_bits: int = None, zero_dtype: str = None,
+               cap: float = None) -> Costs:
+    """Per-device analytic costs.  Perf knobs default to the cfg's values:
+
+      remat:  "full" | "save_tp_outputs" (TP collectives 3 -> 2 passes)
+      fsdp:   ZeRO-3 param sharding (per-layer weight AG/RS over dp,
+              no optimizer collectives)
+      kv_bits: 16 | 8 (int8 KV cache halves decode cache traffic)
+      zero_dtype: "f32" | "bf16" ZeRO-1 grad/param collectives
+      cap:    MoE capacity factor override
+    """
+    remat = remat if remat is not None else cfg.remat_policy
+    fsdp = fsdp if fsdp is not None else (cfg.param_shard == "fsdp")
+    kv_bits = kv_bits if kv_bits is not None else (
+        8 if cfg.kv_cache_dtype == "int8" else 16)
+    zero_dtype = zero_dtype if zero_dtype is not None \
+        else cfg.zero_collective_dtype
+    if cap is not None:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, capacity_factor=cap)
+    D, V, dh = cfg.d_model, cfg.vocab, cfg.dh
+    H_loc = max(cfg.n_heads // ms, 1)
+    kv_eff = ms if cfg.n_kv < ms else cfg.n_kv
+    kv_loc = max(kv_eff // ms, 1)
+    train = cell.kind == "train"
+    decode = cell.kind in ("decode", "long")
+    seq_shard = cell.kind == "long"
+
+    B, S = cell.global_batch, cell.seq_len
+    if decode:
+        T_d = B if seq_shard else max(B // dp, 1)
+        Sq, Skv = 1, (S // dp if seq_shard else S)
+    else:
+        T_d = (B // dp) * S
+        Sq = Skv = S
+    n_micro = (cfg.n_micro_override or max(1, B // dp)) if train else 1
+    T_mb = max(T_d // n_micro, 1)
+    n_seq_mb = max(T_mb // Sq, 1) if not decode else T_mb
+    passes = 4.0 if train else 1.0
+    w_streams = (3.0 * n_micro) if train else 1.0
+    # save_tp_outputs: the remat replay reuses the saved psum outputs, so
+    # the TP collective schedule runs fwd + bwd only (2 passes, not 3)
+    coll_mult = 2.0 if (train and remat == "save_tp_outputs") else \
+        (3.0 if train else 1.0)
+    coll_passes = coll_mult * n_micro if train else 1.0
+    kv_scale = (0.53 if kv_bits == 8 else 1.0)  # int8 + scales
+
+    b = _B(ft)
+
+    def attn(mla=False, cross=False):
+        if mla:
+            lora, dn, dr = cfg.kv_lora, cfg.dh_nope, cfg.dh_rope
+            b.mm(T_mb, D, H_loc * (dn + dr),
+                 w_params=D * H_loc * (dn + dr))
+            b.mm(T_mb, D, lora + dr, w_params=D * (lora + dr))
+            src = T_d * Skv if decode else T_mb
+            b.mm(src, lora, H_loc * (dn + cfg.dh),
+                 w_params=lora * H_loc * (dn + cfg.dh))
+            b.mm(T_mb, H_loc * cfg.dh, D, w_params=H_loc * cfg.dh * D)
+            core_dh = dn + dr
+        else:
+            skv_len = cfg.src_seq if cross else Skv
+            b.mm(T_mb, D, H_loc * dh, w_params=D * H_loc * dh)
+            kv_tok = T_mb if not cross else n_seq_mb * cfg.src_seq
+            b.mm(kv_tok, D, 2 * kv_loc * dh, w_params=2 * D * kv_loc * dh)
+            b.mm(T_mb, H_loc * dh, D, w_params=H_loc * dh * D)
+            core_dh = dh
+        skv = cfg.src_seq if cross else Skv
+        causal = (not cross) and (not decode)
+        frac = 0.5 if causal else 1.0
+        b.flops_mb += 4 * n_seq_mb * Sq * skv * core_dh * H_loc * frac
+        if decode and not cross:
+            if mla:
+                b.hbm_once += T_d * Skv * (cfg.kv_lora + cfg.dh_rope) \
+                    * BF16 * kv_scale
+            else:
+                b.hbm_once += T_d * Skv * 2 * kv_loc * dh * BF16 * kv_scale
+        if decode and cross:
+            b.hbm_once += T_d * cfg.src_seq * 2 * kv_loc * dh * BF16 \
+                * kv_scale
+        b.wire_mb += 2 * _ring(T_mb * D * BF16, ms)
+
+    def dense_ffn():
+        F_loc = cfg.d_ff // ms
+        n_up = 2 if cfg.gated_ffn else 1
+        b.mm(T_mb, D, n_up * F_loc, w_params=n_up * D * F_loc)
+        b.mm(T_mb, F_loc, D, w_params=F_loc * D)
+        b.wire_mb += 2 * _ring(T_mb * D * BF16, ms)
+
+    def moe_ffn():
+        E, k_top, Fe = cfg.n_experts, cfg.top_k, cfg.d_ff_expert
+        E_loc = max(E // ms, 1)
+        t_loc = max(-(-T_mb // ms), 1)
+        cap = max(8, -(-int(cfg.capacity_factor * t_loc * k_top / ms)
+                       // 8) * 8)
+        rows = ms * cap
+        b.mm(t_loc, D, E, w_params=D * E)
+        b.mm(rows, D, 2 * Fe, w_params=2 * E_loc * D * Fe)
+        b.mm(rows, Fe, D, w_params=E_loc * Fe * D)
+        if cfg.n_shared:
+            Fs_loc = max(cfg.n_shared * Fe // ms, 1)
+            b.mm(T_mb, D, 2 * Fs_loc, w_params=2 * D * Fs_loc)
+            b.mm(T_mb, Fs_loc, D, w_params=Fs_loc * D)
+            b.wire_mb += 2 * _ring(T_mb * D * BF16, ms)
+        b.wire_mb += (2 * _ring(rows * D * BF16, ms)
+                      + _ring(T_mb * D * BF16, ms))
+
+    def mamba():
+        di_loc = 2 * D // ms
+        ds, dtr = cfg.d_state, -(-D // 16)
+        b.mm(T_mb, D, 2 * di_loc, w_params=2 * D * di_loc)
+        b.mm(T_mb, di_loc, dtr + 2 * ds, w_params=di_loc * (dtr + 2 * ds))
+        b.mm(T_mb, dtr, di_loc, w_params=dtr * di_loc)
+        b.mm(T_mb, di_loc, D, w_params=di_loc * D)
+        b.flops_mb += 10 * T_mb * di_loc * ds
+        b.wire_mb += (2 * _ring(T_mb * (dtr + 2 * ds) * F32, ms)
+                      + 2 * _ring(T_mb * D * BF16, ms))
+        if decode:
+            b.hbm_once += T_d * di_loc * ds * F32 * 2
+        else:
+            b.hbm_act_mb += 2 * T_mb * di_loc * ds * F32 \
+                / max(cfg.ssm_chunk, 1)
+
+    def mlstm():
+        di = 2 * D
+        H = cfg.n_heads
+        dqk = di // (2 * H)
+        dv_loc = max((di // H) // ms, 1)
+        b.mm(T_mb, D, di // ms, w_params=2 * D * di // ms)   # x|z halves
+        b.mm(T_mb, di, 2 * H * dqk, w_params=di * 2 * H * dqk)
+        b.mm(T_mb, di, H * dv_loc, w_params=di * H * dv_loc)
+        b.mm(T_mb, H * dv_loc, D, w_params=di * D // ms)
+        ch = max(cfg.ssm_chunk, 8)
+        if decode:
+            b.flops_mb += 6 * T_d * H * dqk * dv_loc
+            b.hbm_once += T_d * H * dqk * dv_loc * F32 * 2
+        else:
+            b.flops_mb += (2 * T_mb * ch * H * dqk
+                           + 4 * T_mb * ch * H * dv_loc
+                           + 4 * (T_mb / ch) * H * dqk * dv_loc * ch)
+        b.wire_mb += (_ring(T_mb * 2 * di * BF16, ms)
+                      + 2 * _ring(T_mb * D * BF16, ms))
+
+    def slstm():
+        H = cfg.n_heads
+        dhh = D // H
+        Fx = max((-(-(4 * D // 3) // 128) * 128) // ms, 1)
+        b.mm(T_mb, D, 4 * D // ms, w_params=4 * D * D // ms)
+        b.flops_mb += 2 * T_mb * 4 * H * dhh * dhh           # R matmuls
+        b.mm(T_mb, D, D, w_params=D * D)                     # w_out repl
+        b.mm(T_mb, D, 2 * Fx, w_params=2 * D * Fx)
+        b.mm(T_mb, Fx, D, w_params=Fx * D)
+        b.wire_mb += (_ring(T_mb * 4 * D * BF16, ms)
+                      + 2 * _ring(T_mb * D * BF16, ms))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        for _ in range(cfg.n_layers):
+            attn(mla=bool(cfg.kv_lora))
+            moe_ffn() if cfg.n_experts else dense_ffn()
+            b.hbm_act_mb += C_ACT * T_mb * D * BF16
+    elif fam == "hybrid":
+        groups = cfg.n_layers // cfg.group_size
+        for _ in range(groups):
+            for s, kind in enumerate(cfg.pattern):
+                attn() if kind == "attn" else mamba()
+                moe_ffn() if s in cfg.moe_slots else dense_ffn()
+                b.hbm_act_mb += C_ACT * T_mb * D * BF16
+    elif fam == "ssm":
+        groups = cfg.n_layers // cfg.group_size
+        for _ in range(groups):
+            for kind in cfg.pattern:
+                slstm() if kind == "slstm" else mlstm()
+                b.hbm_act_mb += C_ACT * T_mb * D * BF16
+    else:  # encdec
+        if not decode:
+            for _ in range(cfg.enc_layers):
+                attn()
+                dense_ffn()
+                b.hbm_act_mb += C_ACT * T_mb * D * BF16
+        for _ in range(cfg.dec_layers):
+            attn()
+            attn(cross=True)
+            dense_ffn()
+            b.hbm_act_mb += C_ACT * T_mb * D * BF16
+
+    # head (tied embedding)
+    V_loc = V // ms
+    b.mm(T_mb, D, V_loc, w_params=D * V_loc)
+    b.wire_mb += _ring(T_mb * D * BF16, ms)       # embed psum
+    head_extra = (2.0 if train else 0.0)          # head bwd is 2x more
+    b.flops_mb += head_extra * 0                  # folded into `passes`
+
+    # ---- roll up scopes ------------------------------------------------------
+    flops = b.flops_mb * passes * n_micro
+    hbm = (b.weights * BF16 * w_streams
+           + b.hbm_ft_mb * passes * n_micro
+           + b.hbm_act_mb * n_micro
+           + b.hbm_once)
+    wire = b.wire_mb * coll_passes + b.wire_once
+
+    if train and not fsdp:  # optimizer (ZeRO-1) once per step
+        zbytes = BF16 if zero_dtype == "bf16" else F32
+        wire += 2 * _ring(b.weights * zbytes, dp)
+        hbm += b.weights * F32 * 2 + b.weights * F32 * 4 / dp \
+            + 2 * b.weights * F32 * n_micro          # grad accum rw
+        flops += 14 * b.weights
+    elif train:  # FSDP/ZeRO-3: per-layer weight AG (fwd + remat replay)
+        # + grad RS (all_gather transpose), every microbatch; optimizer
+        # runs locally on the dp-sharded slices (zero collectives)
+        ag_passes = 2.0 if remat == "save_tp_outputs" else 2.0
+        wire += n_micro * (ag_passes + 1.0) * _ring(b.weights * BF16, dp)
+        hbm += (b.weights * BF16 * n_micro * 2          # gather buffers
+                + b.weights / dp * F32 * (2 + 4)        # opt + master
+                + 2 * b.weights / dp * F32 * n_micro)   # grad accum rw
+        flops += 14 * b.weights / dp
+    if decode and fsdp and not getattr(cfg, "serve_expert_tp", False):
+        # ZeRO-3 serving re-gathers all weights every token step
+        wire += _ring(b.weights * BF16, dp)
+        hbm += b.weights * BF16                         # gather buffers
+    elif decode and getattr(cfg, "serve_expert_tp", False):
+        # 2D expert sharding: weights resident; per-MoE-layer token AG +
+        # partial-output RS over the data axes
+        n_moe = cfg.n_layers if cfg.family == "moe" else len(cfg.moe_slots) \
+            * (cfg.n_layers // max(cfg.group_size, 1))
+        t_loc = max(-(-T_d // ms), 1)
+        capr = ms * max(8, -(-int(cfg.capacity_factor * t_loc
+                                  * cfg.top_k / ms) // 8) * 8)
+        wire += n_moe * 2 * _ring(dp * capr * D * BF16, dp)
+
+    n_active = _active_params(cfg, decode=decode)
+    tokens_global = B if decode else B * S
+    model_flops = (6 if train else 2) * n_active * tokens_global / (dp * ms)
+    return Costs(flops=flops, hbm=hbm, wire=wire, model_flops=model_flops,
+                 params_local=b.weights,
+                 detail={"flops_mb": b.flops_mb, "wire_mb": b.wire_mb,
+                         "hbm_once": b.hbm_once, "n_micro": n_micro})
+
+
+def _active_params(cfg: ArchConfig, decode: bool = False) -> float:
+    """Per-token active parameters (MoE: routed top-k + shared only)."""
+    D, dh = cfg.d_model, cfg.dh
+    attn_p = D * cfg.n_heads * dh * 2 + D * cfg.n_kv * dh * 2
+    if cfg.kv_lora:
+        attn_p = (D * cfg.n_heads * (cfg.dh_nope + cfg.dh_rope)
+                  + D * (cfg.kv_lora + cfg.dh_rope)
+                  + cfg.kv_lora * cfg.n_heads * (cfg.dh_nope + cfg.dh)
+                  + cfg.n_heads * cfg.dh * D)
+    if cfg.family in ("dense", "vlm"):
+        total = cfg.n_layers * (attn_p + (3 if cfg.gated_ffn else 2)
+                                * D * cfg.d_ff)
+    elif cfg.family == "moe":
+        total = cfg.n_layers * (attn_p + 3 * D * cfg.d_ff_expert
+                                * (cfg.top_k + cfg.n_shared)
+                                + D * cfg.n_experts)
+    elif cfg.family == "hybrid":
+        di = 2 * D
+        dtr = -(-D // 16)
+        mamba_p = 2 * D * di + di * (dtr + 2 * cfg.d_state) + dtr * di \
+            + di * D
+        groups = cfg.n_layers // cfg.group_size
+        total = 0.0
+        for s, kind in enumerate(cfg.pattern):
+            mix = attn_p if kind == "attn" else mamba_p
+            ffn = (3 * D * cfg.d_ff_expert * cfg.top_k
+                   + D * cfg.n_experts) if s in cfg.moe_slots \
+                else 3 * D * cfg.d_ff
+            total += groups * (mix + ffn)
+    elif cfg.family == "ssm":
+        di = 2 * D
+        H = cfg.n_heads
+        mlstm_p = 2 * D * di + di * (di + di // 2) + di * D
+        Fx = -(-(4 * D // 3) // 128) * 128
+        slstm_p = 4 * D * D + 4 * D * (D // H) + D * D + 3 * D * Fx
+        groups = cfg.n_layers // cfg.group_size
+        total = float(sum(groups * (slstm_p if k == "slstm" else mlstm_p)
+                          for k in cfg.pattern))
+    else:  # encdec
+        dec_p = cfg.dec_layers * (attn_p * 2 + 2 * D * cfg.d_ff)
+        enc_p = cfg.enc_layers * (attn_p + 2 * D * cfg.d_ff)
+        total = dec_p + (0 if decode else enc_p)
+    return float(total) + cfg.vocab * D

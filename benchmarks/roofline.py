@@ -1,0 +1,125 @@
+"""Roofline analysis (EXPERIMENTS.md section Roofline).
+
+For every (arch x shape) baseline cell on the single-pod mesh:
+
+  compute term    = FLOPs / (peak bf16 FLOP/s)            [s / step]
+  memory term     = HBM bytes / HBM bandwidth
+  collective term = wire bytes / ICI link bandwidth
+
+FLOPs / HBM / wire come from benchmarks/cost_model.py (analytic, loop-
+aware; see its docstring for why XLA cost_analysis cannot be used
+directly); the dry-run JSON artifacts supply the HLO cross-checks
+(per-occurrence collective sizes, per-device argument/temp memory) and
+the compile evidence.  Hardware: TPU v5e-class, 197 TF bf16 / 819 GB/s
+HBM / 50 GB/s ICI per chip.
+
+Usage: python -m benchmarks.roofline [--ft off|unfused|fused] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCH_IDS, get_config                # noqa: E402
+from repro.configs.base import SHAPE_GRID                     # noqa: E402
+from benchmarks.cost_model import cell_costs                  # noqa: E402
+
+PEAK = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_artifact(arch, shape, multi_pod=False):
+    tag = f"{arch}__{shape}__{'mp' if multi_pod else 'sp'}"
+    path = os.path.join(ART, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+def analyze_cell(arch: str, shape, *, ft: str = "off", ms=16, dp=16):
+    cfg = get_config(arch)
+    for c, skip in cfg.cells():
+        if c.name == shape:
+            if skip:
+                return {"arch": arch, "shape": shape, "status": "skipped",
+                        "reason": skip}
+            cell = c
+            break
+    costs = cell_costs(cfg, cell, ms=ms, dp=dp, ft=ft)
+    t_c = costs.flops / PEAK
+    t_m = costs.hbm / HBM_BW
+    t_n = costs.wire / ICI_BW
+    bound = max(t_c, t_m, t_n)
+    dom = {t_c: "compute", t_m: "memory", t_n: "collective"}[bound]
+    rec = {
+        "arch": arch, "shape": shape, "status": "ok", "ft": ft,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_n,
+        "bottleneck": dom, "bound_step_s": bound,
+        "flops_dev": costs.flops, "hbm_dev": costs.hbm,
+        "wire_dev": costs.wire,
+        "model_flops_dev": costs.model_flops,
+        "useful_ratio": costs.model_flops / max(costs.flops, 1e-30),
+        "roofline_fraction": t_c / max(bound, 1e-30),
+        "params_local": costs.params_local,
+    }
+    art = load_artifact(arch, shape)
+    if art and art.get("status") == "ok":
+        rec["hlo_once_flops"] = art["cost_analysis"]["flops"]
+        rec["hlo_once_wire"] = art["collectives"].get("bytes_total", 0.0)
+        ma = art.get("memory_analysis", {})
+        rec["hlo_args_bytes"] = ma.get("argument_size_in_bytes", 0)
+        rec["hlo_temp_bytes"] = ma.get("temp_size_in_bytes", 0)
+        rec["compile_s"] = art.get("compile_s")
+    return rec
+
+
+def table(ft: str = "off"):
+    rows = []
+    for arch in ARCH_IDS:
+        for cell in SHAPE_GRID:
+            rows.append(analyze_cell(arch, cell.name, ft=ft))
+    return rows
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    return f"{x * 1e3:7.2f}ms"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ft", default="off",
+                    choices=["off", "unfused", "fused"])
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = table(args.ft)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return
+    print(f"# Roofline (single-pod 16x16, ft={args.ft}); "
+          "terms are per-device step times")
+    print(f"{'arch':<24}{'shape':<13}{'t_comp':>10}{'t_mem':>10}"
+          f"{'t_coll':>10}  {'bound':<11}{'roofl%':>7}{'useful%':>8}")
+    for r in rows:
+        if r["status"] == "skipped":
+            print(f"{r['arch']:<24}{r['shape']:<13}  -- skipped: "
+                  f"{r['reason'][:48]}")
+            continue
+        print(f"{r['arch']:<24}{r['shape']:<13}"
+              f"{fmt_s(r['t_compute_s'])}{fmt_s(r['t_memory_s'])}"
+              f"{fmt_s(r['t_collective_s'])}  {r['bottleneck']:<11}"
+              f"{100 * r['roofline_fraction']:6.1f}%"
+              f"{100 * min(r['useful_ratio'], 9.99):7.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark entry point: one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows at the end (harness contract).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import paper_figs, roofline
+
+    rows = paper_figs.main()
+
+    print("\n== Roofline summary (from dry-run artifacts + cost model) ==")
+    rl = roofline.table("off")
+    n_ok = sum(1 for r in rl if r["status"] == "ok")
+    n_skip = sum(1 for r in rl if r["status"] == "skipped")
+    print(f"cells: {n_ok} analyzed, {n_skip} documented skips "
+          f"(see EXPERIMENTS.md)")
+    for r in rl:
+        if r["status"] != "ok":
+            continue
+        print(f"  {r['arch']:<24}{r['shape']:<12} bound={r['bottleneck']:<11}"
+              f" roofline={100 * r['roofline_fraction']:5.1f}%")
+
+    print("\nname,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_ft']:.1f},"
+              f"overhead_pct={row['overhead_pct']:.2f}")
+    for r in rl:
+        if r["status"] != "ok":
+            continue
+        print(f"roofline_{r['arch']}_{r['shape']},"
+              f"{1e6 * r['bound_step_s']:.1f},"
+              f"bound={r['bottleneck']};roofline_pct="
+              f"{100 * r['roofline_fraction']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart: FT-BLAS in five minutes.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Shows the paper's two protection schemes doing their job on live data:
+ABFT catching+fixing a corrupted GEMM, DMR catching+fixing a corrupted
+vector op, the fused Pallas kernel, and the FT telemetry counters.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import blas
+from repro.core import (HYBRID, HYBRID_UNFUSED, OFF, Injection, ft_matmul)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (256, 192), jnp.float32)
+    B = jax.random.normal(jax.random.PRNGKey(1), (192, 320), jnp.float32)
+    truth = np.asarray(A) @ np.asarray(B)
+
+    print("== 1. A soft error corrupts an unprotected matmul ==")
+    inj = Injection.at(stream=2, pos=37 * 320 + 11, delta=5.0)
+    C_bad, _ = ft_matmul(A, B, policy=OFF, injection=inj)
+    err = float(np.abs(np.asarray(C_bad) - truth).max())
+    print(f"   max |error| vs truth: {err:.3f}  <- silent corruption\n")
+
+    print("== 2. Online ABFT (paper Sec. 5) detects, locates, corrects ==")
+    C_ok, rep = ft_matmul(A, B, policy=HYBRID_UNFUSED, injection=inj)
+    err = float(np.abs(np.asarray(C_ok) - truth).max())
+    print(f"   detected={int(rep['abft_detected'])} "
+          f"corrected={int(rep['abft_corrected'])} "
+          f"max |error| after correction: {err:.2e}\n")
+
+    print("== 3. The fused-checksum Pallas kernel (paper Sec. 5.2) ==")
+    C_k, rep = ft_matmul(A, B, policy=HYBRID, injection=inj)  # kernel path
+    err = float(np.abs(np.asarray(C_k) - truth).max())
+    print(f"   kernel path: corrected={int(rep['abft_corrected'])}, "
+          f"max |error|: {err:.2e}")
+    print("   (checksums accumulated in VMEM while the MXU tiles are "
+          "resident - zero extra HBM traffic)\n")
+
+    print("== 4. DMR for memory-bound Level-1 (paper Sec. 4) ==")
+    x = jax.random.normal(key, (100_000,), jnp.float32)
+    inj1 = Injection.at(stream=0, pos=777, delta=1.0)
+    y, rep = blas.scal(2.5, x, policy=HYBRID, injection=inj1)
+    print(f"   dscal under fault: detected={int(rep['dmr_detected'])} "
+          f"corrected={int(rep['dmr_corrected'])} "
+          f"exact={bool(np.array_equal(np.asarray(y), 2.5 * np.asarray(x)))}\n")
+
+    print("== 5. The hybrid split inside one routine: FT TRSM ==")
+    n = 96
+    L = jnp.tril(jax.random.normal(key, (n, n))) + 4 * jnp.eye(n)
+    Bm = jax.random.normal(jax.random.PRNGKey(2), (n, 32), jnp.float32)
+    X, rep = blas.trsm(1.0, L, Bm, policy=HYBRID_UNFUSED,
+                       injection=Injection.at(stream=2, pos=5, delta=2.0))
+    ref = np.asarray(jax.scipy.linalg.solve_triangular(L, Bm, lower=True))
+    print(f"   GEMM panels under ABFT + diagonal solves under DMR: "
+          f"abft_corrected={int(rep['abft_corrected'])}, "
+          f"allclose={np.allclose(np.asarray(X), ref, atol=1e-3)}")
+
+
+if __name__ == "__main__":
+    main()

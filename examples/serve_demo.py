@@ -1,0 +1,98 @@
+"""Serving example: batched greedy decode with online fault tolerance.
+
+  PYTHONPATH=src python examples/serve_demo.py [--arch deepseek_v2_lite_16b]
+
+Demonstrates three things on the production serve loop (KV cache,
+vocab-sharded head):
+  1. the FT-protected stream is token-identical to the unprotected one
+     (protection does not perturb generation);
+  2. a soft error injected into a protected projection on the model's own
+     weights is detected and corrected online (output matches the clean op
+     exactly);
+  3. FT counters surface per step (fleet SDC observability).
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import FTPolicy, Injection, OFF, report as ftreport
+from repro.core.ft_dense import ft_dense
+from repro.launch.mesh import smoke_mesh
+from repro.launch.steps import make_ctx
+from repro.models import build_model, param_specs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_8b", choices=list(ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--gen-len", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    model = build_model(cfg)
+    mesh = smoke_mesh()
+    params = model.init(jax.random.PRNGKey(0), 1)
+    pspecs = param_specs(params)
+    B = args.batch
+    rspec = {k: P() for k in ftreport.FIELDS}
+
+    def generate(policy):
+        ctx = make_ctx(multi_pod=False, data_size=1, model_size=1,
+                       policy=policy)
+        cache = jax.jit(jax.shard_map(
+            lambda p, e: model.init_cache(p, B, args.gen_len + 4, ctx, e),
+            mesh=mesh, in_specs=(pspecs, None), out_specs=P(),
+            check_vma=False))(params, None)
+        cspecs = jax.tree.map(lambda _: P(), cache)
+
+        def step(p, c, t, pos):
+            logits, c, rep = model.decode_step(p, c, t, pos, ctx)
+            nxt = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+            return nxt, c, rep
+
+        fn = jax.jit(jax.shard_map(
+            step, mesh=mesh, in_specs=(pspecs, cspecs, P("data", None), P()),
+            out_specs=(P("data", None), cspecs, rspec), check_vma=False))
+        tok = jnp.full((B, 1), 7, jnp.int32)
+        stream, det, corr = [7], 0, 0
+        for pos in range(args.gen_len):
+            tok, cache, rep = fn(params, cache, tok, jnp.int32(pos))
+            det += int(rep["abft_detected"] + rep["dmr_detected"])
+            corr += int(rep["abft_corrected"] + rep["dmr_corrected"])
+            stream.append(int(np.asarray(tok)[0, 0]))
+        return stream, det, corr
+
+    hybrid = FTPolicy(mode="hybrid", fused=False)
+    s_off, _, _ = generate(OFF)
+    s_ft, det, corr = generate(hybrid)
+    print(f"[serve_demo] {args.arch} unprotected stream: {s_off}")
+    print(f"[serve_demo] {args.arch} FT-hybrid stream  : {s_ft}")
+    print(f"[serve_demo] identical: {s_off == s_ft}; clean-run counters "
+          f"detected={det} corrected={corr}")
+    assert s_off == s_ft and det == 0
+
+    # 2. soft-error drill on the model's own LM-head projection weights
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, cfg.d_model),
+                          jnp.float32)
+    w = np.asarray(params["emb"], np.float32).T     # (D, V)
+    clean, _ = ft_dense(x, jnp.asarray(w), policy=hybrid)
+    inj = Injection.at(stream=2, pos=3 * cfg.vocab + 100, delta=6.0)
+    fixed, rep = ft_dense(x, jnp.asarray(w), policy=hybrid, injection=inj)
+    print(f"[serve_demo] injected logits projection: detected="
+          f"{int(rep['abft_detected'])} corrected="
+          f"{int(rep['abft_corrected'])} exact_match="
+          f"{np.allclose(np.asarray(fixed), np.asarray(clean), atol=1e-4)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

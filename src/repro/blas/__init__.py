@@ -1,0 +1,10 @@
+"""FT-BLAS: the paper-faithful BLAS library (functional JAX).
+
+Level-1/2 routines are DMR-protected (memory-bound), Level-3 ABFT-protected
+(compute-bound) - paper's hybrid scheme.  Every routine takes an FTPolicy
+and returns ``(result, FTReport)``.
+"""
+from repro.blas import level1, level2, level3, ref
+from repro.blas.level1 import (scal, axpy, dot, nrm2, rot, iamax, copy, swap)
+from repro.blas.level2 import gemv, ger, trsv
+from repro.blas.level3 import gemm, symm, trmm, trsm, syrk

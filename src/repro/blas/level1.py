@@ -1,0 +1,172 @@
+"""Level-1 FT-BLAS: memory-bound vector/vector routines, DMR-protected.
+
+Paper Sec. 3.1 / 4: these run at <10% of peak FLOP/s, so duplicating the
+arithmetic is free in ALU slack; loads/stores are not duplicated (SoR =
+compute errors).  Every routine comes in one functional form returning
+``(result, FTReport)``; policy.mode == "off" gives the bare implementation.
+
+When policy.fused is set the hot routines dispatch to the Pallas DMR kernels
+(kernels/dmr_ew.py, dmr_reduce.py) - the analogue of the paper's hand-tuned
+assembly loop bodies; otherwise the pure-jnp DMR combinator is used (the
+analogue of its compiler-visible C loops).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import report as ftreport
+from repro.core.dmr import dmr_compute, dmr_report
+from repro.core.ft_config import FTPolicy, default_policy
+from repro.core.injection import Injection
+
+
+def _dmr_or_plain(f, *operands, policy: FTPolicy, injection, out_dtype=None):
+    if not policy.dmr_on:
+        y = f(*operands)
+        if injection is not None:
+            y = injection.perturb(y, stream=0)  # lands unprotected
+        return y, ftreport.empty_report()
+    v = dmr_compute(f, *operands, injection=injection, vote=policy.dmr_vote)
+    return v.y, dmr_report(v)
+
+
+def _kernel_available(policy: FTPolicy) -> bool:
+    return policy.fused
+
+
+# -- SCAL ---------------------------------------------------------------------
+def scal(alpha, x: jax.Array, *, policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """x := alpha * x (paper's running optimization example, Sec. 4.2-4.4)."""
+    policy = policy or default_policy()
+    alpha = jnp.asarray(alpha, x.dtype)
+    if policy.dmr_on and _kernel_available(policy):
+        from repro.kernels import ops as kops
+        return kops.dmr_scal(alpha, x, injection=injection,
+                             interpret=policy.interpret)
+    return _dmr_or_plain(lambda v: alpha * v, x,
+                         policy=policy, injection=injection)
+
+
+# -- AXPY ---------------------------------------------------------------------
+def axpy(alpha, x: jax.Array, y: jax.Array, *,
+         policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """y := alpha*x + y."""
+    policy = policy or default_policy()
+    alpha = jnp.asarray(alpha, x.dtype)
+    if policy.dmr_on and _kernel_available(policy):
+        from repro.kernels import ops as kops
+        return kops.dmr_axpy(alpha, x, y, injection=injection,
+                             interpret=policy.interpret)
+    return _dmr_or_plain(lambda a, b: alpha * a + b, x, y,
+                         policy=policy, injection=injection)
+
+
+# -- DOT ----------------------------------------------------------------------
+def dot(x: jax.Array, y: jax.Array, *, policy: Optional[FTPolicy] = None,
+        injection: Optional[Injection] = None,
+        block: int = 4096) -> Tuple[jax.Array, dict]:
+    """dot(x, y) with DMR over per-block partial sums."""
+    policy = policy or default_policy()
+    if policy.dmr_on and _kernel_available(policy):
+        from repro.kernels import ops as kops
+        return kops.dmr_dot(x, y, injection=injection,
+                            interpret=policy.interpret)
+    if not policy.dmr_on:
+        return jnp.dot(x, y), ftreport.empty_report()
+    n = x.shape[0]
+    pad = (-n) % block
+    xf = jnp.pad(x, (0, pad)).reshape(-1, block)
+    yf = jnp.pad(y, (0, pad)).reshape(-1, block)
+    v = dmr_compute(lambda a, b: jnp.sum(a * b, axis=1), xf, yf,
+                    injection=injection, vote=policy.dmr_vote)
+    return v.y.sum(), dmr_report(v)
+
+
+# -- NRM2 ---------------------------------------------------------------------
+def nrm2(x: jax.Array, *, policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None,
+         block: int = 4096) -> Tuple[jax.Array, dict]:
+    """||x||_2 via DMR'd blockwise sum of squares + sqrt.
+
+    (The paper's DNRM2 win is AVX-512 vectorization over OpenBLAS's SSE2;
+    the analogue here is full-width VPU blocks in the Pallas kernel path.)
+    """
+    policy = policy or default_policy()
+    if policy.dmr_on and _kernel_available(policy):
+        from repro.kernels import ops as kops
+        return kops.dmr_nrm2(x, injection=injection,
+                             interpret=policy.interpret)
+    if not policy.dmr_on:
+        return jnp.linalg.norm(x), ftreport.empty_report()
+    n = x.shape[0]
+    pad = (-n) % block
+    xf = jnp.pad(x, (0, pad)).reshape(-1, block)
+    v = dmr_compute(lambda a: jnp.sum(a * a, axis=1), xf,
+                    injection=injection, vote=policy.dmr_vote)
+    return jnp.sqrt(v.y.sum()), dmr_report(v)
+
+
+# -- ROT ----------------------------------------------------------------------
+def rot(x: jax.Array, y: jax.Array, c, s, *,
+        policy: Optional[FTPolicy] = None,
+        injection: Optional[Injection] = None
+        ) -> Tuple[jax.Array, jax.Array, dict]:
+    """Plane rotation (x, y) -> (c x + s y, -s x + c y)."""
+    policy = policy or default_policy()
+    c = jnp.asarray(c, x.dtype)
+    s = jnp.asarray(s, x.dtype)
+
+    def f(a, b):
+        return jnp.stack([c * a + s * b, -s * a + c * b])
+
+    out, rep = _dmr_or_plain(f, x, y, policy=policy, injection=injection)
+    return out[0], out[1], rep
+
+
+# -- IAMAX --------------------------------------------------------------------
+def iamax(x: jax.Array, *, policy: Optional[FTPolicy] = None,
+          injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """argmax |x_i|; DMR duplicates the |.| + compare chain."""
+    policy = policy or default_policy()
+
+    def f(v):
+        return jnp.argmax(jnp.abs(v)).astype(jnp.int32)
+
+    if not policy.dmr_on:
+        return f(x), ftreport.empty_report()
+    # int outputs: equality compare is exact; perturb on abs values instead.
+    inj = injection if injection is not None else Injection.none()
+
+    def g(v):
+        a = jnp.abs(v)
+        return jnp.argmax(a).astype(jnp.int32)
+
+    def g_faulty(v):
+        a = inj.perturb(jnp.abs(v), stream=0)
+        return jnp.argmax(a).astype(jnp.int32)
+
+    i1 = g_faulty(x)
+    i2 = g(jax.lax.optimization_barrier(x))
+    mismatch = i1 != i2
+    i3 = g(jax.lax.optimization_barrier(x))
+    out = jnp.where(mismatch, jnp.where(i2 == i3, i2, i1), i1)
+    rep = ftreport.make_report(
+        dmr_detected=mismatch.astype(jnp.int32),
+        dmr_corrected=(mismatch & (i2 == i3)).astype(jnp.int32))
+    return out, rep
+
+
+# -- COPY / SWAP --------------------------------------------------------------
+# Pure data movement: outside the paper's sphere of replication (no compute
+# to duplicate; memory integrity is ECC's job).  Provided for completeness.
+def copy(x: jax.Array) -> Tuple[jax.Array, dict]:
+    return jnp.array(x, copy=True), ftreport.empty_report()
+
+
+def swap(x: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array, dict]:
+    return y, x, ftreport.empty_report()

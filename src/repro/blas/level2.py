@@ -1,0 +1,145 @@
+"""Level-2 FT-BLAS: memory-bound matrix/vector routines, DMR-protected.
+
+Paper Sec. 3.2: GEMV keeps matrix access contiguous (no cache blocking on A)
+and re-uses x at register level; TRSV panels the solve so that the bulk
+(n^2 - nB)/2 of the work is cast to the *more efficient* GEMV and only a
+B x B diagonal block is solved by substitution - with B as small as the GEMV
+register tile allows (paper: B=4 beats OpenBLAS's B=64 by 11%).
+
+JAX adaptation: "registers" are VREG lanes managed by XLA/Mosaic; the
+paneling survives verbatim (fori_loop over panels, masked full-width GEMV
+keeps shapes static), and the FT story is the paper's: DMR around every
+compute stream, loads not duplicated.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.dmr import dmr_compute, dmr_report
+from repro.core.ft_config import FTPolicy, default_policy
+from repro.core.injection import Injection
+
+
+# -- GEMV ---------------------------------------------------------------------
+def gemv(alpha, A: jax.Array, x: jax.Array, beta, y: jax.Array, *,
+         trans: bool = False,
+         policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """y := alpha * op(A) x + beta * y under DMR."""
+    policy = policy or default_policy()
+    alpha = jnp.asarray(alpha, A.dtype)
+    beta = jnp.asarray(beta, A.dtype)
+
+    if policy.dmr_on and policy.fused and not trans:
+        from repro.kernels import ops as kops
+        Ax, rep = kops.dmr_gemv(A, x, injection=injection,
+                                interpret=policy.interpret)
+        return alpha * Ax + beta * y, rep
+
+    def f(A_, x_, y_):
+        op = A_.T if trans else A_
+        return alpha * (op @ x_) + beta * y_
+
+    if not policy.dmr_on:
+        out = f(A, x, y)
+        if injection is not None:
+            out = injection.perturb(out, stream=0)
+        return out, ftreport.empty_report()
+    v = dmr_compute(f, A, x, y, injection=injection, vote=policy.dmr_vote)
+    return v.y, dmr_report(v)
+
+
+# -- GER ----------------------------------------------------------------------
+def ger(alpha, x: jax.Array, y: jax.Array, A: jax.Array, *,
+        policy: Optional[FTPolicy] = None,
+        injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """A := alpha x y^T + A (rank-1 update) under DMR."""
+    policy = policy or default_policy()
+    alpha = jnp.asarray(alpha, A.dtype)
+
+    def f(x_, y_, A_):
+        return A_ + alpha * jnp.outer(x_, y_)
+
+    if not policy.dmr_on:
+        return f(x, y, A), ftreport.empty_report()
+    v = dmr_compute(f, x, y, A, injection=injection, vote=policy.dmr_vote)
+    return v.y, dmr_report(v)
+
+
+# -- TRSV ---------------------------------------------------------------------
+def trsv(A: jax.Array, b: jax.Array, *, lower: bool = True,
+         block: int = 8,
+         policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """Solve op(A) x = b, A triangular - the paper's paneled algorithm.
+
+    Per panel p: (1) GEMV update against all already-solved entries (masked
+    full-width matvec keeps shapes static - the contiguous-access argument of
+    paper Sec. 3.2.1), (2) substitution on the block x block diagonal.  Both
+    streams are DMR'd.  ``block`` is the paper's B; small B maximizes the
+    GEMV fraction (paper picks 4; default 8 = one VREG sublane group).
+    """
+    policy = policy or default_policy()
+    if not lower:
+        # Mirror: solve upper system by flipping to an equivalent lower one.
+        x_rev, rep = trsv(A[::-1, ::-1], b[::-1], lower=True, block=block,
+                          policy=policy, injection=injection)
+        return x_rev[::-1], rep
+
+    n = b.shape[0]
+    pad = (-n) % block
+    if pad:
+        Ap = jnp.zeros((n + pad, n + pad), A.dtype)
+        Ap = Ap.at[:n, :n].set(A)
+        Ap = Ap.at[jnp.arange(n, n + pad), jnp.arange(n, n + pad)].set(1)
+        bp = jnp.pad(b, (0, pad))
+    else:
+        Ap, bp = A, b
+    nn = n + pad
+    n_panels = nn // block
+    inj = injection if injection is not None else Injection.none()
+
+    def panel_step(p, carry):
+        x, rep = carry
+        row0 = p * block
+        A_rows = lax.dynamic_slice(Ap, (row0, 0), (block, nn))
+        b_blk = lax.dynamic_slice(bp, (row0,), (block,))
+        mask = (jnp.arange(nn) < row0).astype(Ap.dtype)
+
+        # (1) Level-2 bulk: b_blk -= A[p, :row0] @ x[:row0]   (masked GEMV)
+        def upd(A_r, x_, b_):
+            return b_ - A_r @ (x_ * mask)
+
+        v1 = dmr_compute(upd, A_rows, x, b_blk, injection=inj,
+                         vote=policy.dmr_vote) if policy.dmr_on else None
+        rhs = v1.y if v1 is not None else upd(A_rows, x, b_blk)
+
+        # (2) Level-1 diagonal: substitution on the B x B block via DDOT.
+        diag = lax.dynamic_slice(Ap, (row0, row0), (block, block))
+
+        def solve_diag(d, r):
+            xs = jnp.zeros((block,), Ap.dtype)
+            for i in range(block):  # static unroll - the paper's micro-solve
+                s = r[i] - jnp.dot(d[i, :i], xs[:i])
+                xs = xs.at[i].set(s / d[i, i])
+            return xs
+
+        v2 = dmr_compute(solve_diag, diag, rhs,
+                         vote=policy.dmr_vote) if policy.dmr_on else None
+        x_blk = v2.y if v2 is not None else solve_diag(diag, rhs)
+
+        x = lax.dynamic_update_slice(x, x_blk, (row0,))
+        if policy.dmr_on:
+            rep = ftreport.merge(rep, dmr_report(v1), dmr_report(v2))
+        return x, rep
+
+    x0 = jnp.zeros((nn,), Ap.dtype)
+    x, rep = lax.fori_loop(0, n_panels, panel_step,
+                           (x0, ftreport.empty_report()))
+    return x[:n], rep

@@ -1,0 +1,164 @@
+"""Level-3 FT-BLAS: compute-bound matrix/matrix routines, ABFT-protected.
+
+Paper Sec. 3.3 / 5: GEMM-family routines run near peak FLOP/s, so DMR would
+double their cost; checksum-based online ABFT costs O(n^2) against O(n^3) -
+*if* the checksum traffic is fused into passes that already move the data
+(Sec. 5.2).  TRSM follows the paper's blocked scheme: off-diagonal panels
+are GEMM updates (ABFT), the small diagonal solves are substitution with
+reciprocal-diagonal precomputation (DMR) - the same hybrid, one level down.
+
+All routines return (result, FTReport).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.abft import ft_matmul
+from repro.core.dmr import dmr_compute, dmr_report
+from repro.core.ft_config import FTPolicy, default_policy
+from repro.core.injection import Injection
+
+
+def _combine(alpha, P, beta, C, policy, injection=None):
+    """alpha*P + beta*C - a memory-bound epilogue, so DMR (hybrid scheme)."""
+    alpha = jnp.asarray(alpha, P.dtype)
+    beta = jnp.asarray(beta, P.dtype)
+    if C is None:
+        def f(p):
+            return alpha * p
+        args = (P,)
+    else:
+        def f(p, c):
+            return alpha * p + beta * c
+        args = (P, C)
+    if not policy.dmr_on:
+        return f(*args), ftreport.empty_report()
+    v = dmr_compute(f, *args, injection=injection, vote=policy.dmr_vote)
+    return v.y, dmr_report(v)
+
+
+# -- GEMM ---------------------------------------------------------------------
+def gemm(alpha, A: jax.Array, B: jax.Array, beta=0.0,
+         C: Optional[jax.Array] = None, *,
+         policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """C := alpha A B + beta C.  A@B under online ABFT; epilogue under DMR."""
+    policy = policy or default_policy()
+    P, rep_mm = ft_matmul(A, B, policy=policy, injection=injection)
+    out, rep_ep = _combine(alpha, P, beta, C, policy)
+    return out, ftreport.merge(rep_mm, rep_ep)
+
+
+# -- SYMM ---------------------------------------------------------------------
+def symm(alpha, A: jax.Array, B: jax.Array, beta=0.0,
+         C: Optional[jax.Array] = None, *, lower: bool = True,
+         policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """C := alpha sym(A) B + beta C, A stored in one triangle.
+
+    The paper implements SYMM as GEMM with a modified packing routine that
+    mirrors the triangle while streaming A; here the mirror is a pure data
+    rearrangement (packing analogue) feeding the same ABFT GEMM.
+    """
+    policy = policy or default_policy()
+    tri = jnp.tril(A) if lower else jnp.triu(A)
+    full = tri + tri.T - jnp.diag(jnp.diag(A))
+    return gemm(alpha, full, B, beta, C, policy=policy, injection=injection)
+
+
+# -- TRMM ---------------------------------------------------------------------
+def trmm(alpha, A: jax.Array, B: jax.Array, *, lower: bool = True,
+         policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """B := alpha op(A) B, A triangular (packing masks the dead triangle)."""
+    policy = policy or default_policy()
+    tri = jnp.tril(A) if lower else jnp.triu(A)
+    return gemm(alpha, tri, B, policy=policy, injection=injection)
+
+
+# -- SYRK ---------------------------------------------------------------------
+def syrk(alpha, A: jax.Array, beta=0.0, C: Optional[jax.Array] = None, *,
+         policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """C := alpha A A^T + beta C under ABFT."""
+    policy = policy or default_policy()
+    P, rep_mm = ft_matmul(A, A.T, policy=policy, injection=injection)
+    out, rep_ep = _combine(alpha, P, beta, C, policy)
+    return out, ftreport.merge(rep_mm, rep_ep)
+
+
+# -- TRSM ---------------------------------------------------------------------
+def trsm(alpha, A: jax.Array, B: jax.Array, *, lower: bool = True,
+         block: int = 32,
+         policy: Optional[FTPolicy] = None,
+         injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
+    """Solve op(A) X = alpha B, A triangular - paper's blocked algorithm.
+
+    Panel loop: X[p] = inv(diag_p) (alpha*B[p] - A[p, :p0] X[:p0]) where the
+    trailing update is the ABFT GEMM macro-kernel and the diagonal solve is a
+    substitution micro-kernel with precomputed reciprocal diagonal (packing
+    trick, paper Sec. 3.3.3) under DMR.
+    """
+    policy = policy or default_policy()
+    if not lower:
+        X_rev, rep = trsm(alpha, A[::-1, ::-1], B[::-1, :], lower=True,
+                          block=block, policy=policy, injection=injection)
+        return X_rev[::-1, :], rep
+
+    m, n = B.shape
+    pad = (-m) % block
+    if pad:
+        Ap = jnp.zeros((m + pad, m + pad), A.dtype)
+        Ap = Ap.at[:m, :m].set(A)
+        Ap = Ap.at[jnp.arange(m, m + pad), jnp.arange(m, m + pad)].set(1)
+        Bp = jnp.pad(B, ((0, pad), (0, 0)))
+    else:
+        Ap, Bp = A, B
+    mm = m + pad
+    n_panels = mm // block
+    inj = injection if injection is not None else Injection.none()
+    alpha = jnp.asarray(alpha, A.dtype)
+    # Packing trick: store reciprocals of the diagonal once (avoids divides
+    # in the solve micro-kernel).
+    rdiag = 1.0 / jnp.diag(Ap)
+
+    def panel_step(p, carry):
+        X, rep = carry
+        row0 = p * block
+        A_rows = lax.dynamic_slice(Ap, (row0, 0), (block, mm))
+        B_blk = alpha * lax.dynamic_slice(Bp, (row0, 0), (block, n))
+        mask = (jnp.arange(mm) < row0).astype(Ap.dtype)[:, None]
+
+        # Trailing update: GEMM macro-kernel => ABFT.
+        U, rep_mm = ft_matmul(A_rows, X * mask, policy=policy, injection=inj)
+        rhs = B_blk - U
+
+        # Diagonal micro-solve (block x block vs n RHS) => DMR.
+        diag = lax.dynamic_slice(Ap, (row0, row0), (block, block))
+        rd = lax.dynamic_slice(rdiag, (row0,), (block,))
+
+        def solve_diag(d, r, rdg):
+            xs = jnp.zeros((block, n), Ap.dtype)
+            for i in range(block):  # static micro-kernel unroll
+                s = r[i] - d[i, :i] @ xs[:i]
+                xs = xs.at[i].set(s * rdg[i])
+            return xs
+
+        if policy.dmr_on:
+            v = dmr_compute(solve_diag, diag, rhs, rd, vote=policy.dmr_vote)
+            X_blk, rep_diag = v.y, dmr_report(v)
+        else:
+            X_blk, rep_diag = solve_diag(diag, rhs, rd), ftreport.empty_report()
+
+        X = lax.dynamic_update_slice(X, X_blk, (row0, 0))
+        return X, ftreport.merge(rep, rep_mm, rep_diag)
+
+    X0 = jnp.zeros((mm, n), Ap.dtype)
+    X, rep = lax.fori_loop(0, n_panels, panel_step,
+                           (X0, ftreport.empty_report()))
+    return X[:m], rep

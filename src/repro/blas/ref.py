@@ -1,0 +1,113 @@
+"""Pure-numpy oracles for every FT-BLAS routine.
+
+Used by tests (assert_allclose targets) and benchmarks (correctness gates).
+Semantics follow netlib BLAS, functional style (no aliasing/in-place).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+# -- Level 1 ------------------------------------------------------------------
+def scal(alpha, x):
+    return alpha * np.asarray(x)
+
+
+def axpy(alpha, x, y):
+    return alpha * np.asarray(x) + np.asarray(y)
+
+
+def dot(x, y):
+    return np.dot(np.asarray(x, np.float64), np.asarray(y, np.float64))
+
+
+def nrm2(x):
+    return np.linalg.norm(np.asarray(x, np.float64))
+
+
+def rot(x, y, c, s):
+    x, y = np.asarray(x), np.asarray(y)
+    return c * x + s * y, -s * x + c * y
+
+
+def iamax(x):
+    return int(np.argmax(np.abs(np.asarray(x))))
+
+
+def copy(x):
+    return np.array(x, copy=True)
+
+
+def swap(x, y):
+    return np.array(y, copy=True), np.array(x, copy=True)
+
+
+# -- Level 2 ------------------------------------------------------------------
+def gemv(alpha, A, x, beta, y, trans=False):
+    A = np.asarray(A, np.float64)
+    op = A.T if trans else A
+    return alpha * (op @ np.asarray(x, np.float64)) + beta * np.asarray(
+        y, np.float64)
+
+
+def ger(alpha, x, y, A):
+    return np.asarray(A, np.float64) + alpha * np.outer(x, y)
+
+
+def trsv(A, b, lower=True):
+    import scipy.linalg as sla  # pragma: no cover - scipy optional
+    raise NotImplementedError
+
+
+def trsv_np(A, b, lower=True):
+    """Forward/back substitution in float64 (no scipy dependency)."""
+    A = np.asarray(A, np.float64)
+    b = np.asarray(b, np.float64)
+    n = b.shape[0]
+    x = np.zeros_like(b)
+    idx = range(n) if lower else range(n - 1, -1, -1)
+    for i in idx:
+        s = b[i] - (A[i, :i] @ x[:i] if lower else A[i, i + 1:] @ x[i + 1:])
+        x[i] = s / A[i, i]
+    return x
+
+
+# -- Level 3 ------------------------------------------------------------------
+def gemm(alpha, A, B, beta, C):
+    A = np.asarray(A, np.float64)
+    B = np.asarray(B, np.float64)
+    return alpha * (A @ B) + beta * np.asarray(C, np.float64)
+
+
+def symm(alpha, A, B, beta, C, lower=True):
+    """C = alpha*sym(A)@B + beta*C, A stored in one triangle."""
+    A = np.asarray(A, np.float64)
+    tri = np.tril(A) if lower else np.triu(A)
+    full = tri + tri.T - np.diag(np.diag(A))
+    return alpha * (full @ np.asarray(B, np.float64)) + beta * np.asarray(
+        C, np.float64)
+
+
+def trmm(alpha, A, B, lower=True):
+    A = np.asarray(A, np.float64)
+    tri = np.tril(A) if lower else np.triu(A)
+    return alpha * (tri @ np.asarray(B, np.float64))
+
+
+def trsm(alpha, A, B, lower=True):
+    """Solve op(A) X = alpha B for X, A triangular."""
+    A = np.asarray(A, np.float64)
+    B = alpha * np.asarray(B, np.float64)
+    tri = np.tril(A) if lower else np.triu(A)
+    n = A.shape[0]
+    X = np.zeros_like(B)
+    idx = range(n) if lower else range(n - 1, -1, -1)
+    for i in idx:
+        s = B[i] - (tri[i, :i] @ X[:i] if lower else tri[i, i + 1:] @ X[i + 1:])
+        X[i] = s / tri[i, i]
+    return X
+
+
+def syrk(alpha, A, beta, C):
+    A = np.asarray(A, np.float64)
+    return alpha * (A @ A.T) + beta * np.asarray(C, np.float64)

@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (AsyncSaver, CorruptLeaf, latest_step,
+                                   restore, save)

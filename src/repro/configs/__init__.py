@@ -1,0 +1,34 @@
+"""Config registry: one module per assigned architecture."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, SHAPE_GRID, ShapeCell
+
+ARCH_IDS = (
+    "seamless_m4t_large_v2",
+    "granite_8b",
+    "yi_9b",
+    "llama3_8b",
+    "granite_20b",
+    "jamba_v01_52b",
+    "chameleon_34b",
+    "xlstm_350m",
+    "deepseek_v2_lite_16b",
+    "qwen3_moe_235b_a22b",
+)
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_config(name: str) -> ArchConfig:
+    name = _ALIASES.get(name, name)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_IDS)}")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {i: get_config(i) for i in ARCH_IDS}

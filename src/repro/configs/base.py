@@ -1,0 +1,124 @@
+"""Architecture config schema + input-shape grid (the assigned 40 cells).
+
+Every assigned architecture is one ``ArchConfig`` in configs/<id>.py, exact
+to the assignment block; ``smoke()`` derives the reduced same-family config
+used by CPU smoke tests.  The shape grid lowers ``train_step`` for train_4k
+and ``serve_step`` for decode/long cells (prefill lowers a forward pass).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode | long
+
+
+SHAPE_GRID = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "long"),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str               # dense | moe | hybrid | ssm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0         # 0 -> d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    # MLA (deepseek)
+    kv_lora: int = 0
+    dh_nope: int = 128
+    dh_rope: int = 64
+    # misc
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    act: str = "silu"
+    gated_ffn: bool = True
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    norm: str = "rms"         # rms | layer
+    # hybrid / ssm block patterns: a group of `group_size` slots scanned
+    # n_layers // group_size times; slot tags drive the mixer choice.
+    group_size: int = 1
+    pattern: Tuple[str, ...] = ()       # e.g. ("attn","mamba",...)
+    moe_slots: Tuple[int, ...] = ()     # slots whose FFN is MoE (hybrid)
+    # ssm details
+    d_state: int = 16
+    ssm_chunk: int = 32
+    # encdec
+    enc_layers: int = 0
+    dec_layers: int = 0
+    src_seq: int = 1024                 # encoder memory length (stub frames)
+    # perf knobs (hillclimb levers; EXPERIMENTS.md Perf)
+    n_micro_override: int = 0           # 0 = one sample/device/microbatch
+    param_shard: str = "tp"             # tp | fsdp (ZeRO-3 over data axes)
+    serve_expert_tp: bool = False       # decode cells: shard expert FFN
+                                        # width over data (weights resident)
+    remat_policy: str = "full"          # full | save_tp_outputs
+    kv_cache_dtype: str = "bf16"        # bf16 | int8
+    zero_collective_dtype: str = "f32"  # f32 | bf16
+    # capability flags
+    sub_quadratic: bool = False         # eligible for long_500k
+    frontend: str = "none"              # none | audio_stub | vlm_stub
+    source: str = ""
+    notes: str = ""
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def cells(self):
+        """The shape cells this arch actually runs (skips recorded)."""
+        out = []
+        for c in SHAPE_GRID:
+            if c.kind == "long" and not self.sub_quadratic:
+                out.append((c, "skip: full-attention arch; long_500k probes "
+                               "sub-quadratic context handling"))
+            else:
+                out.append((c, None))
+        return out
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family config for 1-device CPU smoke tests."""
+        gs = self.group_size
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=max(gs, 2 if gs == 1 else gs),
+            d_model=128,
+            n_heads=4,
+            n_kv=min(self.n_kv, 2) if self.n_kv > 1 else 1,
+            head_dim=32,
+            d_ff=256 if self.d_ff else 0,
+            vocab=512,
+            n_experts=min(self.n_experts, 8) or self.n_experts,
+            d_ff_expert=64 if self.d_ff_expert else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            n_shared=min(self.n_shared, 1),
+            kv_lora=64 if self.kv_lora else 0,
+            dh_nope=32, dh_rope=16,
+            enc_layers=2 if self.enc_layers else 0,
+            dec_layers=2 if self.dec_layers else 0,
+            src_seq=32 if self.enc_layers else self.src_seq,
+            ssm_chunk=8,
+            dtype="float32",
+        )

@@ -1,0 +1,16 @@
+"""chameleon-34b [vlm]: early-fusion, VQ image tokens.
+
+[arXiv:2405.09818; unverified].  The VQ image tokenizer is a STUB: image
+patches arrive as ordinary token ids inside the 65536 vocab (early fusion
+means the backbone is a plain decoder LM); qk-norm per the paper.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv=8, d_ff=22016,
+    vocab=65536, head_dim=128,
+    qk_norm=True,
+    frontend="vlm_stub",
+    source="arXiv:2405.09818; unverified",
+)

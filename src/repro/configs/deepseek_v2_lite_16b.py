@@ -1,0 +1,17 @@
+"""deepseek-v2-lite-16b [moe]: MLA kv_lora=512, 64 routed top-6 + 2 shared.
+
+[arXiv:2405.04434; hf].  All layers MoE (the real model's one dense first
+layer is folded into the uniform scan; recorded deviation), MLA attention
+with 16 heads, per-expert d_ff 1408.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv=16, d_ff=1408,
+    vocab=102400,
+    head_dim=128,
+    n_experts=64, top_k=6, d_ff_expert=1408, n_shared=2,
+    kv_lora=512, dh_nope=128, dh_rope=64,
+    source="arXiv:2405.04434; hf",
+)

@@ -1,0 +1,11 @@
+"""granite-20b [dense]: MQA (kv=1) code model.  [arXiv:2405.04324; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b", family="dense",
+    n_layers=52, d_model=6144, n_heads=48, n_kv=1, d_ff=24576,
+    vocab=49152, head_dim=128,
+    source="arXiv:2405.04324; hf",
+    notes="MQA: the single KV head is expanded to one copy per model shard "
+          "(Megatron GQA trick); extra projection FLOPs <0.1%.",
+)

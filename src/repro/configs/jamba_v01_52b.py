@@ -1,0 +1,23 @@
+"""jamba-v0.1-52b [hybrid]: Mamba+attention 1:7, MoE 16e top-2.
+
+[arXiv:2403.19887; hf].  32 layers = 4 scanned groups of 8 slots; slot 0 is
+attention, slots 1-7 Mamba; MoE replaces the dense FFN on odd slots (every
+2nd layer), 16 experts top-2, no shared expert.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv=8, d_ff=14336,
+    vocab=65536, head_dim=128,
+    n_experts=16, top_k=2, d_ff_expert=14336, n_shared=0,
+    group_size=8,
+    pattern=("attn", "mamba", "mamba", "mamba",
+             "mamba", "mamba", "mamba", "mamba"),
+    moe_slots=(1, 3, 5, 7),
+    d_state=16,
+    sub_quadratic=True,
+    source="arXiv:2403.19887; hf",
+    notes="long_500k runs (hybrid attn:mamba 1:7; attention layers use the "
+          "sequence-sharded flash-decode cache).",
+)

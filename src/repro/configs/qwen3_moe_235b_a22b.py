@@ -1,0 +1,23 @@
+"""qwen3-moe-235b-a22b [moe]: 128 experts top-8, qk-norm.
+
+[hf:Qwen/Qwen3-30B-A3B; hf].  94 layers, d_ff (per expert) 1536, no shared
+expert, head_dim 128 (64 heads x 128 != d_model, as in Qwen3).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv=4, d_ff=1536,
+    vocab=151936,
+    head_dim=128,
+    n_experts=128, top_k=8, d_ff_expert=1536, n_shared=0,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    # 235B params / TP-16 = 29 GB/device > HBM: FSDP over data is required
+    param_shard="fsdp",
+    # serving: per-token FSDP weight gathers would move 29 GB/step; 2D
+    # expert sharding (EP x data-TP) keeps the 231 GB of expert weights
+    # resident at 1.8 GB/device instead (EXPERIMENTS.md Perf)
+    serve_expert_tp=True,
+    source="hf:Qwen/Qwen3-30B-A3B; hf",
+)

@@ -1,0 +1,22 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec multimodal backbone.
+
+[arXiv:2308.11596; hf].  24L read as 24 encoder + 24 decoder layers
+(T5-style; m4t-large is 24+24).  The speech frontend is a STUB: input_specs
+supplies precomputed frame embeddings (B, src_seq, d_model).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=48, enc_layers=24, dec_layers=24,
+    d_model=1024, n_heads=16, n_kv=16, d_ff=8192,
+    vocab=256206 + 2,          # padded to a multiple of 16 for vocab TP
+    head_dim=64,
+    act="relu", gated_ffn=False, norm="layer",
+    src_seq=4096,
+    frontend="audio_stub",
+    source="arXiv:2308.11596; hf",
+    notes="decode cells run (enc-dec has a decoder); vocab padded "
+          "256206->256208 so V % 16 == 0 for the sharded LM head.",
+)

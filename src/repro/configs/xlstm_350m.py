@@ -1,0 +1,21 @@
+"""xlstm-350m [ssm]: sLSTM + mLSTM blocks, 7:1.  [arXiv:2405.04517; unverified]
+
+24 layers = 3 scanned groups of 8 slots; slot 7 sLSTM, slots 0-6 mLSTM.
+d_ff=0 per the assignment: mLSTM blocks integrate their pf=2 up/down
+projections; sLSTM blocks carry a pf=4/3 gated FFN (paper layout).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv=4, d_ff=0,
+    vocab=50304,
+    head_dim=256,
+    group_size=8,
+    pattern=("mlstm",) * 7 + ("slstm",),
+    ssm_chunk=64,
+    sub_quadratic=True,
+    source="arXiv:2405.04517; unverified",
+    notes="4 heads < 16-way model axis: value-dim sharding for mLSTM, "
+          "replicated sLSTM cell; see DESIGN.md 5.",
+)

@@ -1,0 +1,20 @@
+"""FT-BLAS core: the paper's contribution as composable JAX modules.
+
+Public surface:
+  FTPolicy / policies  - hybrid DMR+ABFT policy object (ft_config)
+  ft_matmul family     - online-ABFT protected GEMM (abft)
+  dmr_compute          - duplicate/verify/vote combinator (dmr)
+  checksum             - ABFT encode/verify/locate/correct algebra
+  Injection            - jit-compatible soft-error injection (injection)
+  ft_psum / ft_pmean   - checksum-verified collectives (ft_collectives)
+  report               - FT telemetry counters
+"""
+from repro.core.ft_config import (FTPolicy, OFF, HYBRID, HYBRID_UNFUSED,
+                                  DMR_ONLY, ABFT_ONLY, default_policy)
+from repro.core.injection import Injection
+from repro.core.abft import (ft_matmul, ft_matmul_batched, ft_matmul_diff,
+                             matmul_fused, matmul_unfused)
+from repro.core.dmr import dmr_compute, dmr_reduce_sum, DmrVerdict, dmr_report
+from repro.core.ft_dense import ft_dense, ft_dense_fused_gate, ft_bmm
+from repro.core.ft_collectives import ft_psum, ft_pmean
+from repro.core import checksum, report

@@ -1,0 +1,124 @@
+"""Dual modular redundancy for memory-bound ops (paper Sec. 4).
+
+Sphere of replication = *computing* errors only (the paper's third SoR):
+operands are loaded once; the arithmetic is duplicated; results are compared
+before being written back.  On a bandwidth-bound op the duplicate arithmetic
+rides in the ALU slack left by the memory traffic, so overhead ~ 0.
+
+x86 mechanics -> TPU dataflow (see DESIGN.md Sec. 2):
+  - duplicated vmulpd streams  -> the same jnp computation evaluated twice
+    with an ``optimization_barrier`` fencing the duplicate's operands so XLA
+    cannot common-subexpression-eliminate the redundancy away;
+  - opmask compare + ``kortestw``-> elementwise equality mask reduced to one
+    scalar predicate per block;
+  - in-register checkpoint + recompute-on-error -> a third evaluation and a
+    2-of-3 elementwise majority vote (branch-free; the paper branches to an
+    error handler, TPUs select).
+
+Exact equality is sound: identical float ops on identical inputs are
+bitwise-deterministic on both x86 and TPU, so any mismatch is an error.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.injection import (ABFT_ACC, DMR_STREAM_1, DMR_STREAM_2,
+                                  Injection)
+
+
+class DmrVerdict(NamedTuple):
+    y: jax.Array
+    detected: jax.Array        # i32: # mismatching elements stream1 vs 2
+    corrected: jax.Array       # i32: # resolved by majority vote
+    unrecoverable: jax.Array   # bool: all three streams disagree somewhere
+
+
+def _fence(*xs):
+    """Opaque copy of operands: defeats CSE between redundant streams."""
+    fenced = lax.optimization_barrier(xs)
+    return fenced if len(xs) > 1 else fenced[0]
+
+
+def dmr_compute(
+    f: Callable[..., jax.Array],
+    *operands: jax.Array,
+    injection: Optional[Injection] = None,
+    vote: bool = True,
+) -> DmrVerdict:
+    """Evaluate ``y = f(*operands)`` under DMR.
+
+    Two independent evaluations are compared elementwise; disagreeing lanes
+    are resolved by a third evaluation and 2-of-3 majority vote.  Memory
+    reads are NOT duplicated: both streams consume the same traced operands
+    (the fence blocks value reuse, not the loads - mirroring the paper's SoR
+    where loads happen once and registers feed both streams).
+    """
+    inj = injection if injection is not None else Injection.none()
+
+    y1 = f(*operands)
+    y2 = f(*_fence(*operands)) if len(operands) > 1 else f(_fence(operands[0]))
+    y1 = inj.perturb(y1, stream=DMR_STREAM_1)
+    y2 = inj.perturb(y2, stream=DMR_STREAM_2)
+
+    mismatch = y1 != y2
+    detected = mismatch.sum().astype(jnp.int32)
+
+    if not vote:
+        return DmrVerdict(y1, detected, jnp.zeros((), jnp.int32),
+                          jnp.any(mismatch))
+
+    # Third stream ("third calculation", paper Sec. 4.4.2).  Evaluated only
+    # when needed via lax.cond so the clean path stays two-stream.
+    def recompute(ops):
+        return f(*_fence(*ops)) if len(ops) > 1 else f(_fence(ops[0]))
+
+    y3 = lax.cond(jnp.any(mismatch),
+                  recompute,
+                  lambda ops: y1,  # dead value on the clean path
+                  operands)
+
+    agree13 = y1 == y3
+    agree23 = y2 == y3
+    y = jnp.where(~mismatch, y1,
+                  jnp.where(agree13, y1,
+                            jnp.where(agree23, y2, y3)))
+    resolved = mismatch & (agree13 | agree23)
+    unrecoverable = jnp.any(mismatch & ~agree13 & ~agree23)
+    return DmrVerdict(y, detected, resolved.sum().astype(jnp.int32),
+                      unrecoverable)
+
+
+def dmr_report(v: DmrVerdict) -> dict:
+    return ftreport.make_report(
+        dmr_detected=v.detected,
+        dmr_corrected=v.corrected,
+        dmr_unrecoverable=v.unrecoverable.astype(jnp.int32),
+    )
+
+
+# -- DMR'd reductions --------------------------------------------------------
+# Reductions (dot, nrm2, sums) compare *partial* block sums rather than the
+# final scalar so that error location stays block-granular, mirroring the
+# paper's per-iteration verification interval.
+
+def dmr_reduce_sum(x: jax.Array, *, block: int = 4096,
+                   injection: Optional[Injection] = None,
+                   vote: bool = True) -> Tuple[jax.Array, DmrVerdict]:
+    """sum(x) with DMR over block partial sums."""
+    inj = injection if injection is not None else Injection.none()
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+
+    def partials(b):
+        return b.sum(axis=1)
+
+    v = dmr_compute(partials, blocks, injection=inj, vote=vote)
+    return v.y.sum(), v

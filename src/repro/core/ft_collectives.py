@@ -1,0 +1,81 @@
+"""Checksum-verified collectives (beyond-paper extension; DESIGN.md 3.3).
+
+The paper protects one chip's GEMM.  At pod scale the dominant reduction is
+the cross-chip gradient all-reduce, and it is protected by *the same
+algebra*: summation commutes with summation, so
+
+    sum_elements(psum(x)) == psum(sum_elements(x))
+
+holds exactly in infinite precision and to round-off in floats.  Verifying a
+psum therefore costs one extra *scalar* psum (O(1) bytes on the wire against
+O(bytes(x))) - the collective analogue of a fused checksum.
+
+On mismatch the policy retries the collective once (transient-fault model:
+a retried all-reduce re-samples the error), counting retries in the report.
+All ops are shard_map-compatible: they take the axis name(s) to reduce over.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.ft_config import FTPolicy, default_policy
+
+AxisNames = Union[str, Sequence[str]]
+
+
+def _sum_leaves(tree) -> jax.Array:
+    leaves = [jnp.sum(x.astype(jnp.float32)) for x in jax.tree.leaves(tree)]
+    return jnp.asarray(sum(leaves), jnp.float32)
+
+
+def _abs_sum_leaves(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.abs(x).astype(jnp.float32))
+              for x in jax.tree.leaves(tree)]
+    return jnp.asarray(sum(leaves), jnp.float32)
+
+
+def ft_psum(tree, axis_name: AxisNames, *,
+            policy: Optional[FTPolicy] = None) -> Tuple[object, dict]:
+    """psum with additive-checksum verification (and one retry).
+
+    Returns (reduced_tree, FTReport).  With policy.verify_collectives False
+    this is exactly lax.psum.
+    """
+    policy = policy or default_policy()
+    if not policy.verify_collectives:
+        return lax.psum(tree, axis_name), ftreport.empty_report()
+
+    local_sum = _sum_leaves(tree)
+    local_abs = _abs_sum_leaves(tree)
+    reduced = lax.psum(tree, axis_name)
+    # One fused scalar psum carries both the checksum and its magnitude.
+    ref_sum, ref_abs = lax.psum((local_sum, local_abs), axis_name)
+
+    got = _sum_leaves(reduced)
+    n = sum(x.size for x in jax.tree.leaves(tree))
+    world = lax.psum(jnp.ones((), jnp.float32), axis_name)
+    eps = jnp.finfo(jnp.float32).eps
+    tol = policy.tol_factor * eps * (n + world) * (ref_abs + 1.0)
+    bad = jnp.abs(got - ref_sum) > tol
+
+    def retry(t):
+        return lax.psum(jax.tree.map(lax.optimization_barrier, t), axis_name)
+
+    reduced = lax.cond(bad, retry, lambda t: reduced, tree)
+    rep = ftreport.make_report(
+        collective_detected=bad.astype(jnp.int32),
+        collective_retried=bad.astype(jnp.int32))
+    return reduced, rep
+
+
+def ft_pmean(tree, axis_name: AxisNames, *,
+             policy: Optional[FTPolicy] = None) -> Tuple[object, dict]:
+    policy = policy or default_policy()
+    world = lax.psum(jnp.ones((), jnp.float32), axis_name)
+    summed, rep = ft_psum(tree, axis_name, policy=policy)
+    return jax.tree.map(lambda x: (x / world.astype(x.dtype)), summed), rep

@@ -1,0 +1,87 @@
+"""FT policy & configuration.
+
+The paper's central design decision is a *hybrid* fault-tolerance strategy
+keyed to arithmetic intensity:
+
+  - memory-bound ops  -> DMR  (duplicate compute, verify, 2-of-3 vote)
+  - compute-bound ops -> ABFT (checksum encode, online verify, correct)
+
+``FTPolicy`` carries that decision through the whole framework.  ``mode``:
+
+  "off"   : no fault tolerance (the paper's "FT-BLAS: Ori" baseline)
+  "dmr"   : force DMR everywhere (used for ablations)
+  "abft"  : force ABFT on matmuls, no DMR on elementwise
+  "hybrid": the paper's scheme - ABFT for L3/GEMM-shaped, DMR for L1/L2-shaped
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+MODES = ("off", "dmr", "abft", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class FTPolicy:
+    """Fault-tolerance policy threaded through every FT-BLAS op.
+
+    Attributes:
+      mode: one of MODES.
+      fused: use the fused Pallas kernels (paper Sec. 5.2) instead of the
+        unfused pure-jnp ABFT baseline (paper Sec. 5.1, "third-party" path).
+      tol_factor: multiplier on the deterministic round-off bound used for
+        checksum verification.  1.0 = worst-case bound; larger is laxer.
+      max_corrections: how many distinct (row, col) errors the ABFT epilogue
+        will try to correct per verification interval (the paper corrects a
+        single error per interval; >1 is a beyond-paper extension using the
+        full residual vectors).
+      recompute_fallback: if True, an unrecoverable checksum mismatch triggers
+        one full recompute under ``lax.cond`` (the paper's "third
+        calculation"); doubles HLO FLOPs on paper, so off by default for
+        dry-run/roofline paths and on for correctness-critical paths.
+      dmr_vote: if True, DMR mismatches are resolved by a third compute and
+        2-of-3 majority vote; if False, detection only.
+      collect_stats: return FTReport counters from every op.
+      protect_grads: apply the same policy to backward-pass matmuls.
+      verify_collectives: checksum-verify cross-chip reductions
+        (beyond-paper extension, Sec. 3.3 of DESIGN.md).
+      interpret: run Pallas kernels in interpret mode (CPU container).
+    """
+
+    mode: str = "hybrid"
+    fused: bool = True
+    tol_factor: float = 4.0
+    max_corrections: int = 4
+    recompute_fallback: bool = False
+    dmr_vote: bool = True
+    collect_stats: bool = True
+    protect_grads: bool = True
+    verify_collectives: bool = False
+    interpret: bool = True  # CPU container default; launch layer overrides
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+
+    @property
+    def abft_on(self) -> bool:
+        return self.mode in ("abft", "hybrid")
+
+    @property
+    def dmr_on(self) -> bool:
+        return self.mode in ("dmr", "hybrid")
+
+    def replace(self, **kw) -> "FTPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+# Canonical policies used throughout tests / benchmarks / examples.
+OFF = FTPolicy(mode="off")
+HYBRID = FTPolicy(mode="hybrid")
+HYBRID_UNFUSED = FTPolicy(mode="hybrid", fused=False)
+DMR_ONLY = FTPolicy(mode="dmr")
+ABFT_ONLY = FTPolicy(mode="abft")
+
+
+def default_policy() -> FTPolicy:
+    return HYBRID

@@ -1,0 +1,67 @@
+"""FT-protected NN building blocks: dense / einsum layers over ft_matmul.
+
+These are the seams through which the paper's BLAS-level fault tolerance
+enters the model zoo: every projection in every architecture routes through
+``ft_dense``; attention/MoE contractions route through ``ft_einsum_qk``-style
+helpers.  With policy.mode == "off" they lower to bare jnp ops (zero
+overhead - the "FT-BLAS: Ori" configuration).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import report as ftreport
+from repro.core.abft import ft_matmul, ft_matmul_batched
+from repro.core.ft_config import FTPolicy, default_policy
+from repro.core.injection import Injection
+
+
+def ft_dense(x: jax.Array, w: jax.Array, *,
+             policy: Optional[FTPolicy] = None,
+             injection: Optional[Injection] = None,
+             out_dtype=None) -> Tuple[jax.Array, dict]:
+    """y = x @ w for x: (..., K), w: (K, N) - one ABFT interval per call.
+
+    Leading dims of x are flattened into the GEMM M dimension, so a whole
+    (batch, seq) block is verified by a single checksum pair - the fused
+    kernel sees one big 2-D matmul, which is also the fastest MXU shape.
+    """
+    policy = policy or default_policy()
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y2, rep = ft_matmul(x2, w, policy=policy, injection=injection,
+                        out_dtype=out_dtype)
+    return y2.reshape(lead + (w.shape[-1],)), rep
+
+
+def ft_dense_fused_gate(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, *,
+                        policy: Optional[FTPolicy] = None,
+                        out_dtype=None) -> Tuple[jax.Array, jax.Array, dict]:
+    """Gate+up projections as ONE checksum interval.
+
+    Beyond-paper optimization: concatenating W_gate|W_up along N halves the
+    number of verification epilogues and lets the kernel stream x once for
+    both products (same reuse argument as the paper's packing fusion).
+    """
+    policy = policy or default_policy()
+    w_cat = jnp.concatenate([w_gate, w_up], axis=1)
+    y, rep = ft_dense(x, w_cat, policy=policy, out_dtype=out_dtype)
+    d = w_gate.shape[1]
+    return y[..., :d], y[..., d:], rep
+
+
+def ft_bmm(a: jax.Array, b: jax.Array, *,
+           policy: Optional[FTPolicy] = None,
+           out_dtype=None) -> Tuple[jax.Array, dict]:
+    """Batched matmul (attention scores / context) with per-slice ABFT."""
+    policy = policy or default_policy()
+    return ft_matmul_batched(a, b, policy=policy, out_dtype=out_dtype)
+
+
+def ft_dense_report_only(x, w, *, policy=None, **kw):
+    y, _ = ft_dense(x, w, policy=policy, **kw)
+    return y

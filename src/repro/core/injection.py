@@ -1,0 +1,141 @@
+"""Source-level error-injection harness (paper Sec. 6.3).
+
+The paper injects soft errors at source/assembly level: at a chosen iteration
+the control flow is redirected to a faulty loop body (DMR routines) or a
+randomly chosen C element is modified (ABFT routines).  External injectors
+(PIN etc.) slow the native program, so the injection must live *inside* the
+computation, be jit-compatible, and cost ~nothing when inactive.
+
+``Injection`` is a small pytree of scalars passed into every FT op / Pallas
+kernel.  ``stream`` selects where the corruption lands:
+
+  0 : DMR stream-1 result (primary)            - detected by DMR compare
+  1 : DMR stream-2 result (duplicate)          - detected by DMR compare
+  2 : ABFT accumulator / C element             - detected by checksum
+  3 : ABFT accumulator, second error           - multi-error scenarios
+
+Flat position indexing is used so one spec works for any operand shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Streams
+DMR_STREAM_1 = 0
+DMR_STREAM_2 = 1
+ABFT_ACC = 2
+ABFT_ACC_2 = 3
+
+
+@jax.tree_util.register_pytree_node_class
+class Injection:
+    """Jit-compatible error-injection spec.
+
+    Attributes (all jnp scalars / small arrays so the spec can be traced):
+      active: (n_err,) bool   - which error slots fire
+      stream: (n_err,) int32  - target stream, see module docstring
+      pos:    (n_err,) int32  - flat element index within the target op output
+      delta:  (n_err,) float32- additive error magnitude ("1+1=3")
+    """
+
+    N_SLOTS = 4
+
+    def __init__(self, active, stream, pos, delta):
+        self.active = active
+        self.stream = stream
+        self.pos = pos
+        self.delta = delta
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def none(cls) -> "Injection":
+        z = jnp.zeros((cls.N_SLOTS,), jnp.int32)
+        return cls(jnp.zeros((cls.N_SLOTS,), jnp.bool_), z, z,
+                   jnp.zeros((cls.N_SLOTS,), jnp.float32))
+
+    @classmethod
+    def at(cls, *, stream: int, pos: int, delta: float,
+           slot: int = 0) -> "Injection":
+        inj = cls.none()
+        return inj.add(stream=stream, pos=pos, delta=delta, slot=slot)
+
+    def add(self, *, stream: int, pos: int, delta: float,
+            slot: int) -> "Injection":
+        return Injection(
+            self.active.at[slot].set(True),
+            self.stream.at[slot].set(stream),
+            self.pos.at[slot].set(pos),
+            self.delta.at[slot].set(delta),
+        )
+
+    # -- application helpers ------------------------------------------------
+    def perturb(self, x: jax.Array, *, stream, offset: int = 0) -> jax.Array:
+        """Add every active delta targeting ``stream``(s) into flat-indexed x.
+
+        ``stream`` may be an int or a tuple of ints (e.g. both ABFT slots
+        target the same accumulator).  ``offset``: flat index of x[0...]
+        within the global op output (used by blocked kernels where x is one
+        tile of the full result).
+        """
+        streams = stream if isinstance(stream, (tuple, list)) else (stream,)
+        flat = x.reshape(-1)
+        size = flat.shape[0]
+        for s in range(self.N_SLOTS):
+            stream_hit = jnp.zeros((), jnp.bool_)
+            for st in streams:
+                stream_hit = stream_hit | (self.stream[s] == st)
+            hit = (self.active[s]
+                   & stream_hit
+                   & (self.pos[s] >= offset)
+                   & (self.pos[s] < offset + size))
+            idx = jnp.clip(self.pos[s] - offset, 0, size - 1)
+            flat = flat.at[idx].add(
+                jnp.where(hit, self.delta[s].astype(flat.dtype),
+                          jnp.zeros((), flat.dtype)))
+        return flat.reshape(x.shape)
+
+    def as_rows(self) -> jax.Array:
+        """(N_SLOTS, 4) f32 table for passing into Pallas kernels."""
+        return jnp.stack([
+            self.active.astype(jnp.float32),
+            self.stream.astype(jnp.float32),
+            self.pos.astype(jnp.float32),
+            self.delta,
+        ], axis=1)
+
+    @classmethod
+    def from_rows(cls, rows: jax.Array) -> "Injection":
+        return cls(rows[:, 0] > 0.5, rows[:, 1].astype(jnp.int32),
+                   rows[:, 2].astype(jnp.int32), rows[:, 3])
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.active, self.stream, self.pos, self.delta), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):
+        return (f"Injection(active={self.active}, stream={self.stream}, "
+                f"pos={self.pos}, delta={self.delta})")
+
+
+def random_injections(key: jax.Array, *, n: int, out_size: int,
+                      stream_choices: Sequence[int],
+                      delta_scale: float = 1.0) -> list:
+    """Build ``n`` concrete Injection specs (host-side; for drills/benches)."""
+    keys = jax.random.split(key, 3)
+    pos = np.asarray(
+        jax.random.randint(keys[0], (n,), 0, max(out_size, 1)))
+    streams = np.asarray(stream_choices)[
+        np.asarray(jax.random.randint(keys[1], (n,), 0, len(stream_choices)))]
+    deltas = np.asarray(
+        jax.random.uniform(keys[2], (n,), minval=0.5, maxval=1.5)
+    ) * delta_scale
+    return [Injection.at(stream=int(s), pos=int(p), delta=float(d))
+            for s, p, d in zip(streams, pos, deltas)]

@@ -1,0 +1,55 @@
+"""FT telemetry counters.
+
+Every FT op returns an ``FTReport`` alongside its result.  Reports are plain
+pytrees of int32 scalars so they flow through jit / scan / psum; the train
+loop sums them into step metrics (``ft/abft_corrected`` etc.), which is how a
+production fleet would watch silent-data-corruption rates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FIELDS = (
+    "abft_detected", "abft_corrected", "abft_unrecoverable",
+    "dmr_detected", "dmr_corrected", "dmr_unrecoverable",
+    "collective_detected", "collective_retried",
+)
+
+
+def empty_report() -> dict:
+    return {f: jnp.zeros((), jnp.int32) for f in FIELDS}
+
+
+def make_report(**kw) -> dict:
+    rep = empty_report()
+    for k, v in kw.items():
+        if k not in FIELDS:
+            raise KeyError(f"unknown FT counter {k!r}")
+        rep[k] = jnp.asarray(v, jnp.int32)
+    return rep
+
+
+def merge(*reports: dict) -> dict:
+    out = empty_report()
+    for r in reports:
+        if r is None:
+            continue
+        for f in FIELDS:
+            out[f] = out[f] + r.get(f, 0)
+    return out
+
+
+def scan_sum(report_stack: dict) -> dict:
+    """Sum a report whose leaves carry a leading scan/layer axis."""
+    return {f: jnp.sum(v).astype(jnp.int32)
+            for f, v in report_stack.items()}
+
+
+def total_errors(report: dict) -> jax.Array:
+    return (report["abft_detected"] + report["dmr_detected"]
+            + report["collective_detected"])
+
+
+def total_unrecoverable(report: dict) -> jax.Array:
+    return report["abft_unrecoverable"] + report["dmr_unrecoverable"]

@@ -1,0 +1,172 @@
+"""Fused-checksum ABFT GEMM - Pallas TPU kernel (paper Sec. 5.2).
+
+The paper's key measurement: on wide-SIMD hardware, ABFT layered on a
+black-box GEMM costs ~15% because every checksum term is an extra
+memory-bound pass; *fusing* the checksum math into loops that already hold
+the data in registers makes the overhead purely computational (2.9%).
+
+TPU translation of the fusion (DESIGN.md Sec. 2):
+
+  x86 FT-BLAS                          this kernel
+  ---------------------------------    ------------------------------------
+  B^c,C^r computed while packing B     colsum/rowsum refs accumulated from
+  C^c computed while packing A         the SAME A/B tiles the MXU is about
+                                       to consume - tiles are VMEM-resident,
+                                       zero extra HBM traffic
+  C^r_ref/C^c_ref updated from C in    row/col sums of the finished C tile
+  registers inside the micro-kernel    taken from the f32 accumulator before
+                                       it is ever written to HBM
+
+Grid: (M/bm, N/bn, K/bk), k innermost ("arbitrary"); i,j parallel.
+The C output block doubles as the f32 accumulator (revisited across k), so
+no scratch is required and the kernel stays portable across interpret mode
+and Mosaic.  All checksum outputs are per-tile partials (O(MN/bn + MN/bm)
+bytes); the O(M+N) reductions + verification epilogue run outside (ops.py)
+where XLA fuses them with the surrounding graph.
+
+Extra FLOPs: 2MNK*(1/bm + 1/bn) = matmul/64 at 128x128 tiles; extra HBM
+bytes: only the tiny partial-checksum outputs.  This is the roofline
+argument the paper makes, restated in TPU terms.
+
+Soft-error injection (paper Sec. 6.3) is compiled in: a (N_SLOTS, 4) table
+[active, stream, flat_pos, delta] perturbs the accumulator at the final
+k-step - errors land *after* the MXU accumulate and *before* the actual
+row/col sums are taken, exactly where a faulty FMA would corrupt C.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.injection import ABFT_ACC, ABFT_ACC_2, Injection
+
+N_SLOTS = Injection.N_SLOTS
+
+
+def _acc_dtype(dtype):
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def abft_gemm_kernel(inj_ref, a_ref, b_ref, c_ref,
+                     trow_ref, tcol_ref,
+                     rref_ref, cref_ref,
+                     arref_ref, acref_ref,
+                     *, n_total: int, bm: int, bn: int, nsteps_k: int,
+                     with_abs: bool):
+    """One (i, j, k) grid step of the fused ABFT matmul."""
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    acc_t = c_ref.dtype
+
+    a = a_ref[...].astype(acc_t)
+    b = b_ref[...].astype(acc_t)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        rref_ref[...] = jnp.zeros_like(rref_ref)
+        cref_ref[...] = jnp.zeros_like(cref_ref)
+        trow_ref[...] = jnp.zeros_like(trow_ref)
+        tcol_ref[...] = jnp.zeros_like(tcol_ref)
+        arref_ref[...] = jnp.zeros_like(arref_ref)
+        acref_ref[...] = jnp.zeros_like(acref_ref)
+
+    # ---- MXU: the product itself -------------------------------------------
+    c_ref[...] += jnp.dot(a, b, preferred_element_type=acc_t)
+
+    # ---- VPU: fused reference checksums (paper's packing-fusion analogue) --
+    # rowsum_ref partial: A_tile @ (B_tile e)   -> sums over (j, k) = A (B e)
+    # colsum_ref partial: (e^T A_tile) @ B_tile -> sums over (i, k) = (e^T A) B
+    be = jnp.sum(b, axis=1, keepdims=True)           # (bk, 1)
+    ea = jnp.sum(a, axis=0, keepdims=True)           # (1, bk)
+    rref_ref[...] += jnp.dot(a, be, preferred_element_type=acc_t)
+    cref_ref[...] += jnp.dot(ea, b, preferred_element_type=acc_t)
+    if with_abs:  # |A| |B| magnitudes drive the round-off tolerance
+        aa, ab = jnp.abs(a), jnp.abs(b)
+        arref_ref[...] += jnp.dot(aa, jnp.sum(ab, axis=1, keepdims=True),
+                                  preferred_element_type=acc_t)
+        acref_ref[...] += jnp.dot(jnp.sum(aa, axis=0, keepdims=True), ab,
+                                  preferred_element_type=acc_t)
+
+    # ---- final k-step: inject, then take actual row/col sums of C tile -----
+    @pl.when(k == nsteps_k - 1)
+    def _finalize():
+        acc = c_ref[...]
+        rows = lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+        cols = lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+        for s in range(N_SLOTS):
+            active = inj_ref[s, 0] > 0.5
+            stream = inj_ref[s, 1].astype(jnp.int32)
+            pos = inj_ref[s, 2].astype(jnp.int32)
+            delta = inj_ref[s, 3].astype(acc_t)
+            is_abft = (stream == ABFT_ACC) | (stream == ABFT_ACC_2)
+            hit = (rows == pos // n_total) & (cols == pos % n_total)
+            fire = active & is_abft
+            acc = acc + jnp.where(
+                fire, delta, jnp.zeros((), acc_t)) * hit.astype(acc_t)
+        c_ref[...] = acc
+        # Actual checksums from the still-resident accumulator: the fusion.
+        trow_ref[...] = jnp.sum(acc, axis=1, keepdims=True)
+        tcol_ref[...] = jnp.sum(acc, axis=0, keepdims=True)
+
+
+def abft_gemm_call(A: jax.Array, B: jax.Array, inj_rows: jax.Array, *,
+                   bm: int = 128, bn: int = 128, bk: int = 128,
+                   with_abs: bool = True,
+                   interpret: bool = True):
+    """pallas_call wrapper on padded inputs (M,K)x(K,N), blocks (bm,bn,bk).
+
+    Returns f32/f64 C plus per-tile checksum partials; see ops.abft_gemm for
+    the padded->logical epilogue.
+    """
+    M, K = A.shape
+    K2, N = B.shape
+    assert K == K2, (A.shape, B.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    gm, gn, gk = M // bm, N // bn, K // bk
+    acc_t = _acc_dtype(A.dtype)
+
+    kernel = functools.partial(
+        abft_gemm_kernel, n_total=N, bm=bm, bn=bn, nsteps_k=gk,
+        with_abs=with_abs)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((M, N), acc_t),        # C (accumulator)
+        jax.ShapeDtypeStruct((M, gn), acc_t),       # tile rowsums of C
+        jax.ShapeDtypeStruct((gm, N), acc_t),       # tile colsums of C
+        jax.ShapeDtypeStruct((M, gn), acc_t),       # rowsum_ref partials
+        jax.ShapeDtypeStruct((gm, N), acc_t),       # colsum_ref partials
+        jax.ShapeDtypeStruct((M, gn), acc_t),       # abs rowsum_ref partials
+        jax.ShapeDtypeStruct((gm, N), acc_t),       # abs colsum_ref partials
+    ]
+    row_spec = pl.BlockSpec((bm, 1), lambda i, j, k: (i, j))
+    col_spec = pl.BlockSpec((1, bn), lambda i, j, k: (i, j))
+    out_specs = [
+        pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        row_spec, col_spec, row_spec, col_spec, row_spec, col_spec,
+    ]
+    in_specs = [
+        pl.BlockSpec((N_SLOTS, 4), lambda i, j, k: (0, 0)),  # injection table
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+
+    call_kw = {}
+    if not interpret:
+        from jax.experimental.pallas import tpu as pltpu
+        call_kw["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        **call_kw,
+    )(inj_rows, A, B)

@@ -1,0 +1,142 @@
+"""DMR elementwise Pallas kernels: SCAL / AXPY family (paper Sec. 4).
+
+The paper's five-stage software pipeline for DSCAL is
+  L (load) | M1 (mul) | M2 (duplicated mul) | C (compare) | BS/S (store)
+with opmask comparison reduction and in-register checkpointing.  The TPU
+translation keeps the structure and discards the x86 mechanics:
+
+  L       one HBM->VMEM DMA per block, auto-double-buffered by the Pallas
+          grid pipeline (the paper's prefetcht0 distance tuning -> BlockSpec
+          sizing); the load feeds BOTH compute streams (SoR: loads are not
+          duplicated)
+  M1/M2   the block computed twice; an optimization_barrier fences the
+          duplicate so neither XLA nor Mosaic can CSE it away
+  C       full-block equality compare; the "opmask reduction" is a single
+          jnp.any per block (one predicate per 8x128xB lanes vs the paper's
+          1 branch per 4 zmm compares)
+  BS/R    the input block in VMEM *is* the checkpoint: on mismatch a third
+          stream recomputes from it, 2-of-3 vote selects lanewise
+  S       voted block stored once
+
+Counters [detected, corrected, unrecoverable, 0] accumulate in a (1, 4)
+int32 output revisited by every grid step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
+
+N_SLOTS = Injection.N_SLOTS
+LANE = 128
+
+
+def _inject_block(x, inj_ref, *, stream_id: int, row0, bx: int):
+    """Add active deltas for ``stream_id`` into an (bx, LANE) block whose
+    global flat offset is row0 * LANE."""
+    rows = lax.broadcasted_iota(jnp.int32, (bx, LANE), 0) + row0
+    cols = lax.broadcasted_iota(jnp.int32, (bx, LANE), 1)
+    for s in range(N_SLOTS):
+        active = inj_ref[s, 0] > 0.5
+        stream = inj_ref[s, 1].astype(jnp.int32)
+        pos = inj_ref[s, 2].astype(jnp.int32)
+        delta = inj_ref[s, 3].astype(x.dtype)
+        hit = (rows == pos // LANE) & (cols == pos % LANE)
+        fire = active & (stream == stream_id)
+        x = x + jnp.where(fire, delta, jnp.zeros((), x.dtype)
+                          ) * hit.astype(x.dtype)
+    return x
+
+
+def _dmr_ew_kernel(op: Callable, n_in: int,
+                   inj_ref, scal_ref, *refs, bx: int, vote: bool):
+    """Generic DMR elementwise grid step.
+
+    refs = (*in_refs, y_ref, cnt_ref).  ``op(blocks, alpha)`` is the loop
+    body; it is evaluated 2 (+1 on mismatch) times from the same VMEM blocks.
+    """
+    in_refs, y_ref, cnt_ref = refs[:n_in], refs[n_in], refs[n_in + 1]
+    i = pl.program_id(0)
+    row0 = i * bx
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    blocks = tuple(r[...] for r in in_refs)
+    alpha = scal_ref[0, 0]
+
+    y1 = op(blocks, alpha)                                   # M1
+    fenced = lax.optimization_barrier(blocks)                # fence dup
+    y2 = op(fenced, alpha)                                   # M2
+    y1 = _inject_block(y1, inj_ref, stream_id=DMR_STREAM_1, row0=row0, bx=bx)
+    y2 = _inject_block(y2, inj_ref, stream_id=DMR_STREAM_2, row0=row0, bx=bx)
+
+    mismatch = y1 != y2                                      # C
+    detected = jnp.sum(mismatch.astype(jnp.int32))
+
+    if vote:
+        fenced3 = lax.optimization_barrier(blocks)           # R (checkpoint)
+        y3 = op(fenced3, alpha)
+        agree13 = y1 == y3
+        agree23 = y2 == y3
+        y = jnp.where(~mismatch, y1,
+                      jnp.where(agree13, y1, jnp.where(agree23, y2, y3)))
+        corrected = jnp.sum((mismatch & (agree13 | agree23)).astype(jnp.int32))
+        unrec = jnp.sum((mismatch & ~agree13 & ~agree23).astype(jnp.int32))
+    else:
+        y, corrected, unrec = y1, jnp.zeros((), jnp.int32), detected
+
+    y_ref[...] = y                                           # S
+    cnt_ref[0, 0] += detected
+    cnt_ref[0, 1] += corrected
+    cnt_ref[0, 2] += unrec
+
+
+def dmr_ew_call(op: Callable, inputs: Tuple[jax.Array, ...],
+                alpha: jax.Array, inj_rows: jax.Array, *,
+                bx: int = 8, vote: bool = True, interpret: bool = True):
+    """Run ``y = op(inputs, alpha)`` elementwise under kernel DMR.
+
+    inputs: 2-D (R, 128) padded views, all same shape/dtype.
+    Returns (y, counts[1,4] int32).
+    """
+    R = inputs[0].shape[0]
+    assert all(x.shape == (R, LANE) for x in inputs)
+    assert R % bx == 0
+    grid = (R // bx,)
+    kernel = functools.partial(_dmr_ew_kernel, op, len(inputs),
+                               bx=bx, vote=vote)
+    blk = pl.BlockSpec((bx, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((N_SLOTS, 4), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))]
+                 + [blk] * len(inputs),
+        out_specs=[blk, pl.BlockSpec((1, 4), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, LANE), inputs[0].dtype),
+                   jax.ShapeDtypeStruct((1, 4), jnp.int32)],
+        interpret=interpret,
+    )(inj_rows, alpha.reshape(1, 1), *inputs)
+
+
+# The paper's two flagship Level-1 loop bodies.
+def scal_op(blocks, alpha):
+    (x,) = blocks
+    return alpha * x
+
+
+def axpy_op(blocks, alpha):
+    x, y = blocks
+    return alpha * x + y
+
+
+def rot_op_x(blocks, alpha):  # alpha packs c; s supplied via closure variant
+    raise NotImplementedError("rot uses the jnp DMR path")

@@ -1,0 +1,110 @@
+"""DMR GEMV Pallas kernel (paper Sec. 3.2.1 + 4).
+
+Paper's DGEMV: unroll i by R_i=4 so each x element loaded into a register is
+reused R_i times; keep A's access contiguous (no cache blocking); j unrolled
+to the SIMD width.  TPU translation: one (bm, bk) A tile in VMEM is an
+R_i = bm-way reuse of the (bk,) x segment - the register-reuse argument at
+VMEM granularity; A streams tile-contiguously from HBM, x's k-blocks are
+revisited per i (resident, tiny).
+
+Per grid step the (bm,) partial y update is computed twice from the same
+VMEM tiles, compared, majority-voted with a third stream on mismatch, then
+accumulated into the y output block (revisited across k, flushed per i).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
+
+N_SLOTS = Injection.N_SLOTS
+
+
+def _dmr_gemv_kernel(inj_ref, a_ref, x_ref, y_ref, cnt_ref, *,
+                     bm: int, vote: bool):
+    i, k = pl.program_id(0), pl.program_id(1)
+    acc_t = y_ref.dtype
+
+    @pl.when((i == 0) & (k == 0))
+    def _init_cnt():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    @pl.when(k == 0)
+    def _init_y():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = a_ref[...].astype(acc_t)
+    xv = x_ref[...].astype(acc_t)
+
+    p1 = jnp.dot(a, xv, preferred_element_type=acc_t)        # (bm, 1)
+    af, xf = lax.optimization_barrier((a, xv))
+    p2 = jnp.dot(af, xf, preferred_element_type=acc_t)
+
+    # Injection: flat pos indexes the y element; fires on its (i, k) == (i, 0)
+    # partial so one corrupted FMA stream is modeled.
+    rows = lax.broadcasted_iota(jnp.int32, (bm, 1), 0) + i * bm
+    for s in range(N_SLOTS):
+        active = inj_ref[s, 0] > 0.5
+        stream = inj_ref[s, 1].astype(jnp.int32)
+        pos = inj_ref[s, 2].astype(jnp.int32)
+        delta = inj_ref[s, 3].astype(acc_t)
+        hit = (rows == pos) & (k == 0)
+        p1 = p1 + jnp.where(active & (stream == DMR_STREAM_1), delta,
+                            jnp.zeros((), acc_t)) * hit.astype(acc_t)
+        p2 = p2 + jnp.where(active & (stream == DMR_STREAM_2), delta,
+                            jnp.zeros((), acc_t)) * hit.astype(acc_t)
+
+    mismatch = p1 != p2
+    detected = jnp.sum(mismatch.astype(jnp.int32))
+    if vote:
+        a3, x3 = lax.optimization_barrier((a, xv))
+        p3 = jnp.dot(a3, x3, preferred_element_type=acc_t)
+        agree13 = p1 == p3
+        agree23 = p2 == p3
+        p = jnp.where(~mismatch, p1,
+                      jnp.where(agree13, p1, jnp.where(agree23, p2, p3)))
+        corrected = jnp.sum((mismatch & (agree13 | agree23)).astype(jnp.int32))
+        unrec = jnp.sum((mismatch & ~agree13 & ~agree23).astype(jnp.int32))
+    else:
+        p, corrected, unrec = p1, jnp.zeros((), jnp.int32), detected
+
+    y_ref[...] += p
+    cnt_ref[0, 0] += detected
+    cnt_ref[0, 1] += corrected
+    cnt_ref[0, 2] += unrec
+
+
+def dmr_gemv_call(A: jax.Array, x: jax.Array, inj_rows: jax.Array, *,
+                  bm: int = 128, bk: int = 512, vote: bool = True,
+                  interpret: bool = True):
+    """y = A @ x under kernel DMR.  A: (M, K), x: (K, 1) padded to blocks.
+
+    Returns (y (M, 1) acc-dtype, counts (1, 4) int32).
+    """
+    M, K = A.shape
+    assert M % bm == 0 and K % bk == 0 and x.shape == (K, 1)
+    acc_t = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
+    kernel = functools.partial(_dmr_gemv_kernel, bm=bm, vote=vote)
+    call_kw = {}
+    if not interpret:
+        from jax.experimental.pallas import tpu as pltpu
+        call_kw["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, K // bk),
+        in_specs=[pl.BlockSpec((N_SLOTS, 4), lambda i, k: (0, 0)),
+                  pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+                  pl.BlockSpec((bk, 1), lambda i, k: (k, 0))],
+        out_specs=[pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
+                   pl.BlockSpec((1, 4), lambda i, k: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, 1), acc_t),
+                   jax.ShapeDtypeStruct((1, 4), jnp.int32)],
+        interpret=interpret,
+        **call_kw,
+    )(inj_rows, A, x)

@@ -1,0 +1,110 @@
+"""DMR reduction Pallas kernels: DOT / NRM2 (paper Sec. 3.1, 4).
+
+Reductions verify at *block-partial* granularity: each grid step produces a
+partial sum computed twice and compared, so the verification interval (and
+error-location granularity) is one block - the analogue of the paper's
+per-loop-iteration checks.  Partials land in an (R/bx, 1) output; the final
+O(R/bx) sum runs outside the kernel.
+
+NRM2 note: paper upgrades OpenBLAS's SSE2 DNRM2 to AVX-512; here the sum of
+squares runs on full 8x128 VPU blocks, and the scalar sqrt happens once
+outside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
+
+N_SLOTS = Injection.N_SLOTS
+LANE = 128
+
+
+def _dmr_reduce_kernel(op: Callable, n_in: int,
+                       inj_ref, *refs, vote: bool):
+    in_refs, p_ref, cnt_ref = refs[:n_in], refs[n_in], refs[n_in + 1]
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    blocks = tuple(r[...] for r in in_refs)
+
+    p1 = op(blocks)
+    p2 = op(lax.optimization_barrier(blocks))
+
+    # Injection streams corrupt one partial (block index == pos).
+    for s in range(N_SLOTS):
+        active = inj_ref[s, 0] > 0.5
+        stream = inj_ref[s, 1].astype(jnp.int32)
+        pos = inj_ref[s, 2].astype(jnp.int32)
+        delta = inj_ref[s, 3].astype(p1.dtype)
+        hit_blk = pos == i
+        p1 = p1 + jnp.where(active & (stream == DMR_STREAM_1) & hit_blk,
+                            delta, jnp.zeros((), p1.dtype))
+        p2 = p2 + jnp.where(active & (stream == DMR_STREAM_2) & hit_blk,
+                            delta, jnp.zeros((), p2.dtype))
+
+    mismatch = p1 != p2
+    detected = mismatch.astype(jnp.int32)
+    if vote:
+        p3 = op(lax.optimization_barrier(blocks))
+        agree13 = p1 == p3
+        agree23 = p2 == p3
+        p = jnp.where(~mismatch, p1,
+                      jnp.where(agree13, p1, jnp.where(agree23, p2, p3)))
+        corrected = (mismatch & (agree13 | agree23)).astype(jnp.int32)
+        unrec = (mismatch & ~agree13 & ~agree23).astype(jnp.int32)
+    else:
+        p, corrected, unrec = p1, jnp.zeros((), jnp.int32), detected
+
+    p_ref[0, 0] = p
+    cnt_ref[0, 0] += detected
+    cnt_ref[0, 1] += corrected
+    cnt_ref[0, 2] += unrec
+
+
+def dmr_reduce_call(op: Callable, inputs: Tuple[jax.Array, ...],
+                    inj_rows: jax.Array, *,
+                    bx: int = 8, vote: bool = True, interpret: bool = True):
+    """Blockwise-DMR reduction.  inputs: (R, 128) padded views.
+
+    Returns (partials (R/bx, 1) acc-dtype, counts (1, 4) int32).
+    """
+    R = inputs[0].shape[0]
+    assert R % bx == 0
+    g = R // bx
+    acc_t = jnp.float64 if inputs[0].dtype == jnp.float64 else jnp.float32
+    kernel = functools.partial(_dmr_reduce_kernel, op, len(inputs), vote=vote)
+    blk = pl.BlockSpec((bx, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((N_SLOTS, 4), lambda i: (0, 0))]
+                 + [blk] * len(inputs),
+        out_specs=[pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 4), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((g, 1), acc_t),
+                   jax.ShapeDtypeStruct((1, 4), jnp.int32)],
+        interpret=interpret,
+    )(inj_rows, *inputs)
+
+
+def dot_op(blocks):
+    x, y = blocks
+    acc_t = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+    return jnp.sum(x.astype(acc_t) * y.astype(acc_t))
+
+
+def sumsq_op(blocks):
+    (x,) = blocks
+    acc_t = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+    x32 = x.astype(acc_t)
+    return jnp.sum(x32 * x32)

@@ -1,0 +1,150 @@
+"""Jit'd wrappers over the Pallas FT kernels.
+
+Handles logical->padded shape plumbing (pad with zeros: checksum algebra is
+invariant to zero rows/cols), injection-position remapping into padded
+coordinates, and kernel-counter -> FTReport conversion.  Every wrapper has a
+pure-jnp oracle in kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import report as ftreport
+from repro.core.checksum import ChecksumRefs
+from repro.core.injection import Injection
+from repro.kernels import abft_gemm as _ag
+from repro.kernels import dmr_ew as _ew
+from repro.kernels import dmr_gemv as _gv
+from repro.kernels import dmr_reduce as _rd
+
+LANE = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _counts_report(cnt: jax.Array) -> dict:
+    return ftreport.make_report(
+        dmr_detected=cnt[0, 0], dmr_corrected=cnt[0, 1],
+        dmr_unrecoverable=cnt[0, 2])
+
+
+def _inj_rows(injection: Optional[Injection]) -> jax.Array:
+    inj = injection if injection is not None else Injection.none()
+    return inj.as_rows()
+
+
+def _remap_matrix_pos(rows: jax.Array, n_logical: int,
+                      n_padded: int) -> jax.Array:
+    """Injection pos is logical (row*N + col); kernel decodes on padded N."""
+    pos = rows[:, 2].astype(jnp.int32)
+    r, c = pos // n_logical, pos % n_logical
+    return rows.at[:, 2].set((r * n_padded + c).astype(rows.dtype))
+
+
+# -- fused ABFT GEMM ----------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=(
+    "bm", "bn", "bk", "with_abs", "interpret"))
+def abft_gemm(A: jax.Array, B: jax.Array, *,
+              injection: Optional[Injection] = None,
+              bm: int = 128, bn: int = 128, bk: int = 128,
+              with_abs: bool = True, interpret: bool = True
+              ) -> Tuple[jax.Array, jax.Array, jax.Array, ChecksumRefs]:
+    """Fused-checksum matmul.  Returns (C_acc, rowsum_act, colsum_act, refs)
+    in accumulation dtype with logical (unpadded) shapes."""
+    M, K = A.shape
+    _, N = B.shape
+    bm, bn, bk = min(bm, _ceil_to(M, 8)), min(bn, _ceil_to(N, LANE)), \
+        min(bk, _ceil_to(K, LANE))
+    Mp, Np, Kp = _ceil_to(M, bm), _ceil_to(N, bn), _ceil_to(K, bk)
+    Ap = jnp.pad(A, ((0, Mp - M), (0, Kp - K)))
+    Bp = jnp.pad(B, ((0, Kp - K), (0, Np - N)))
+    rows = _remap_matrix_pos(_inj_rows(injection), max(N, 1), Np)
+
+    C, trow, tcol, rref, cref, arref, acref = _ag.abft_gemm_call(
+        Ap, Bp, rows, bm=bm, bn=bn, bk=bk, with_abs=with_abs,
+        interpret=interpret)
+
+    rowsum_act = trow.sum(axis=1)[:M]
+    colsum_act = tcol.sum(axis=0)[:N]
+    refs = ChecksumRefs(
+        rowsum_ref=rref.sum(axis=1)[:M],
+        colsum_ref=cref.sum(axis=0)[:N],
+        abs_rowsum_ref=arref.sum(axis=1)[:M],
+        abs_colsum_ref=acref.sum(axis=0)[:N],
+    )
+    return C[:M, :N], rowsum_act, colsum_act, refs
+
+
+# -- DMR Level-1 --------------------------------------------------------------
+def _as_lanes(x: jax.Array, bx: int = 8) -> Tuple[jax.Array, int]:
+    n = x.shape[0]
+    Rp = _ceil_to(max(n, 1), LANE * bx) // LANE
+    return jnp.pad(x, (0, Rp * LANE - n)).reshape(Rp, LANE), n
+
+
+@functools.partial(jax.jit, static_argnames=("vote", "interpret"))
+def dmr_scal(alpha, x: jax.Array, *, injection: Optional[Injection] = None,
+             vote: bool = True, interpret: bool = True):
+    xv, n = _as_lanes(x)
+    y, cnt = _ew.dmr_ew_call(_ew.scal_op, (xv,), jnp.asarray(alpha, x.dtype),
+                             _inj_rows(injection), vote=vote,
+                             interpret=interpret)
+    return y.reshape(-1)[:n], _counts_report(cnt)
+
+
+@functools.partial(jax.jit, static_argnames=("vote", "interpret"))
+def dmr_axpy(alpha, x: jax.Array, y: jax.Array, *,
+             injection: Optional[Injection] = None,
+             vote: bool = True, interpret: bool = True):
+    xv, n = _as_lanes(x)
+    yv, _ = _as_lanes(y)
+    out, cnt = _ew.dmr_ew_call(_ew.axpy_op, (xv, yv),
+                               jnp.asarray(alpha, x.dtype),
+                               _inj_rows(injection), vote=vote,
+                               interpret=interpret)
+    return out.reshape(-1)[:n], _counts_report(cnt)
+
+
+@functools.partial(jax.jit, static_argnames=("vote", "interpret"))
+def dmr_dot(x: jax.Array, y: jax.Array, *,
+            injection: Optional[Injection] = None,
+            vote: bool = True, interpret: bool = True):
+    """dot(x, y); injection pos indexes the *block partial* (interval id)."""
+    xv, _ = _as_lanes(x)
+    yv, _ = _as_lanes(y)
+    p, cnt = _rd.dmr_reduce_call(_rd.dot_op, (xv, yv), _inj_rows(injection),
+                                 vote=vote, interpret=interpret)
+    return p.sum(), _counts_report(cnt)
+
+
+@functools.partial(jax.jit, static_argnames=("vote", "interpret"))
+def dmr_nrm2(x: jax.Array, *, injection: Optional[Injection] = None,
+             vote: bool = True, interpret: bool = True):
+    xv, _ = _as_lanes(x)
+    p, cnt = _rd.dmr_reduce_call(_rd.sumsq_op, (xv,), _inj_rows(injection),
+                                 vote=vote, interpret=interpret)
+    return jnp.sqrt(p.sum()), _counts_report(cnt)
+
+
+# -- DMR Level-2 --------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "vote", "interpret"))
+def dmr_gemv(A: jax.Array, x: jax.Array, *,
+             injection: Optional[Injection] = None,
+             bm: int = 128, bk: int = 512,
+             vote: bool = True, interpret: bool = True):
+    """A @ x under kernel DMR; injection pos indexes the y element."""
+    M, K = A.shape
+    bm = min(bm, _ceil_to(M, 8))
+    bk = min(bk, _ceil_to(K, LANE))
+    Mp, Kp = _ceil_to(M, bm), _ceil_to(K, bk)
+    Ap = jnp.pad(A, ((0, Mp - M), (0, Kp - K)))
+    xp = jnp.pad(x, (0, Kp - K)).reshape(Kp, 1)
+    y, cnt = _gv.dmr_gemv_call(Ap, xp, _inj_rows(injection), bm=bm, bk=bk,
+                               vote=vote, interpret=interpret)
+    return y[:M, 0].astype(A.dtype), _counts_report(cnt)

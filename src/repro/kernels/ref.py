@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each oracle mirrors the kernel's *mathematical* contract (not its blocking):
+kernel tests sweep shapes/dtypes and assert kernel(x) ~= ref(x).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.checksum import ChecksumRefs, acc_dtype_for
+
+
+def abft_gemm_ref(A: jax.Array, B: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array, ChecksumRefs]:
+    acc = acc_dtype_for(A.dtype)
+    A32, B32 = A.astype(acc), B.astype(acc)
+    C = A32 @ B32
+    Aab, Bab = jnp.abs(A32), jnp.abs(B32)
+    refs = ChecksumRefs(
+        rowsum_ref=A32 @ B32.sum(axis=1),
+        colsum_ref=A32.sum(axis=0) @ B32,
+        abs_rowsum_ref=Aab @ Bab.sum(axis=1),
+        abs_colsum_ref=Aab.sum(axis=0) @ Bab,
+    )
+    return C, C.sum(axis=1), C.sum(axis=0), refs
+
+
+def scal_ref(alpha, x):
+    return jnp.asarray(alpha, x.dtype) * x
+
+
+def axpy_ref(alpha, x, y):
+    return jnp.asarray(alpha, x.dtype) * x + y
+
+
+def dot_ref(x, y):
+    acc = acc_dtype_for(x.dtype)
+    return jnp.dot(x.astype(acc), y.astype(acc))
+
+
+def nrm2_ref(x):
+    acc = acc_dtype_for(x.dtype)
+    x = x.astype(acc)
+    return jnp.sqrt(jnp.sum(x * x))
+
+
+def gemv_ref(A, x):
+    acc = acc_dtype_for(A.dtype)
+    return (A.astype(acc) @ x.astype(acc)).astype(A.dtype)

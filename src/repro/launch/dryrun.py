@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes (16x16 and 2x16x16) need 512 placeholder
+host devices.  Nothing here allocates device memory - all inputs are
+ShapeDtypeStructs (launch/inputs.py).
+
+Per cell this prints/records:
+  - compiled.memory_analysis()  (proves the program fits per-device HBM)
+  - compiled.cost_analysis()    (FLOPs / bytes for the roofline)
+  - collective wire bytes parsed from the optimized HLO
+    (launch/hlo_analysis.py)
+and writes a JSON artifact under artifacts/dryrun/ for benchmarks/roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod]   # every cell
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPE_GRID
+from repro.launch import hlo_analysis
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_ctx, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.models import build_model
+from repro.optim import adamw
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "artifacts", "dryrun")
+
+
+def _mem_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for field in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+                  "host_argument_size_in_bytes", "host_output_size_in_bytes",
+                  "host_temp_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    return out
+
+
+VARIANTS = {
+    # hillclimb levers (EXPERIMENTS.md Perf)
+    "base": {},
+    "save_tp": {"remat_policy": "save_tp_outputs"},
+    "kv8": {"kv_cache_dtype": "int8"},
+    "zbf16": {"zero_collective_dtype": "bf16"},
+    "cap1": {"capacity_factor": 1.0},
+    "save_tp+zbf16": {"remat_policy": "save_tp_outputs",
+                      "zero_collective_dtype": "bf16"},
+    "save_tp+zbf16+cap1": {"remat_policy": "save_tp_outputs",
+                           "zero_collective_dtype": "bf16",
+                           "capacity_factor": 1.0},
+    "micro8": {"n_micro_override": 8},
+    "micro8+save_tp+cap1": {"n_micro_override": 8,
+                            "remat_policy": "save_tp_outputs",
+                            "capacity_factor": 1.0},
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: bool = False, variant: str = "base") -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if variant != "base":
+        cfg = _dc.replace(cfg, **VARIANTS[variant])
+    cell = {c.name: c for c in SHAPE_GRID}[shape_name]
+    for c, skip in cfg.cells():
+        if c.name == shape_name and skip:
+            return {"arch": arch, "shape": shape_name,
+                    "multi_pod": multi_pod, "status": "skipped",
+                    "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.shape.values())
+    model = build_model(cfg)
+    ci = input_specs(cfg, cell, mesh, multi_pod=multi_pod, model=model)
+    ctx = make_ctx(multi_pod=multi_pod,
+                   data_size=n_dev // mesh.shape["model"],
+                   model_size=mesh.shape["model"],
+                   seq_shard=ci.seq_shard,
+                   param_mode=ci.param_mode)
+
+    if ci.kind == "train":
+        body = make_train_step(model, ctx, adamw.AdamWConfig(),
+                               n_micro=ci.n_micro, zero=True,
+                               pspecs=ci.in_specs[0])
+        donate = (0, 1)
+    elif ci.kind == "prefill":
+        body = make_prefill_step(model, ctx)
+        donate = ()
+    else:
+        body = make_serve_step(model, ctx)
+        donate = (1,)
+
+    smapped = jax.shard_map(body, mesh=mesh, in_specs=ci.in_specs,
+                            out_specs=ci.out_specs, check_vma=False)
+    jitted = jax.jit(smapped, donate_argnums=donate)
+
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "variant": variant,
+           "kind": ci.kind, "mesh": dict(mesh.shape), "n_devices": n_dev,
+           "n_micro": ci.n_micro, "status": "ok"}
+    t0 = time.time()
+    with mesh:
+        lowered = jitted.lower(*ci.args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+    rec["memory_analysis"] = _mem_analysis_dict(compiled)
+
+    hlo = compiled.as_text()
+    rec["collectives"] = hlo_analysis.collective_stats(hlo)
+    if save_hlo:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{'mp' if multi_pod else 'sp'}"
+        with open(os.path.join(ARTIFACT_DIR, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+
+    print(f"[dryrun] {arch} x {shape_name} x "
+          f"{'2x16x16' if multi_pod else '16x16'}: "
+          f"lower {rec['lower_s']}s compile {rec['compile_s']}s")
+    print(f"  memory_analysis: {rec['memory_analysis']}")
+    print(f"  cost_analysis:   {rec['cost_analysis']}")
+    print(f"  collectives:     { {k: v for k, v in rec['collectives'].items() if k.startswith('bytes')} }")
+    return rec
+
+
+def save_record(rec: dict) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    tag = (f"{rec['arch']}__{rec['shape']}__"
+           f"{'mp' if rec['multi_pod'] else 'sp'}")
+    if rec.get("variant", "base") != "base":
+        tag += "__" + rec["variant"].replace("+", "_")
+    path = os.path.join(ARTIFACT_DIR, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=[c.name for c in SHAPE_GRID])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="base", choices=list(VARIANTS))
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for c in SHAPE_GRID:
+                cells.append((a, c.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, args.multi_pod,
+                           save_hlo=args.save_hlo, variant=args.variant)
+        except Exception as e:  # record the failure, keep going
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape,
+                   "multi_pod": args.multi_pod, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        save_record(rec)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,133 @@
+"""HLO artifact analysis: collective wire bytes + roofline inputs.
+
+``compiled.cost_analysis()`` has no collective accounting, so the roofline's
+collective term is derived here by scanning the (post-SPMD) HLO text for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, sizing their result shapes, and applying standard ring-algorithm wire
+factors per device:
+
+  all-gather       (n-1)/n * out_bytes
+  reduce-scatter   (n-1)   * out_bytes          (= (n-1)/n * in_bytes)
+  all-reduce       2 (n-1)/n * bytes            (RS + AG phases)
+  all-to-all       (n-1)/n * bytes
+  collective-permute  bytes
+
+n = replica-group size parsed per op.  This is the per-device ICI traffic a
+ring/torus schedule moves, the quantity the link-bandwidth roofline needs.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_ID_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of the first shape (or tuple of shapes) in ``text``."""
+    total = 0
+    # tuple results: (f32[..], f32[..]) - sum all leading shapes before ' '
+    head = text.split(")", 1)[0] if text.startswith("(") else text
+    for m in _SHAPE_RE.finditer(head):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+        if not text.startswith("("):
+            break
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ID_RE.search(line)
+    if m:  # replica_groups=[G,N] iota form: N per group
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_stats(hlo_text: str, *, default_group: int = 2
+                     ) -> Dict[str, float]:
+    """Per-device wire bytes by collective type + total."""
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        _, rhs = ls.split("=", 1)
+        rhs = rhs.strip()
+        op = None
+        for c in COLLECTIVES:
+            if re.match(rf"^\(?\s*[\w\[\],\s()]*\s*{c}(-start|-done)?\(",
+                        rhs) or f" {c}(" in f" {rhs}" or rhs.startswith(c):
+                op = c
+                break
+        if op is None:
+            # result-shape-first format: "f32[8,16]{1,0} all-gather(..."
+            for c in COLLECTIVES:
+                if f" {c}(" in rhs or f" {c}-start(" in rhs:
+                    op = c
+                    break
+        if op is None:
+            continue
+        if f"{op}-done" in rhs:
+            continue  # counted at -start
+        nbytes = _shape_bytes(rhs)
+        n = _group_size(rhs, default_group)
+        if n <= 1:
+            continue
+        if op == "all-gather":
+            wire = nbytes * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = nbytes * (n - 1)
+        elif op == "all-reduce":
+            wire = 2 * nbytes * (n - 1) / n
+        elif op == "all-to-all":
+            wire = nbytes * (n - 1) / n
+        else:  # collective-permute
+            wire = nbytes
+        out[op] += wire
+        counts[op] += 1
+    stats = {f"bytes_{k}": v for k, v in out.items()}
+    stats.update({f"count_{k}": float(v) for k, v in counts.items()})
+    stats["bytes_total"] = sum(out.values())
+    return dict(stats)
+
+
+# TPU v5e-class hardware constants (per chip), per the assignment.
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
+                   collective_bytes_per_device: float) -> Dict[str, float]:
+    t_c = flops_per_device / PEAK_FLOPS_BF16
+    t_m = hbm_bytes_per_device / HBM_BW
+    t_n = collective_bytes_per_device / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_n,
+            "bottleneck": dom[1],
+            "bound_step_time": max(t_c, t_m, t_n),
+            "roofline_fraction": (t_c / max(t_c, t_m, t_n, 1e-30)),
+            }

@@ -1,0 +1,191 @@
+"""Abstract inputs (ShapeDtypeStruct) + shardings for every dry-run cell.
+
+Pattern: weak-type-correct, shardable, zero device allocation.  Global cache
+shapes are derived mechanically: eval_shape the model's local cache
+constructor, then scale every dim by the mesh extent of the axes its
+PartitionSpec assigns (``globalize``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch.steps import make_ctx
+from repro.models import build_model
+from repro.models.lm import Model
+from repro.models.specs import batch_specs, cache_specs, param_specs
+from repro.optim import adamw
+
+
+def _axis_extent(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def globalize(local_avals, specs, mesh: Mesh):
+    """Scale local eval_shape dims up by their spec axes' mesh extents."""
+
+    def one(aval, spec):
+        dims = list(aval.shape)
+        for d, axes in enumerate(spec):
+            if d < len(dims):
+                dims[d] *= _axis_extent(mesh, axes)
+        return jax.ShapeDtypeStruct(tuple(dims), aval.dtype)
+
+    return jax.tree.map(one, local_avals, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def localize(global_avals, specs, mesh: Mesh):
+    def one(aval, spec):
+        dims = list(aval.shape)
+        for d, axes in enumerate(spec):
+            if d < len(dims):
+                e = _axis_extent(mesh, axes)
+                assert dims[d] % e == 0, (aval.shape, spec, d)
+                dims[d] //= e
+        return jax.ShapeDtypeStruct(tuple(dims), aval.dtype)
+
+    return jax.tree.map(one, global_avals, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass
+class CellInputs:
+    kind: str
+    args: Tuple[Any, ...]            # abstract args in step order
+    in_specs: Tuple[Any, ...]
+    out_specs: Any
+    n_micro: int
+    seq_shard: bool
+    param_mode: str = "tp"           # layout the specs were built with
+
+
+def _sharded(avals, specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=NamedSharding(mesh, s)),
+        avals, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def _metrics_spec(model: Model):
+    from repro.core import report as ftreport
+    rep = {k: P() for k in ftreport.FIELDS}
+    return {"nll": P(), "aux": P(), "loss": P(), "report": rep}
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh, *,
+                multi_pod: bool, model: Optional[Model] = None
+                ) -> CellInputs:
+    """Abstract (ShapeDtypeStruct) inputs + specs for one dry-run cell."""
+    model = model or build_model(cfg)
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    dp = math.prod(mesh.shape[a] for a in dp_axes)
+    ms = mesh.shape["model"]
+    seq_shard = cell.kind == "long"
+    serve_etp0 = (cell.kind in ("decode", "long")
+                  and getattr(cfg, "serve_expert_tp", False))
+    ctx = make_ctx(multi_pod=multi_pod, data_size=dp, model_size=ms,
+                   seq_shard=seq_shard,
+                   param_mode="expert_tp" if serve_etp0
+                   else cfg.param_shard)
+
+    params_g = jax.eval_shape(lambda k: model.init(k, ms),
+                              jax.random.PRNGKey(0))
+    serve_etp = (cell.kind in ("decode", "long")
+                 and getattr(cfg, "serve_expert_tp", False))
+    fsdp = cfg.param_shard == "fsdp" and not serve_etp
+    param_mode = "expert_tp" if serve_etp else cfg.param_shard
+    pspecs = param_specs(params_g, fsdp=fsdp, expert_tp=serve_etp,
+                         dp_axes=dp_axes if multi_pod else "data")
+
+    B, S = cell.global_batch, cell.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    if cell.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.bfloat16)
+        bspecs = batch_specs(batch, multi_pod=multi_pod)
+        if fsdp:
+            # ZeRO-3: optimizer state lives on the dp-sharded param slices
+            opt = jax.eval_shape(adamw.init_state, params_g)
+            ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        else:
+            params_loc = localize(params_g, pspecs, mesh)
+            opt = jax.eval_shape(
+                lambda p: adamw.zero_init(p, dp, ms), params_loc)
+            ospecs = {"m": jax.tree.map(lambda _: P("model", dp_axes),
+                                        opt["m"]),
+                      "v": jax.tree.map(lambda _: P("model", dp_axes),
+                                        opt["v"]),
+                      "step": P()}
+        n_micro = cfg.n_micro_override or max(1, B // dp)
+        args = (_sharded(params_g, pspecs, mesh),
+                _sharded(opt, ospecs, mesh),
+                _sharded(batch, bspecs, mesh))
+        return CellInputs("train", args, (pspecs, ospecs, bspecs),
+                          (pspecs, ospecs, _metrics_spec(model)),
+                          n_micro, seq_shard, param_mode)
+
+    if cell.kind == "prefill":
+        batch = {"tokens": tok}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.bfloat16)
+        bspecs = batch_specs(batch, multi_pod=multi_pod)
+        from repro.core import report as ftreport
+        out_specs = (P(dp_axes, None), {k: P() for k in ftreport.FIELDS})
+        args = (_sharded(params_g, pspecs, mesh),
+                _sharded(batch, bspecs, mesh))
+        return CellInputs("prefill", args, (pspecs, bspecs), out_specs,
+                          1, seq_shard, param_mode)
+
+    # decode / long: serve_step on a seq_len cache
+    b_loc = B if seq_shard else B // dp
+    s_loc = S // dp if seq_shard else S
+    extras_loc = None
+    extras_spec = None
+    if cfg.family == "encdec":
+        # per-device frame embeddings, replicated spec: local == global
+        extras_loc = {"src_embeds": jax.ShapeDtypeStruct(
+            (b_loc, cfg.src_seq, cfg.d_model), jnp.bfloat16)}
+        extras_spec = {"src_embeds": P(None, None, None)}
+    # init_cache may contain collectives (encdec prefill): eval its shapes
+    # under an abstract shard_map; replicated out_specs make the reported
+    # global shapes equal the LOCAL per-device cache shapes.
+    cache_eval = jax.shard_map(
+        lambda p, e: model.init_cache(p, b_loc, s_loc, ctx, e),
+        mesh=mesh, in_specs=(pspecs, extras_spec), out_specs=P(),
+        check_vma=False)
+    cache_loc = jax.eval_shape(cache_eval, params_g, extras_loc)
+    cspecs = cache_specs(cache_loc, multi_pod=multi_pod,
+                         seq_shard=seq_shard)
+    cache_g = globalize(cache_loc, cspecs, mesh)
+
+    tok1 = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tspec = P(None, None) if seq_shard else P(dp_axes, None)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    from repro.core import report as ftreport
+    out_specs = (tspec, cspecs, {k: P() for k in ftreport.FIELDS})
+    args = (_sharded(params_g, pspecs, mesh),
+            _sharded(cache_g, cspecs, mesh),
+            _sharded(tok1, tspec, mesh),
+            pos)
+    return CellInputs("decode", args, (pspecs, cspecs, tspec, P()),
+                      out_specs, 1, seq_shard, param_mode)

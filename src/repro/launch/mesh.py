@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run pins the device count via XLA_FLAGS
+before any jax import; tests and benches see the real single device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod ("data", "model"); 2 pods adds a "pod" axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(multi_pod: bool):
+    """(data_axes tuple, model axis name) as the models' ShardCtx wants."""
+    return (("pod", "data") if multi_pod else ("data",)), "model"
+
+
+def smoke_mesh():
+    """1x1 mesh binding the same axis names for single-device tests."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,211 @@
+"""Step-function builders: shard_map'd train / prefill / serve programs.
+
+These are the programs the dry-run lowers and the drivers execute:
+
+  train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+      microbatched gradient accumulation (scan) -> ZeRO-1 AdamW update.
+      Per-layer remat + per-microbatch scan bound the activation memory the
+      dry-run's memory_analysis certifies.
+
+  prefill_step(params, batch) -> (last_logits, report)
+  serve_step(params, cache, tokens, pos) -> (next_tokens, cache, report)
+      greedy sampling over the vocab-sharded head is done in-SPMD (local
+      argmax + pmax/pmin combine: O(1) collective bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.core import report as ftreport
+from repro.core.ft_config import FTPolicy, OFF
+from repro.models import build_model
+from repro.models.common import ShardCtx, logits_local
+from repro.models.lm import Model
+from repro.models.specs import batch_specs, cache_specs, param_specs
+from repro.optim import adamw
+from repro.launch.mesh import mesh_axes
+
+
+def make_ctx(*, multi_pod: bool, data_size: int, model_size: int,
+             policy: FTPolicy = OFF, seq_shard: bool = False,
+             param_mode: str = None) -> ShardCtx:
+    dp_axes, m_axis = mesh_axes(multi_pod)
+    return ShardCtx(data_axis=dp_axes, model_axis=m_axis,
+                    data_size=data_size, model_size=model_size,
+                    policy=policy, seq_shard=seq_shard,
+                    param_mode=param_mode)
+
+
+# -- train --------------------------------------------------------------------
+def _reduce_replicated_grads(grads, pspecs, ctx: ShardCtx):
+    """Model-axis psum for grads of params replicated over "model".
+
+    shard_map AD yields per-shard partials; for a parameter that exists on
+    every model shard the total derivative is the sum of partials (without
+    this, replicas would apply different updates and drift).
+    """
+    def has_model(spec):
+        for entry in spec:
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            if "model" in axes:
+                return True
+        return False
+
+    def one(g, spec):
+        return g if has_model(spec) else lax.psum(g, ctx.model_axis)
+
+    return jax.tree.map(one, grads, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
+                    *, n_micro: int = 1, zero: bool = True,
+                    pspecs=None):
+    """Returns the *inside-shard_map* train body (callers shard_map it).
+
+    Optimizer modes: ZeRO-1 (zero=True, default), FSDP/ZeRO-3 when the
+    arch config sets param_shard="fsdp" (optimizer state lives on the
+    dp-sharded param slices; no optimizer collectives at all), or plain
+    replicated-state AdamW.
+    """
+    fsdp = model.cfg.param_shard == "fsdp"
+    if fsdp:
+        zero = False
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, mb):
+            loss, metrics = model.train_loss(p, mb, ctx)
+            return loss, metrics
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def resh(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(resh, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                g_acc, loss_acc, met_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                met_acc = jax.tree.map(lambda a, b_: a + b_, met_acc,
+                                       metrics)
+                return (g_acc, loss_acc + loss, met_acc), None
+
+            # build a zero metrics tree by tracing one microbatch shape
+            sample_metrics = jax.eval_shape(
+                lambda p, mb: loss_fn(p, mb)[1], params,
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+                    x.shape[1:], x.dtype), micro))
+            met0 = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), sample_metrics)
+            (grads, loss, metrics), _ = lax.scan(
+                body, (zero_g, jnp.zeros(()), met0), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = jax.tree.map(lambda m: m / n_micro
+                                   if m.dtype.kind == "f" else m, metrics)
+
+        if pspecs is not None:
+            grads = _reduce_replicated_grads(grads, pspecs, ctx)
+        if zero:
+            cdt = jnp.bfloat16 if model.cfg.zero_collective_dtype == "bf16" \
+                else jnp.float32
+            params2, opt2, rep = adamw.zero_apply(
+                params, grads, opt_state, opt_cfg, ctx,
+                policy=ctx.policy, dp_size=ctx.data_size,
+                collective_dtype=cdt)
+        elif fsdp:
+            # FSDP leaves arrive dp-summed via the all_gather transpose;
+            # replicated leaves still need the explicit dp psum.
+            from repro.models.specs import fsdp_dims_unstacked
+            dims = fsdp_dims_unstacked(params)
+            grads = jax.tree.map(
+                lambda g, d: g if d is not None
+                else lax.psum(g, ctx.data_axis), grads, dims)
+            # grad norm: dp-sharded leaves sum over (data, model); the
+            # replicated leaves only over model (no double count)
+            ss_sh = sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g, d in zip(jax.tree.leaves(grads),
+                                        jax.tree.leaves(dims))
+                        if d is not None)
+            ss_rp = sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g, d in zip(jax.tree.leaves(grads),
+                                        jax.tree.leaves(dims))
+                        if d is None)
+            gn = jnp.sqrt(
+                lax.psum(jnp.asarray(ss_sh),
+                         ctx.data_axis + (ctx.model_axis,))
+                + lax.psum(jnp.asarray(ss_rp), ctx.model_axis))
+            params2, opt2, rep = adamw.apply_updates(
+                params, grads, opt_state, opt_cfg,
+                policy=ctx.policy, ctx=None, grad_norm=gn)
+        else:
+            grads = lax.psum(grads, ctx.data_axis)  # partials carry 1/dp
+            params2, opt2, rep = adamw.apply_updates(
+                params, grads, opt_state, opt_cfg,
+                policy=ctx.policy, ctx=ctx)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["report"] = ftreport.merge(metrics.get("report"), rep)
+        return params2, opt2, metrics
+
+    return train_step
+
+
+# -- serve --------------------------------------------------------------------
+def _greedy_pick(logits_loc: jax.Array, ctx: ShardCtx) -> jax.Array:
+    """argmax over the vocab-sharded head; O(1) collective bytes."""
+    v_loc = logits_loc.shape[-1]
+    start = lax.axis_index(ctx.model_axis) * v_loc
+    loc_max = jnp.max(logits_loc, axis=-1)
+    loc_idx = jnp.argmax(logits_loc, axis=-1) + start
+    g_max = lax.pmax(loc_max, ctx.model_axis)
+    cand = jnp.where(loc_max >= g_max, loc_idx, jnp.iinfo(jnp.int32).max)
+    return lax.pmin(cand.astype(jnp.int32), ctx.model_axis)
+
+
+def make_serve_step(model: Model, ctx: ShardCtx):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache, rep = model.decode_step(params, cache, tokens, pos,
+                                               ctx)
+        nxt = _greedy_pick(logits[:, -1, :], ctx)[:, None]     # (B_loc, 1)
+        rep = jax.tree.map(
+            lambda x: lax.psum(x, ctx.data_axis + (ctx.model_axis,)), rep)
+        return nxt, cache, rep
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, ctx: ShardCtx):
+    from repro.models.lm import _gather
+
+    def prefill_step(params, batch):
+        if model.cfg.family == "encdec":
+            x, _, rep = model.forward(params, batch, ctx)
+        else:
+            x, _, rep = model.forward(params, batch["tokens"], ctx)
+        emb = _gather({"emb": params["emb"]}, model.cfg, ctx)["emb"]
+        logits = logits_local(x[:, -1:, :], emb)
+        nxt = _greedy_pick(logits[:, -1, :], ctx)[:, None]
+        rep = jax.tree.map(
+            lambda v: lax.psum(v, ctx.data_axis + (ctx.model_axis,)), rep)
+        return nxt, rep
+
+    return prefill_step

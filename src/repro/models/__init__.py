@@ -1,0 +1,4 @@
+"""Model zoo: the 10 assigned architectures on the FT-BLAS substrate."""
+from repro.models.common import ShardCtx
+from repro.models.lm import Model, build_model
+from repro.models.specs import batch_specs, cache_specs, param_specs

@@ -1,0 +1,369 @@
+"""GQA attention under tensor parallelism, with FT-protected projections.
+
+Sharding (inside shard_map):
+  - query heads sharded over "model" (H_loc = H / model_size);
+  - KV heads *expanded by repetition* to exactly model_size when
+    n_kv < model_size (Megatron GQA trick: each device owns one KV head's
+    worth of compute; the extra projection FLOPs are <0.1% - DESIGN.md 5);
+  - out-projection is row-parallel: one psum per attention block.
+
+Attention itself is chunked (online-softmax scan over KV blocks): at 32k
+prefill a materialized S x S score tensor would be terabytes; the chunked
+form bounds activation memory to (q_chunk x kv_chunk) per head and is what
+the dry-run memory analysis certifies.
+
+FT: the four projections route through ft_dense (ABFT).  Score/context
+inner products are GEMM-shaped and protectable via policy
+``protect_attention`` (vmapped unfused ABFT); the default protects
+projections only - at trainable sequence lengths they carry most FLOPs, and
+each chunk epilogue adds O(S) overhead (paper's verification-interval
+trade-off, Sec. 2.1).
+
+Decode: one-token step against a (B_loc, S_max, Hkv_loc, dh) cache; the
+long-context mode (ctx.seq_shard) shards the cache over the *data* axis and
+merges partial softmax stats with a flash-decode psum combine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.abft import ft_matmul_batched
+from repro.core.ft_dense import ft_dense
+from repro.models.common import (ShardCtx, apply_rope, dense_init, rms_norm,
+                                 split_keys)
+
+NEG_INF = -1e30
+
+
+def _dp_index(ctx) -> jax.Array:
+    """Linearized index over the (possibly multi-axis) data axes."""
+    idx = jnp.zeros((), jnp.int32)
+    for ax in ctx.data_axis:
+        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+    return idx
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    causal: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    cache_dtype: str = "bf16"    # bf16 | int8 (hillclimb H2: halves the
+                                 # decode HBM-dominant KV traffic)
+
+
+def _quantize_kv(x):
+    """Per-(token, head) symmetric int8: scale = amax / 127."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def kv_expanded(cfg: AttnCfg, model_size: int) -> int:
+    """KV heads after expansion so they shard evenly over `model`."""
+    if cfg.n_kv >= model_size:
+        assert cfg.n_kv % model_size == 0, (cfg.n_kv, model_size)
+        return cfg.n_kv
+    assert model_size % cfg.n_kv == 0, (cfg.n_kv, model_size)
+    return model_size
+
+
+def attn_init(key, cfg: AttnCfg, dtype) -> Dict[str, Any]:
+    """Global (unsharded) parameter shapes; launch shards head dims."""
+    kq, kk, kv, ko, kg = split_keys(key, 5)
+    d, dh = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * dh, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv * dh, dtype),
+        "wv": dense_init(kv, d, cfg.n_kv * dh, dtype),
+        "wo": dense_init(ko, cfg.n_heads * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_gamma"] = jnp.ones((dh,), dtype)
+        p["k_gamma"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def expand_kv_params(p: Dict[str, Any], cfg: AttnCfg,
+                     model_size: int) -> Dict[str, Any]:
+    """Tile KV projection columns so each model shard owns one head copy."""
+    nk_eff = kv_expanded(cfg, model_size)
+    if nk_eff == cfg.n_kv:
+        return p
+    rep = nk_eff // cfg.n_kv
+    d, dh = cfg.d_model, cfg.head_dim
+
+    def expand(w):
+        # each original head repeated `rep` times CONSECUTIVELY so that
+        # shard m's q heads [m*H_loc:...] land on their own group's KV head
+        return jnp.repeat(w.reshape(d, cfg.n_kv, dh), rep, axis=1
+                          ).reshape(d, nk_eff * dh)
+
+    q = dict(p)
+    q["wk"], q["wv"] = expand(p["wk"]), expand(p["wv"])
+    return q
+
+
+def _heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def _qk_normalize(q, k, p, ctx):
+    reps = []
+    if "q_gamma" in p:
+        qn, r1 = rms_norm(q, p["q_gamma"], ctx)
+        kn, r2 = rms_norm(k, p["k_gamma"], ctx)
+        return qn, kn, [r1, r2]
+    return q, k, reps
+
+
+def _scores_ctx(q, k, v, mask, policy, protect):
+    """One chunk pair: softmax(q k^T / sqrt(dh) + mask) v with running stats.
+
+    q: (B, qc, H, dh) k/v: (B, kc, H, dh) mask: (qc, kc) or None.
+    Returns unnormalized (acc, m, l) for online-softmax merging + reports.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    rep = ftreport.empty_report()
+    if protect:
+        qb = jnp.moveaxis(q, 2, 1).astype(jnp.float32)      # (B,H,qc,dh)
+        kb = jnp.moveaxis(k, 2, 1).astype(jnp.float32)
+        s, rep1 = ft_matmul_batched(qb, jnp.swapaxes(kb, -1, -2),
+                                    policy=policy.replace(fused=False))
+        rep = ftreport.merge(rep, rep1)
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32))
+    s = s * scale
+    if mask is not None:
+        s = s + mask[None, None, :, :]
+    m = jnp.max(s, axis=-1)                                  # (B,H,qc)
+    e = jnp.exp(s - m[..., None])
+    l = jnp.sum(e, axis=-1)                                  # (B,H,qc)
+    if protect:
+        vb = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
+        acc, rep2 = ft_matmul_batched(e, vb,
+                                      policy=policy.replace(fused=False))
+        rep = ftreport.merge(rep, rep2)
+    else:
+        acc = jnp.einsum("bhqk,bkhd->bhqd", e, v.astype(jnp.float32))
+    return acc, m, l, rep
+
+
+def chunked_attention(q, k, v, cfg: AttnCfg, ctx: ShardCtx, *,
+                      protect: bool = False) -> Tuple[jax.Array, dict]:
+    """Online-softmax attention over KV chunks.
+
+    q: (B, S_q, H, dh); k, v: (B, S_kv, H, dh) (S_kv != S_q for cross-attn).
+    """
+    B, S, H, dh = q.shape
+    S_kv = k.shape[1]
+    qc = min(cfg.q_chunk, S)
+    kc = min(cfg.kv_chunk, S_kv)
+    assert S % qc == 0 and S_kv % kc == 0
+    nq, nk = S // qc, S_kv // kc
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, H, dh), 1, 0)     # (nq,B,qc,H,dh)
+    ks = jnp.moveaxis(k.reshape(B, nk, kc, H, dh), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kc, H, dh), 1, 0)
+    rows = jnp.arange(qc)
+    cols = jnp.arange(kc)
+
+    def q_step(carry_rep, qi_blk):
+        qi, qblk = qi_blk
+
+        def kv_step(carry, ki_blk):
+            ki, kblk, vblk = ki_blk
+            acc, m, l, rep = carry
+            if cfg.causal:
+                qpos = qi * qc + rows
+                kpos = ki * kc + cols
+                mask = jnp.where(qpos[:, None] >= kpos[None, :], 0.0, NEG_INF)
+            else:
+                mask = None
+            skip = cfg.causal and False  # masks handle it; keep full scan
+            a2, m2, l2, rep2 = _scores_ctx(qblk, kblk, vblk, mask,
+                                           ctx.policy, protect)
+            m_new = jnp.maximum(m, m2)
+            c1 = jnp.exp(m - m_new)
+            c2 = jnp.exp(m2 - m_new)
+            acc = acc * c1[..., None] + a2 * c2[..., None]
+            l = l * c1 + l2 * c2
+            return (acc, m_new, l, ftreport.merge(rep, rep2)), None
+
+        init = (jnp.zeros((B, H, qc, dh), jnp.float32),
+                jnp.full((B, H, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, qc), jnp.float32),
+                ftreport.empty_report())
+        (acc, m, l, rep), _ = lax.scan(
+            kv_step, init, (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return ftreport.merge(carry_rep, rep), jnp.moveaxis(out, 1, 2)
+
+    rep, outs = lax.scan(q_step, ftreport.empty_report(),
+                         (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, dh)      # (B,S,H,dh)
+    return out.astype(q.dtype), rep
+
+
+def mha(p: Dict[str, Any], x: jax.Array, positions: jax.Array,
+        cfg: AttnCfg, ctx: ShardCtx, *,
+        memory: Optional[jax.Array] = None,
+        protect_attention: bool = False) -> Tuple[jax.Array, dict]:
+    """Full attention block (training/prefill).  x: (B, S, D) local batch.
+
+    ``memory``: encoder output for cross-attention (keys/values from it).
+    """
+    B, S, D = x.shape
+    H_loc = cfg.n_heads // ctx.model_size
+    nkv_loc = kv_expanded(cfg, ctx.model_size) // ctx.model_size
+    dh = cfg.head_dim
+    src = memory if memory is not None else x
+
+    q, r1 = ft_dense(x, p["wq"], policy=ctx.policy)
+    k, r2 = ft_dense(src, p["wk"], policy=ctx.policy)
+    v, r3 = ft_dense(src, p["wv"], policy=ctx.policy)
+    q = _heads(q, H_loc, dh)
+    k = _heads(k, nkv_loc, dh)
+    v = _heads(v, nkv_loc, dh)
+    q, k, qk_reps = _qk_normalize(q, k, p, ctx)
+    if memory is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    group = H_loc // nkv_loc
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    o, r4 = chunked_attention(q, k, v,
+                              dataclasses.replace(cfg,
+                                                  causal=memory is None
+                                                  and cfg.causal),
+                              ctx, protect=protect_attention)
+    o = o.reshape(B, S, H_loc * dh)
+    y, r5 = ft_dense(o, p["wo"], policy=ctx.policy)
+    y = lax.psum(y, ctx.model_axis)                          # row-parallel
+    return y, ftreport.merge(r1, r2, r3, r4, r5, *qk_reps)
+
+
+# -- decode -------------------------------------------------------------------
+def init_cache(cfg: AttnCfg, batch_loc: int, s_max_loc: int,
+               ctx: ShardCtx, dtype) -> Dict[str, jax.Array]:
+    nkv_loc = kv_expanded(cfg, ctx.model_size) // ctx.model_size
+    shape = (batch_loc, s_max_loc, nkv_loc, cfg.head_dim)
+    if cfg.cache_dtype == "int8":
+        sshape = (batch_loc, s_max_loc, nkv_loc, 1)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "kscale": jnp.zeros(sshape, jnp.float32),
+                "vscale": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def mha_decode(p: Dict[str, Any], x: jax.Array, pos: jax.Array,
+               cache: Dict[str, jax.Array], cfg: AttnCfg, ctx: ShardCtx
+               ) -> Tuple[jax.Array, Dict[str, jax.Array], dict]:
+    """One-token decode.  x: (B_loc, 1, D); pos: scalar current position.
+
+    Standard mode: cache fully local in sequence (batch over data).
+    seq_shard mode (long-context, batch=1): cache holds this data-shard's
+    S/data_size slice; stats merge with a flash-decode psum combine.
+    """
+    B = x.shape[0]
+    H_loc = cfg.n_heads // ctx.model_size
+    nkv_loc = kv_expanded(cfg, ctx.model_size) // ctx.model_size
+    dh = cfg.head_dim
+
+    q, r1 = ft_dense(x, p["wq"], policy=ctx.policy)
+    k, r2 = ft_dense(x, p["wk"], policy=ctx.policy)
+    v, r3 = ft_dense(x, p["wv"], policy=ctx.policy)
+    q = _heads(q, H_loc, dh)
+    k = _heads(k, nkv_loc, dh)
+    v = _heads(v, nkv_loc, dh)
+    q, k, qk_reps = _qk_normalize(q, k, p, ctx)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+
+    s_loc = cache["k"].shape[1]
+    quant = cfg.cache_dtype == "int8"
+    if quant:
+        k_store, k_sc = _quantize_kv(k)
+        v_store, v_sc = _quantize_kv(v)
+    else:
+        k_store, v_store = k, v
+    if ctx.seq_shard:
+        # position `pos` lives on shard pos // s_loc at offset pos % s_loc
+        shard = _dp_index(ctx)
+        owner = (pos // s_loc) == shard
+        off = pos % s_loc
+
+        def upd(buf, val):
+            val = jnp.where(owner, val, jnp.zeros_like(val))
+            out = lax.dynamic_update_slice(
+                buf, val.astype(buf.dtype), (0, off, 0, 0))
+            return jnp.where(owner, out, buf)
+
+        ck, cv = upd(cache["k"], k_store), upd(cache["v"], v_store)
+        new_cache = {"k": ck, "v": cv}
+        if quant:
+            new_cache["kscale"] = upd(cache["kscale"], k_sc)
+            new_cache["vscale"] = upd(cache["vscale"], v_sc)
+        base = shard * s_loc
+    else:
+        def upd(buf, val):
+            return lax.dynamic_update_slice(buf, val.astype(buf.dtype),
+                                            (0, pos, 0, 0))
+
+        ck, cv = upd(cache["k"], k_store), upd(cache["v"], v_store)
+        new_cache = {"k": ck, "v": cv}
+        if quant:
+            new_cache["kscale"] = upd(cache["kscale"], k_sc)
+            new_cache["vscale"] = upd(cache["vscale"], v_sc)
+        base = 0
+
+    if quant:
+        ck_f = _dequantize_kv(new_cache["k"], new_cache["kscale"])
+        cv_f = _dequantize_kv(new_cache["v"], new_cache["vscale"])
+    else:
+        ck_f, cv_f = ck, cv
+    group = H_loc // nkv_loc
+    kk = jnp.repeat(ck_f, group, axis=2)                     # (B,S_loc,H,dh)
+    vv = jnp.repeat(cv_f, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / jnp.sqrt(dh)
+    valid = (base + jnp.arange(s_loc)) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    e = jnp.exp(s - m[..., None])
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bhqk,bkhd->bhqd", e, vv.astype(jnp.float32))
+    if ctx.seq_shard:
+        # flash-decode combine across the data axes
+        m_g = lax.pmax(m, ctx.data_axis)
+        c = jnp.exp(m - m_g)
+        acc = lax.psum(acc * c[..., None], ctx.data_axis)
+        l = lax.psum(l * c, ctx.data_axis)
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    o = jnp.moveaxis(o, 1, 2).reshape(B, 1, H_loc * dh).astype(x.dtype)
+    y, r4 = ft_dense(o, p["wo"], policy=ctx.policy)
+    y = lax.psum(y, ctx.model_axis)
+    return y, new_cache, ftreport.merge(r1, r2, r3, r4, *qk_reps)

@@ -1,0 +1,184 @@
+"""Shared model substrate: sharding context, norms, rope, embeddings, loss.
+
+All models run inside a ``shard_map`` over mesh axes (["pod"], "data",
+"model") with MANUAL collectives (Megatron-style).  Rationale (DESIGN.md
+Sec. 4): explicit psum/all-to-all keeps the collective schedule deterministic
+for the roofline analysis and gives the FT layer checksummable reduction
+points (ft_psum) - the paper's online-verification idea extended across
+chips.
+
+Activation layout inside shard_map (per device):
+  x        : (B_loc, S, D)        batch over data[,pod]; D never sharded
+  heads    : H_loc = H / model    sharded over "model" (KV heads expanded)
+  ffn      : F_loc = F / model    column->row parallel, one psum per block
+  vocab    : V_loc = V / model    embedding + logits sharded, psum-softmax
+
+FT integration: every projection goes through core.ft_dense (ABFT), every
+norm reduction optionally through DMR; reports are summed up the tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.dmr import dmr_compute, dmr_report
+from repro.core.ft_config import FTPolicy, OFF, default_policy
+from repro.core.ft_dense import ft_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Names/sizes of the mesh axes as seen inside shard_map."""
+    data_axis: Tuple[str, ...] = ("data",)   # may include "pod"
+    model_axis: str = "model"
+    data_size: int = 1
+    model_size: int = 1
+    policy: FTPolicy = OFF
+    # long-context mode: KV/sequence sharded over the data axis (batch==1)
+    seq_shard: bool = False
+    # parameter layout this program was sharded with (None = follow cfg):
+    # "tp" | "fsdp" | "expert_tp"
+    param_mode: str = None
+
+    @property
+    def axis_index(self):
+        return lax.axis_index(self.model_axis)
+
+    def dp_psum(self, x):
+        return lax.psum(x, self.data_axis)
+
+    def mp_psum(self, x):
+        return lax.psum(x, self.model_axis)
+
+
+Params = Dict[str, Any]
+
+
+# -- initialization -----------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# -- norms --------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, ctx: ShardCtx,
+             eps: float = 1e-6) -> Tuple[jax.Array, dict]:
+    """RMSNorm; the sum-of-squares reduction is the paper's DNRM2 -> DMR."""
+    x32 = x.astype(jnp.float32)
+    if ctx.policy.dmr_on:
+        v = dmr_compute(lambda a: jnp.mean(a * a, axis=-1, keepdims=True),
+                        x32, vote=ctx.policy.dmr_vote)
+        ms, rep = v.y, dmr_report(v)
+    else:
+        ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        rep = ftreport.empty_report()
+    y = (x32 * lax.rsqrt(ms + eps)).astype(x.dtype) * gamma
+    return y, rep
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               ctx: ShardCtx, eps: float = 1e-6) -> Tuple[jax.Array, dict]:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    if ctx.policy.dmr_on:
+        v = dmr_compute(
+            lambda a: jnp.mean((a - mu) ** 2, axis=-1, keepdims=True),
+            x32, vote=ctx.policy.dmr_vote)
+        var, rep = v.y, dmr_report(v)
+    else:
+        var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+        rep = ftreport.empty_report()
+    y = ((x32 - mu) * lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+    return y, rep
+
+
+# -- rope ---------------------------------------------------------------------
+def rope_freqs(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- sharded embedding / logits / loss ---------------------------------------
+def embed_init(key, vocab: int, d_model: int, ctx: ShardCtx, dtype):
+    """Embedding table stored vocab-sharded: local shape (V_loc, D)."""
+    v_loc = vocab // ctx.model_size
+    return (jax.random.normal(key, (v_loc, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def embed_lookup(emb_loc: jax.Array, tokens: jax.Array,
+                 ctx: ShardCtx) -> jax.Array:
+    """Vocab-sharded gather: local take + mask + psum over model axis."""
+    v_loc = emb_loc.shape[0]
+    start = lax.axis_index(ctx.model_axis) * v_loc
+    local_ids = jnp.clip(tokens - start, 0, v_loc - 1)
+    hit = ((tokens >= start) & (tokens < start + v_loc))
+    vecs = jnp.take(emb_loc, local_ids, axis=0)
+    vecs = jnp.where(hit[..., None], vecs, jnp.zeros_like(vecs))
+    return lax.psum(vecs, ctx.model_axis)
+
+
+def logits_and_xent(x: jax.Array, emb_loc: jax.Array, labels: jax.Array,
+                    ctx: ShardCtx) -> Tuple[jax.Array, jax.Array]:
+    """LM head on the (tied, vocab-sharded) embedding + sharded softmax-xent.
+
+    Never materializes global logits: max / sum-exp / label pick are each a
+    scalar-per-token psum over the model axis (Megatron sharded loss).
+    Returns (mean_nll, n_tokens).
+    """
+    v_loc = emb_loc.shape[0]
+    start = lax.axis_index(ctx.model_axis) * v_loc
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        emb_loc.astype(jnp.float32))
+    # stability shift only: stop_gradient BEFORE pmax so the collective sees
+    # a zero-tangent input (pmax has no differentiation rule)
+    lmax = lax.pmax(lax.stop_gradient(jnp.max(logits, axis=-1)),
+                    ctx.model_axis)
+    lse = jnp.log(lax.psum(
+        jnp.sum(jnp.exp(logits - lmax[..., None]), axis=-1),
+        ctx.model_axis)) + lmax
+    local_ids = jnp.clip(labels - start, 0, v_loc - 1)
+    hit = (labels >= start) & (labels < start + v_loc)
+    picked = jnp.take_along_axis(
+        logits, local_ids[..., None], axis=-1)[..., 0]
+    label_logit = lax.psum(jnp.where(hit, picked, 0.0), ctx.model_axis)
+    nll = lse - label_logit
+    return nll.mean(), jnp.asarray(nll.size, jnp.float32)
+
+
+def logits_local(x: jax.Array, emb_loc: jax.Array) -> jax.Array:
+    """Vocab-sharded logits for serving (kept sharded; host gathers top-k)."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      emb_loc.astype(jnp.float32))
+
+
+# -- activations --------------------------------------------------------------
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# -- misc ---------------------------------------------------------------------
+def merge_reports(*reps):
+    return ftreport.merge(*reps)

@@ -1,0 +1,213 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: the batch supplies
+precomputed frame embeddings (B, S_src, D) in place of the speech encoder's
+convolutional feature extractor; everything downstream (encoder stack,
+cross-attention, decoder stack, vocab-sharded generation head) is real.
+
+Layer counts: the assignment lists "24L" for an enc-dec model; we read it
+T5-style as 24 encoder + 24 decoder layers (m4t-large has 24+24), recorded
+in configs/seamless_m4t_large_v2.py.
+
+Decode: self-attn KV cache per decoder layer + cross-attention K/V
+precomputed once from the encoder memory at cache init (prefill), the
+standard production serving split.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core import report as ftreport
+from repro.core.ft_dense import ft_dense
+from repro.models import attention as attn_mod
+from repro.models.attention import AttnCfg, NEG_INF
+from repro.models.common import (ShardCtx, embed_init, embed_lookup,
+                                 layer_norm, logits_and_xent, logits_local,
+                                 split_keys)
+from repro.models.ffn import ffn, ffn_init
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.models.lm import Model, _dtype, _norm, remat
+
+
+def _acfg(cfg: ArchConfig, causal: bool) -> AttnCfg:
+    return AttnCfg(d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                   head_dim=cfg.dh, rope_theta=cfg.rope_theta,
+                   causal=causal)
+
+
+def build_encdec(cfg: ArchConfig) -> Model:
+    dtype = _dtype(cfg)
+    norm_apply, norm_init = _norm(cfg)
+    a_enc = _acfg(cfg, causal=False)
+    a_dec = _acfg(cfg, causal=True)
+
+    def enc_layer_init(key, model_size):
+        ks = split_keys(key, 2)
+        return {"ln1": norm_init(cfg.d_model, dtype),
+                "ln2": norm_init(cfg.d_model, dtype),
+                "attn": attn_mod.expand_kv_params(
+                    attn_mod.attn_init(ks[0], a_enc, dtype), a_enc,
+                    model_size),
+                "ffn": ffn_init(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                                gated=cfg.gated_ffn)}
+
+    def dec_layer_init(key, model_size):
+        ks = split_keys(key, 3)
+        return {"ln1": norm_init(cfg.d_model, dtype),
+                "ln2": norm_init(cfg.d_model, dtype),
+                "ln3": norm_init(cfg.d_model, dtype),
+                "self": attn_mod.expand_kv_params(
+                    attn_mod.attn_init(ks[0], a_dec, dtype), a_dec,
+                    model_size),
+                "cross": attn_mod.expand_kv_params(
+                    attn_mod.attn_init(ks[1], a_dec, dtype), a_dec,
+                    model_size),
+                "ffn": ffn_init(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                                gated=cfg.gated_ffn)}
+
+    def init(key, model_size: int = 1):
+        k_emb, k_e, k_d = jax.random.split(key, 3)
+        enc_keys = jnp.stack(split_keys(k_e, cfg.enc_layers))
+        dec_keys = jnp.stack(split_keys(k_d, cfg.dec_layers))
+        enc = jax.vmap(lambda k: enc_layer_init(k, model_size))(enc_keys)
+        dec = jax.vmap(lambda k: dec_layer_init(k, model_size))(dec_keys)
+        emb = embed_init(k_emb, cfg.vocab, cfg.d_model,
+                         ShardCtx(model_size=1), jnp.float32).astype(dtype)
+        return {"emb": emb, "enc": enc, "dec": dec,
+                "ln_enc": norm_init(cfg.d_model, dtype),
+                "ln_f": norm_init(cfg.d_model, dtype)}
+
+    def encode(params, src_embeds, ctx: ShardCtx):
+        B, S, _ = src_embeds.shape
+        x = src_embeds.astype(dtype)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(carry, lp):
+            x, rep = carry
+            h, r1 = norm_apply(x, lp["ln1"], ctx)
+            a, r2 = attn_mod.mha(lp["attn"], h, positions, a_enc, ctx)
+            x = x + checkpoint_name(a, "attn_out")
+            h, r3 = norm_apply(x, lp["ln2"], ctx)
+            f, r4 = ffn(lp["ffn"], h, ctx, act=cfg.act)
+            x = x + checkpoint_name(f, "ffn_out")
+            return (x, ftreport.merge(rep, r1, r2, r3, r4)), None
+
+        (x, rep), _ = lax.scan(remat(body, cfg),
+                               (x, ftreport.empty_report()), params["enc"])
+        x, r_f = norm_apply(x, params["ln_enc"], ctx)
+        return x, ftreport.merge(rep, r_f)
+
+    def decode_stack(params, tokens, memory, ctx: ShardCtx):
+        B, S = tokens.shape
+        x = embed_lookup(params["emb"], tokens, ctx).astype(dtype)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(carry, lp):
+            x, rep = carry
+            h, r1 = norm_apply(x, lp["ln1"], ctx)
+            a, r2 = attn_mod.mha(lp["self"], h, positions, a_dec, ctx)
+            x = x + checkpoint_name(a, "attn_out")
+            h, r3 = norm_apply(x, lp["ln2"], ctx)
+            c, r4 = attn_mod.mha(lp["cross"], h, positions, a_dec, ctx,
+                                 memory=memory)
+            x = x + checkpoint_name(c, "attn_out")
+            h, r5 = norm_apply(x, lp["ln3"], ctx)
+            f, r6 = ffn(lp["ffn"], h, ctx, act=cfg.act)
+            x = x + checkpoint_name(f, "ffn_out")
+            return (x,
+                    ftreport.merge(rep, r1, r2, r3, r4, r5, r6)), None
+
+        (x, rep), _ = lax.scan(remat(body, cfg),
+                               (x, ftreport.empty_report()), params["dec"])
+        x, r_f = norm_apply(x, params["ln_f"], ctx)
+        return x, ftreport.merge(rep, r_f)
+
+    def forward(params, batch, ctx: ShardCtx):
+        memory, r_enc = encode(params, batch["src_embeds"], ctx)
+        x, r_dec = decode_stack(params, batch["tokens"], memory, ctx)
+        return x, jnp.zeros((), jnp.float32), ftreport.merge(r_enc, r_dec)
+
+    def train_loss(params, batch, ctx: ShardCtx):
+        x, _, rep = forward(params, batch, ctx)
+        nll, _ = logits_and_xent(x, params["emb"], batch["labels"], ctx)
+        nll = lax.pmean(nll, ctx.data_axis)
+        rep = jax.tree.map(
+            lambda x: lax.psum(x, ctx.data_axis + (ctx.model_axis,)), rep)
+        return nll, {"nll": nll, "aux": jnp.zeros(()), "report": rep}
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(params, batch_loc: int, s_max_loc: int, ctx: ShardCtx,
+                   extras=None):
+        """extras = {"src_embeds": (B_loc, S_src, D)}: runs the encoder and
+        precomputes cross K/V per decoder layer (the prefill phase)."""
+        memory, _ = encode(params, extras["src_embeds"], ctx)
+        H_loc = cfg.n_heads // ctx.model_size
+        nkv_loc = attn_mod.kv_expanded(a_dec, ctx.model_size) \
+            // ctx.model_size
+
+        def cross_kv(lp):
+            k, _ = ft_dense(memory, lp["cross"]["wk"], policy=ctx.policy)
+            v, _ = ft_dense(memory, lp["cross"]["wv"], policy=ctx.policy)
+            S_src = memory.shape[1]
+            return {"k": k.reshape(batch_loc, S_src, nkv_loc, cfg.dh),
+                    "v": v.reshape(batch_loc, S_src, nkv_loc, cfg.dh)}
+
+        cross = jax.vmap(cross_kv)(params["dec"])
+        self_kv = jax.vmap(
+            lambda _: attn_mod.init_cache(a_dec, batch_loc, s_max_loc, ctx,
+                                          dtype))(jnp.arange(cfg.dec_layers))
+        return {"self": self_kv, "cross": cross}
+
+    def _cross_decode(lp, x, cross_kv, ctx):
+        """One-token cross-attention against precomputed K/V."""
+        B = x.shape[0]
+        H_loc = cfg.n_heads // ctx.model_size
+        nkv_loc = cross_kv["k"].shape[2]
+        dh = cfg.dh
+        q, r1 = ft_dense(x, lp["wq"], policy=ctx.policy)
+        q = q.reshape(B, 1, H_loc, dh)
+        group = H_loc // nkv_loc
+        kk = jnp.repeat(cross_kv["k"], group, axis=2)
+        vv = jnp.repeat(cross_kv["v"], group, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       kk.astype(jnp.float32)) / jnp.sqrt(dh)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, vv.astype(jnp.float32))
+        o = o.reshape(B, 1, H_loc * dh).astype(x.dtype)
+        y, r2 = ft_dense(o, lp["wo"], policy=ctx.policy)
+        return lax.psum(y, ctx.model_axis), ftreport.merge(r1, r2)
+
+    def decode_step(params, cache, tokens, pos, ctx: ShardCtx):
+        x = embed_lookup(params["emb"], tokens, ctx).astype(dtype)
+
+        def body(carry, lp_c):
+            x, rep = carry
+            lp, sc, cc = lp_c
+            h, r1 = norm_apply(x, lp["ln1"], ctx)
+            a, sc, r2 = attn_mod.mha_decode(lp["self"], h, pos, sc,
+                                            a_dec, ctx)
+            x = x + a
+            h, r3 = norm_apply(x, lp["ln2"], ctx)
+            c, r4 = _cross_decode(lp["cross"], h, cc, ctx)
+            x = x + c
+            h, r5 = norm_apply(x, lp["ln3"], ctx)
+            f, r6 = ffn(lp["ffn"], h, ctx, act=cfg.act)
+            x = x + f
+            return (x, ftreport.merge(rep, r1, r2, r3, r4, r5, r6)), sc
+
+        (x, rep), new_self = lax.scan(
+            body, (x, ftreport.empty_report()),
+            (params["dec"], cache["self"], cache["cross"]))
+        x, r_f = norm_apply(x, params["ln_f"], ctx)
+        logits = logits_local(x, params["emb"])
+        return logits, {"self": new_self, "cross": cache["cross"]}, \
+            ftreport.merge(rep, r_f)
+
+    return Model(cfg, init, train_loss, forward, init_cache, decode_step)

@@ -1,0 +1,45 @@
+"""Dense FFN (SwiGLU / GELU) under Megatron column->row parallelism.
+
+Column shards (gate|up fused into one ABFT interval - beyond-paper
+optimization, see core.ft_dense_fused_gate), row-sharded down projection,
+one psum per block.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.ft_dense import ft_dense
+from repro.models.common import ShardCtx, act_fn, dense_init, split_keys
+
+
+def ffn_init(key, d_model: int, d_ff: int, dtype, *,
+             gated: bool = True) -> Dict[str, Any]:
+    ks = split_keys(key, 3)
+    p = {"w_up": dense_init(ks[1], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[2], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[0], d_model, d_ff, dtype)
+    return p
+
+
+def ffn(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx, *,
+        act: str = "silu") -> Tuple[jax.Array, dict]:
+    """x: (B, S, D); w_gate/w_up column-sharded (F_loc), w_down row-sharded."""
+    f = act_fn(act)
+    if "w_gate" in p:
+        # One fused GEMM interval for gate|up: x streamed once.
+        w_cat = jnp.concatenate([p["w_gate"], p["w_up"]], axis=1)
+        gu, r1 = ft_dense(x, w_cat, policy=ctx.policy)
+        f_loc = p["w_gate"].shape[1]
+        h = f(gu[..., :f_loc]) * gu[..., f_loc:]
+    else:
+        h, r1 = ft_dense(x, p["w_up"], policy=ctx.policy)
+        h = f(h)
+    y, r2 = ft_dense(h, p["w_down"], policy=ctx.policy)
+    y = lax.psum(y, ctx.model_axis)
+    return y, ftreport.merge(r1, r2)

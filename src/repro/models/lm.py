@@ -1,0 +1,530 @@
+"""Unified LM assembly for the 10 assigned architectures.
+
+One builder per family, all sharing:
+  - scan-over-layers with stacked params (compile-time control at 94 layers),
+  - pre-norm residual blocks,
+  - vocab-sharded tied embedding + Megatron sharded cross-entropy,
+  - FT report accumulation through the scan,
+  - a decode path with per-family caches (KV / latent / SSM / mLSTM states).
+
+Everything here executes *inside shard_map*; params arrive pre-sliced
+according to models.specs.param_specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.core import report as ftreport
+
+
+def remat(body, cfg: ArchConfig):
+    """Layer remat with the configured policy.
+
+    "save_tp_outputs" keeps every cross-TP psum output resident instead of
+    replaying it in the backward pass: the remat replay then recomputes
+    only device-local math, removing one full set of TP collectives per
+    step (hillclimb H1 in EXPERIMENTS.md Perf).
+    """
+    if cfg.remat_policy == "save_tp_outputs":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "ffn_out")
+        return jax.checkpoint(body, policy=policy)
+    return jax.checkpoint(body)
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import AttnCfg
+from repro.models.common import (ShardCtx, embed_init, embed_lookup,
+                                 layer_norm, logits_and_xent, logits_local,
+                                 rms_norm, split_keys)
+from repro.models.ffn import ffn, ffn_init
+from repro.models.mamba import MambaCfg
+from repro.models.mla import MLACfg
+from repro.models.moe import MoECfg
+from repro.models.specs import fsdp_gather
+from repro.models.xlstm import XLSTMCfg
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable            # (key, model_size) -> global params
+    train_loss: Callable      # (params, batch, ctx) -> (loss, metrics)
+    forward: Callable         # (params, batch, ctx) -> (hidden, report)
+    init_cache: Callable      # (params, batch_loc, s_max_loc, ctx, extras)
+    decode_step: Callable     # (params, cache, tokens, pos, ctx)
+                              #   -> (logits_loc, cache, report)
+
+
+def _dtype(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _attn_cfg(cfg: ArchConfig) -> AttnCfg:
+    return AttnCfg(d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                   head_dim=cfg.dh, rope_theta=cfg.rope_theta,
+                   qk_norm=cfg.qk_norm, cache_dtype=cfg.kv_cache_dtype)
+
+
+def _mla_cfg(cfg: ArchConfig) -> MLACfg:
+    return MLACfg(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                  kv_lora=cfg.kv_lora, dh_nope=cfg.dh_nope,
+                  dh_rope=cfg.dh_rope, dh_v=cfg.dh,
+                  rope_theta=cfg.rope_theta)
+
+
+def _moe_cfg(cfg: ArchConfig) -> MoECfg:
+    return MoECfg(d_model=cfg.d_model, n_experts=cfg.n_experts,
+                  top_k=cfg.top_k, d_ff_expert=cfg.d_ff_expert,
+                  n_shared=cfg.n_shared, capacity_factor=cfg.capacity_factor,
+                  act=cfg.act)
+
+
+def _mamba_cfg(cfg: ArchConfig) -> MambaCfg:
+    return MambaCfg(d_model=cfg.d_model, d_inner=2 * cfg.d_model,
+                    d_state=cfg.d_state, chunk=cfg.ssm_chunk)
+
+
+def _xlstm_cfg(cfg: ArchConfig) -> XLSTMCfg:
+    return XLSTMCfg(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                    chunk=max(cfg.ssm_chunk, 8))
+
+
+def _norm(cfg: ArchConfig):
+    if cfg.norm == "layer":
+        def apply(x, p, ctx):
+            return layer_norm(x, p["gamma"], p["beta"], ctx)
+
+        def init(d, dtype):
+            return {"gamma": jnp.ones((d,), dtype),
+                    "beta": jnp.zeros((d,), dtype)}
+    else:
+        def apply(x, p, ctx):
+            return rms_norm(x, p["gamma"], ctx)
+
+        def init(d, dtype):
+            return {"gamma": jnp.ones((d,), dtype)}
+    return apply, init
+
+
+# =========================== dense / moe / mla LMs ===========================
+def _layer_init(key, cfg: ArchConfig, dtype):
+    """One decoder layer's (unstacked) params."""
+    ks = split_keys(key, 4)
+    _, norm_init = _norm(cfg)
+    p = {"ln1": norm_init(cfg.d_model, dtype),
+         "ln2": norm_init(cfg.d_model, dtype)}
+    if cfg.kv_lora:
+        p["attn"] = mla_mod.mla_init(ks[0], _mla_cfg(cfg), dtype)
+    else:
+        p["attn"] = attn_mod.attn_init(ks[0], _attn_cfg(cfg), dtype)
+    if cfg.n_experts:
+        p["moe"] = moe_mod.moe_init(ks[1], _moe_cfg(cfg), dtype)
+    else:
+        p["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                            gated=cfg.gated_ffn)
+    return p
+
+
+def _gather(p, cfg, ctx):
+    """FSDP: reassemble this layer's dp-split params (ZeRO-3).
+
+    The program's actual layout may differ from cfg.param_shard (serving
+    uses expert-TP instead of FSDP): ctx.param_mode wins when set.
+    """
+    mode = ctx.param_mode or cfg.param_shard
+    return fsdp_gather(p, ctx) if mode == "fsdp" else p
+
+
+def _layer_apply(p, x, positions, cfg: ArchConfig, ctx: ShardCtx):
+    p = _gather(p, cfg, ctx)
+    norm_apply, _ = _norm(cfg)
+    h, r1 = norm_apply(x, p["ln1"], ctx)
+    if cfg.kv_lora:
+        a, r2 = mla_mod.mla(p["attn"], h, positions, _mla_cfg(cfg), ctx)
+    else:
+        a, r2 = attn_mod.mha(p["attn"], h, positions, _attn_cfg(cfg), ctx)
+    x = x + checkpoint_name(a, "attn_out")
+    h, r3 = norm_apply(x, p["ln2"], ctx)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        f, aux, r4 = moe_mod.moe_block(p["moe"], h, _moe_cfg(cfg), ctx)
+    else:
+        f, r4 = ffn(p["ffn"], h, ctx, act=cfg.act)
+    x = x + checkpoint_name(f, "ffn_out")
+    return x, aux, ftreport.merge(r1, r2, r3, r4)
+
+
+def _layer_decode(p, x, pos, cache, cfg: ArchConfig, ctx: ShardCtx):
+    p = _gather(p, cfg, ctx)
+    norm_apply, _ = _norm(cfg)
+    h, r1 = norm_apply(x, p["ln1"], ctx)
+    if cfg.kv_lora:
+        a, cache, r2 = mla_mod.mla_decode(p["attn"], h, pos, cache,
+                                          _mla_cfg(cfg), ctx)
+    else:
+        a, cache, r2 = attn_mod.mha_decode(p["attn"], h, pos, cache,
+                                           _attn_cfg(cfg), ctx)
+    x = x + a
+    h, r3 = norm_apply(x, p["ln2"], ctx)
+    if cfg.n_experts:
+        f, _, r4 = moe_mod.moe_block(p["moe"], h, _moe_cfg(cfg), ctx)
+    else:
+        f, r4 = ffn(p["ffn"], h, ctx, act=cfg.act)
+    x = x + f
+    return x, cache, ftreport.merge(r1, r2, r3, r4)
+
+
+def build_decoder_lm(cfg: ArchConfig) -> Model:
+    """dense | moe | mla families: a uniform stack of decoder layers."""
+    dtype = _dtype(cfg)
+    _, norm_init = _norm(cfg)
+
+    def init(key, model_size: int = 1):
+        k_emb, k_layers = jax.random.split(key)
+        layer_keys = jnp.stack(split_keys(k_layers, cfg.n_layers))
+        ctx0 = ShardCtx(model_size=model_size)
+        layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(layer_keys)
+        if not cfg.kv_lora:
+            layers["attn"] = jax.vmap(
+                lambda p: attn_mod.expand_kv_params(p, _attn_cfg(cfg),
+                                                    model_size))(
+                layers["attn"])
+        emb = embed_init(k_emb, cfg.vocab, cfg.d_model,
+                         ShardCtx(model_size=1), jnp.float32).astype(dtype)
+        return {"emb": emb, "layers": layers,
+                "ln_f": norm_init(cfg.d_model, dtype)}
+
+    def forward(params, tokens, ctx: ShardCtx):
+        B, S = tokens.shape
+        emb = _gather({"emb": params["emb"]}, cfg, ctx)["emb"]
+        x = embed_lookup(emb, tokens, ctx).astype(dtype)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(carry, lp):
+            x, aux, rep = carry
+            x, aux_l, rep_l = _layer_apply(lp, x, positions, cfg, ctx)
+            return (x, aux + aux_l, ftreport.merge(rep, rep_l)), None
+
+        (x, aux, rep), _ = lax.scan(
+            remat(body, cfg), (x, jnp.zeros((), jnp.float32),
+                               ftreport.empty_report()),
+            params["layers"])
+        norm_apply, _ = _norm(cfg)
+        x, r_f = norm_apply(x, params["ln_f"], ctx)
+        return x, aux, ftreport.merge(rep, r_f)
+
+    def train_loss(params, batch, ctx: ShardCtx):
+        x, aux, rep = forward(params, batch["tokens"], ctx)
+        emb = _gather({"emb": params["emb"]}, cfg, ctx)["emb"]
+        nll, _ = logits_and_xent(x, emb, batch["labels"], ctx)
+        nll = lax.pmean(nll, ctx.data_axis)
+        aux = lax.pmean(aux, ctx.data_axis)
+        rep = jax.tree.map(
+            lambda x: lax.psum(x, ctx.data_axis + (ctx.model_axis,)), rep)
+        return nll + aux, {"nll": nll, "aux": aux, "report": rep}
+
+    def init_cache(params, batch_loc: int, s_max_loc: int, ctx: ShardCtx,
+                   extras=None):
+        def one(_):
+            if cfg.kv_lora:
+                return mla_mod.mla_cache_init(_mla_cfg(cfg), batch_loc,
+                                              s_max_loc, dtype)
+            return attn_mod.init_cache(_attn_cfg(cfg), batch_loc, s_max_loc,
+                                       ctx, dtype)
+        return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+    def decode_step(params, cache, tokens, pos, ctx: ShardCtx):
+        B = tokens.shape[0]
+        emb = _gather({"emb": params["emb"]}, cfg, ctx)["emb"]
+        x = embed_lookup(emb, tokens, ctx).astype(dtype)
+
+        def body(carry, lp_cache):
+            x, rep = carry
+            lp, c = lp_cache
+            x, c, rep_l = _layer_decode(lp, x, pos, c, cfg, ctx)
+            return (x, ftreport.merge(rep, rep_l)), c
+
+        (x, rep), new_cache = lax.scan(
+            body, (x, ftreport.empty_report()), (params["layers"], cache))
+        norm_apply, _ = _norm(cfg)
+        x, r_f = norm_apply(x, params["ln_f"], ctx)
+        logits = logits_local(x, emb)
+        return logits, new_cache, ftreport.merge(rep, r_f)
+
+    return Model(cfg, init, train_loss, forward, init_cache, decode_step)
+
+
+# =========================== hybrid (jamba) ==================================
+def build_hybrid_lm(cfg: ArchConfig) -> Model:
+    """Jamba: groups of `group_size` slots (attn/mamba mixers, dense/MoE
+    FFNs per cfg.pattern / cfg.moe_slots), scanned over groups."""
+    dtype = _dtype(cfg)
+    _, norm_init = _norm(cfg)
+    n_groups = cfg.n_layers // cfg.group_size
+    acfg, mcfg, ecfg = _attn_cfg(cfg), _mamba_cfg(cfg), _moe_cfg(cfg)
+
+    def slot_init(key, slot: int, model_size: int):
+        ks = split_keys(key, 3)
+        p = {"ln1": norm_init(cfg.d_model, dtype),
+             "ln2": norm_init(cfg.d_model, dtype)}
+        if cfg.pattern[slot] == "attn":
+            p["mix"] = attn_mod.expand_kv_params(
+                attn_mod.attn_init(ks[0], acfg, dtype), acfg, model_size)
+        else:
+            p["mix"] = mamba_mod.mamba_init(ks[0], mcfg, dtype)
+        if slot in cfg.moe_slots:
+            p["moe"] = moe_mod.moe_init(ks[1], ecfg, dtype)
+        else:
+            p["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        return p
+
+    def init(key, model_size: int = 1):
+        k_emb, k_g = jax.random.split(key)
+        slots = {}
+        for s in range(cfg.group_size):
+            gkeys = jnp.stack(split_keys(jax.random.fold_in(k_g, s),
+                                         n_groups))
+            slots[f"slot{s}"] = jax.vmap(
+                lambda k, s=s: slot_init(k, s, model_size))(gkeys)
+        emb = embed_init(k_emb, cfg.vocab, cfg.d_model,
+                         ShardCtx(model_size=1), jnp.float32).astype(dtype)
+        return {"emb": emb, "groups": slots,
+                "ln_f": norm_init(cfg.d_model, dtype)}
+
+    def group_apply(gp, x, positions, ctx):
+        aux = jnp.zeros((), jnp.float32)
+        rep = ftreport.empty_report()
+        norm_apply, _ = _norm(cfg)
+        for s in range(cfg.group_size):
+            p = gp[f"slot{s}"]
+            h, r1 = norm_apply(x, p["ln1"], ctx)
+            if cfg.pattern[s] == "attn":
+                a, r2 = attn_mod.mha(p["mix"], h, positions, acfg, ctx)
+            else:
+                a, r2 = mamba_mod.mamba_block(p["mix"], h, ctx, mcfg)
+            x = x + checkpoint_name(a, "attn_out")
+            h, r3 = norm_apply(x, p["ln2"], ctx)
+            if s in cfg.moe_slots:
+                f, aux_l, r4 = moe_mod.moe_block(p["moe"], h, ecfg, ctx)
+                aux = aux + aux_l
+            else:
+                f, r4 = ffn(p["ffn"], h, ctx, act=cfg.act)
+            x = x + checkpoint_name(f, "ffn_out")
+            rep = ftreport.merge(rep, r1, r2, r3, r4)
+        return x, aux, rep
+
+    def forward(params, tokens, ctx):
+        B, S = tokens.shape
+        x = embed_lookup(params["emb"], tokens, ctx).astype(dtype)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(carry, gp):
+            x, aux, rep = carry
+            x, aux_g, rep_g = group_apply(gp, x, positions, ctx)
+            return (x, aux + aux_g, ftreport.merge(rep, rep_g)), None
+
+        (x, aux, rep), _ = lax.scan(
+            remat(body, cfg),
+            (x, jnp.zeros((), jnp.float32), ftreport.empty_report()),
+            params["groups"])
+        norm_apply, _ = _norm(cfg)
+        x, r_f = norm_apply(x, params["ln_f"], ctx)
+        return x, aux, ftreport.merge(rep, r_f)
+
+    def train_loss(params, batch, ctx):
+        x, aux, rep = forward(params, batch["tokens"], ctx)
+        nll, _ = logits_and_xent(x, params["emb"], batch["labels"], ctx)
+        nll = lax.pmean(nll, ctx.data_axis)
+        aux = lax.pmean(aux, ctx.data_axis)
+        rep = jax.tree.map(
+            lambda x: lax.psum(x, ctx.data_axis + (ctx.model_axis,)), rep)
+        return nll + aux, {"nll": nll, "aux": aux, "report": rep}
+
+    def init_cache(params, batch_loc, s_max_loc, ctx, extras=None):
+        di_loc = 2 * cfg.d_model // ctx.model_size
+        caches = {}
+        for s in range(cfg.group_size):
+            if cfg.pattern[s] == "attn":
+                one = lambda _: attn_mod.init_cache(acfg, batch_loc,
+                                                    s_max_loc, ctx, dtype)
+            else:
+                one = lambda _: mamba_mod.mamba_cache_init(mcfg, batch_loc,
+                                                           di_loc, dtype)
+            caches[f"slot{s}"] = jax.vmap(one)(jnp.arange(n_groups))
+        return caches
+
+    def decode_step(params, cache, tokens, pos, ctx):
+        x = embed_lookup(params["emb"], tokens, ctx).astype(dtype)
+        rep = ftreport.empty_report()
+        new_cache = {}
+
+        def slot_body(s):
+            def body(carry, gp_c):
+                x, rep = carry
+                gp, c = gp_c
+                p = gp
+                norm_apply, _ = _norm(cfg)
+                h, r1 = norm_apply(x, p["ln1"], ctx)
+                if cfg.pattern[s] == "attn":
+                    a, c, r2 = attn_mod.mha_decode(p["mix"], h, pos, c,
+                                                   acfg, ctx)
+                else:
+                    a, c, r2 = mamba_mod.mamba_decode(p["mix"], h, c, ctx,
+                                                      mcfg)
+                x = x + a
+                h, r3 = norm_apply(x, p["ln2"], ctx)
+                if s in cfg.moe_slots:
+                    f, _, r4 = moe_mod.moe_block(p["moe"], h, ecfg, ctx)
+                else:
+                    f, r4 = ffn(p["ffn"], h, ctx, act=cfg.act)
+                x = x + f
+                return (x, ftreport.merge(rep, r1, r2, r3, r4)), c
+            return body
+
+        # scan over groups, one slot at a time (slots differ structurally,
+        # groups are homogeneous per slot)
+        for s in range(cfg.group_size):
+            (x, rep), new_cache[f"slot{s}"] = lax.scan(
+                slot_body(s), (x, rep),
+                (params["groups"][f"slot{s}"], cache[f"slot{s}"]))
+        norm_apply, _ = _norm(cfg)
+        x, r_f = norm_apply(x, params["ln_f"], ctx)
+        logits = logits_local(x, params["emb"])
+        return logits, new_cache, ftreport.merge(rep, r_f)
+
+    return Model(cfg, init, train_loss, forward, init_cache, decode_step)
+
+
+# =========================== ssm (xlstm) =====================================
+def build_xlstm_lm(cfg: ArchConfig) -> Model:
+    dtype = _dtype(cfg)
+    _, norm_init = _norm(cfg)
+    xcfg = _xlstm_cfg(cfg)
+    n_groups = cfg.n_layers // cfg.group_size
+
+    def slot_init(key, slot, model_size):
+        p = {"ln": norm_init(cfg.d_model, dtype)}
+        if cfg.pattern[slot] == "slstm":
+            p["cell"] = xlstm_mod.slstm_init(key, xcfg, dtype)
+        else:
+            p["cell"] = xlstm_mod.mlstm_init(key, xcfg, dtype, model_size)
+        return p
+
+    def init(key, model_size: int = 1):
+        k_emb, k_g = jax.random.split(key)
+        slots = {}
+        for s in range(cfg.group_size):
+            gkeys = jnp.stack(split_keys(jax.random.fold_in(k_g, s),
+                                         n_groups))
+            slots[f"slot{s}"] = jax.vmap(
+                lambda k, s=s: slot_init(k, s, model_size))(gkeys)
+        emb = embed_init(k_emb, cfg.vocab, cfg.d_model,
+                         ShardCtx(model_size=1), jnp.float32).astype(dtype)
+        return {"emb": emb, "groups": slots,
+                "ln_f": norm_init(cfg.d_model, dtype)}
+
+    def group_apply(gp, x, ctx):
+        rep = ftreport.empty_report()
+        norm_apply, _ = _norm(cfg)
+        for s in range(cfg.group_size):
+            p = gp[f"slot{s}"]
+            h, r1 = norm_apply(x, p["ln"], ctx)
+            if cfg.pattern[s] == "slstm":
+                y, r2 = xlstm_mod.slstm_block(p["cell"], h, ctx, xcfg)
+            else:
+                y, r2 = xlstm_mod.mlstm_block(p["cell"], h, ctx, xcfg)
+            x = x + checkpoint_name(y, "ffn_out")
+            rep = ftreport.merge(rep, r1, r2)
+        return x, rep
+
+    def forward(params, tokens, ctx):
+        x = embed_lookup(params["emb"], tokens, ctx).astype(dtype)
+
+        def body(carry, gp):
+            x, rep = carry
+            x, rep_g = group_apply(gp, x, ctx)
+            return (x, ftreport.merge(rep, rep_g)), None
+
+        (x, rep), _ = lax.scan(remat(body, cfg),
+                               (x, ftreport.empty_report()),
+                               params["groups"])
+        norm_apply, _ = _norm(cfg)
+        x, r_f = norm_apply(x, params["ln_f"], ctx)
+        return x, jnp.zeros((), jnp.float32), ftreport.merge(rep, r_f)
+
+    def train_loss(params, batch, ctx):
+        x, _, rep = forward(params, batch["tokens"], ctx)
+        nll, _ = logits_and_xent(x, params["emb"], batch["labels"], ctx)
+        nll = lax.pmean(nll, ctx.data_axis)
+        rep = jax.tree.map(
+            lambda x: lax.psum(x, ctx.data_axis + (ctx.model_axis,)), rep)
+        return nll, {"nll": nll, "aux": jnp.zeros(()), "report": rep}
+
+    def init_cache(params, batch_loc, s_max_loc, ctx, extras=None):
+        dv_loc = (xcfg.d_inner // xcfg.n_heads) // ctx.model_size
+        caches = {}
+        for s in range(cfg.group_size):
+            if cfg.pattern[s] == "slstm":
+                one = lambda _: xlstm_mod.slstm_cache_init(
+                    xcfg, batch_loc, cfg.d_model)
+            else:
+                one = lambda _: xlstm_mod.mlstm_cache_init(
+                    xcfg, batch_loc, dv_loc)
+            caches[f"slot{s}"] = jax.vmap(one)(jnp.arange(n_groups))
+        return caches
+
+    def decode_step(params, cache, tokens, pos, ctx):
+        x = embed_lookup(params["emb"], tokens, ctx).astype(dtype)
+        rep = ftreport.empty_report()
+        new_cache = {}
+
+        def slot_body(s):
+            def body(carry, gp_c):
+                x, rep = carry
+                gp, c = gp_c
+                norm_apply, _ = _norm(cfg)
+                h, r1 = norm_apply(x, gp["ln"], ctx)
+                if cfg.pattern[s] == "slstm":
+                    y, c, r2 = xlstm_mod.slstm_decode(gp["cell"], h, c, ctx,
+                                                      xcfg)
+                else:
+                    y, c, r2 = xlstm_mod.mlstm_decode(gp["cell"], h, c, ctx,
+                                                      xcfg)
+                return (x + y, ftreport.merge(rep, r1, r2)), c
+            return body
+
+        for s in range(cfg.group_size):
+            (x, rep), new_cache[f"slot{s}"] = lax.scan(
+                slot_body(s), (x, rep),
+                (params["groups"][f"slot{s}"], cache[f"slot{s}"]))
+        norm_apply, _ = _norm(cfg)
+        x, r_f = norm_apply(x, params["ln_f"], ctx)
+        logits = logits_local(x, params["emb"])
+        return logits, new_cache, ftreport.merge(rep, r_f)
+
+    return Model(cfg, init, train_loss, forward, init_cache, decode_step)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm", "mla"):
+        return build_decoder_lm(cfg)
+    if cfg.family == "hybrid":
+        return build_hybrid_lm(cfg)
+    if cfg.family == "ssm":
+        return build_xlstm_lm(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import build_encdec
+        return build_encdec(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

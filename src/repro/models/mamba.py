@@ -1,0 +1,195 @@
+"""Mamba-1 selective-SSM mixer (Jamba's dominant block), TP-sharded.
+
+Arch-applicability (DESIGN.md Sec. 5): the selective scan is NOT a GEMM, so
+the paper's ABFT checksum algebra does not apply to the recurrence - it gets
+the paper's *other* scheme: DMR on the scan combine (policy-gated).  All
+projections remain ABFT-protected GEMMs.
+
+Sharding: d_inner channels sharded over "model" (the scan is independent
+per channel); dt/B/C projections are row-parallel (one small psum); out
+projection row-parallel (one psum).
+
+Memory: the scan runs chunk-sequentially (lax.scan over S/chunk) with an
+associative scan inside each chunk - boundary states only are carried, so
+peak transient is O(B * chunk * d_inner_loc * d_state) and the backward
+recomputes within-chunk (remat), which is what lets 500k-token sequences
+fit (the long_500k cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.dmr import dmr_compute, dmr_report
+from repro.core.ft_dense import ft_dense
+from repro.models.common import ShardCtx, dense_init, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d_model: int
+    d_inner: int           # typically 2 * d_model
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0       # 0 -> ceil(d_model / 16)
+    chunk: int = 32
+
+    @property
+    def dtr(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def mamba_init(key, cfg: MambaCfg, dtype) -> Dict[str, Any]:
+    ks = split_keys(key, 7)
+    di, ds, dtr = cfg.d_inner, cfg.d_state, cfg.dtr
+    return {
+        # x / z branches kept as separate params: a fused (D, 2*di) would
+        # not column-shard correctly over "model" (shards must own matching
+        # x- and z-slices).
+        "w_in_x": dense_init(ks[0], cfg.d_model, di, dtype),
+        "w_in_z": dense_init(ks[5], cfg.d_model, di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_xdbc": dense_init(ks[2], di, dtr + 2 * ds, dtype),
+        "w_dt": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),            # (di, ds)
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv over seq.  x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype) \
+        if state is None else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + b[None, None, :]
+
+
+def _ssm_scan(dA: jax.Array, dBx: jax.Array, h0: jax.Array, cfg: MambaCfg,
+              ctx: ShardCtx) -> Tuple[jax.Array, jax.Array, dict]:
+    """h_t = dA_t * h_{t-1} + dBx_t, chunked.  dA/dBx: (B, S, C, N).
+
+    Returns (h over time (B,S,C,N), final state, report).  The combine is
+    DMR-protected when the policy asks (non-GEMM op -> paper's DMR leg).
+    """
+    B, S, C, N = dA.shape
+    ch = min(cfg.chunk, S)
+    assert S % ch == 0
+    nchunks = S // ch
+    dA_c = jnp.moveaxis(dA.reshape(B, nchunks, ch, C, N), 1, 0)
+    dBx_c = jnp.moveaxis(dBx.reshape(B, nchunks, ch, C, N), 1, 0)
+
+    def combine(a, b):
+        # ((A1, b1) o (A2, b2))(h) = A2*(A1*h + b1) + b2
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, ab):
+        da, dbx = ab
+        accA, accB = lax.associative_scan(combine, (da, dbx), axis=1)
+        h_seq = accA * h[:, None] + accB          # (B, ch, C, N)
+        return h_seq[:, -1], h_seq
+
+    h_fin, h_all = lax.scan(chunk_step, h0, (dA_c, dBx_c))
+    h_all = jnp.moveaxis(h_all, 0, 1).reshape(B, S, C, N)
+    rep = ftreport.empty_report()
+    if ctx.policy.dmr_on:
+        # DMR spot-check on the final state (duplicate the last combine).
+        v = dmr_compute(lambda a, b: a * h_fin + b,
+                        dA_c[-1][:, -1], dBx_c[-1][:, -1],
+                        vote=ctx.policy.dmr_vote)
+        rep = dmr_report(v)
+    return h_all, h_fin, rep
+
+
+def mamba_block(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx,
+                cfg: MambaCfg) -> Tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (B, S, D).  d_inner sharded over model."""
+    B, S, D = x.shape
+    di_loc = p["conv_b"].shape[0]          # local channels
+    ds, dtr = cfg.d_state, cfg.dtr
+
+    w_in = jnp.concatenate([p["w_in_x"], p["w_in_z"]], axis=1)
+    xz, r1 = ft_dense(x, w_in, policy=ctx.policy)          # one ABFT interval
+    xs, z = jnp.split(xz, 2, axis=-1)                      # (B,S,di_loc) each
+    xs = _causal_conv(xs, p["conv_w"], p["conv_b"])
+    xs = jax.nn.silu(xs)
+
+    # dt/B/C from sharded channels: row-parallel + psum (small output).
+    dbc, r2 = ft_dense(xs, p["w_xdbc"], policy=ctx.policy)
+    dbc = lax.psum(dbc, ctx.model_axis)
+    dt_low, B_t, C_t = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt, r3 = ft_dense(dt_low, p["w_dt"], policy=ctx.policy)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])    # (B,S,di_loc)
+
+    A = -jnp.exp(p["A_log"])                               # (di_loc, ds)
+    dA = jnp.exp(dt[..., None] * A[None, None])            # (B,S,di_loc,ds)
+    dBx = (dt * xs.astype(jnp.float32))[..., None] \
+        * B_t[..., None, :].astype(jnp.float32)
+    h0 = jnp.zeros((B, di_loc, ds), jnp.float32)
+    h_all, _, r4 = _ssm_scan(dA, dBx, h0, cfg, ctx)
+
+    y = jnp.einsum("bscn,bsn->bsc", h_all, C_t.astype(jnp.float32))
+    y = y + p["D"][None, None, :] * xs.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out, r5 = ft_dense(y, p["w_out"], policy=ctx.policy)
+    out = lax.psum(out, ctx.model_axis)
+    return out, ftreport.merge(r1, r2, r3, r4, r5)
+
+
+# -- decode -------------------------------------------------------------------
+def mamba_cache_init(cfg: MambaCfg, batch_loc: int, di_loc: int, dtype):
+    return {"conv": jnp.zeros((batch_loc, cfg.d_conv - 1, di_loc), dtype),
+            "ssm": jnp.zeros((batch_loc, di_loc, cfg.d_state), jnp.float32)}
+
+
+def mamba_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
+                 ctx: ShardCtx, cfg: MambaCfg
+                 ) -> Tuple[jax.Array, Dict[str, Any], dict]:
+    """One-token step.  x: (B, 1, D)."""
+    B = x.shape[0]
+    di_loc = p["conv_b"].shape[0]
+    ds, dtr = cfg.d_state, cfg.dtr
+
+    w_in = jnp.concatenate([p["w_in_x"], p["w_in_z"]], axis=1)
+    xz, r1 = ft_dense(x, w_in, policy=ctx.policy)
+    xs, z = jnp.split(xz, 2, axis=-1)                      # (B,1,di_loc)
+    conv_in = jnp.concatenate([cache["conv"], xs], axis=1)  # (B,K,di_loc)
+    new_conv = conv_in[:, 1:]
+    xs = (jnp.einsum("bkc,kc->bc", conv_in.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32))
+          + p["conv_b"].astype(jnp.float32))[:, None, :]
+    xs = jax.nn.silu(xs).astype(x.dtype)
+
+    dbc, r2 = ft_dense(xs, p["w_xdbc"], policy=ctx.policy)
+    dbc = lax.psum(dbc, ctx.model_axis)
+    dt_low, B_t, C_t = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt, r3 = ft_dense(dt_low, p["w_dt"], policy=ctx.policy)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])              # (B,di_loc,ds)
+    dBx = (dt[:, 0] * xs[:, 0].astype(jnp.float32))[..., None] \
+        * B_t[:, 0, None, :].astype(jnp.float32)
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bcn,bn->bc", h, C_t[:, 0].astype(jnp.float32))
+    y = y + p["D"][None] * xs[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None, :]
+    out, r4 = ft_dense(y.astype(x.dtype), p["w_out"], policy=ctx.policy)
+    out = lax.psum(out, ctx.model_axis)
+    return out, {"conv": new_conv, "ssm": h}, ftreport.merge(r1, r2, r3, r4)

@@ -1,0 +1,162 @@
+"""Multi-head Latent Attention (DeepSeek-V2) under TP + FT.
+
+MLA compresses KV into a small latent c_kv (kv_lora=512) plus one shared
+RoPE key (64); per-head keys/values are decompressed on the fly.  The
+decode cache stores only (c_kv | k_rope) = 576 floats/token - replicated
+over the model axis (each shard decompresses its own heads), which is the
+memory win MLA exists for, visible in the decode-cell rooflines.
+
+Sharding: heads over "model" (16 heads / 16 shards); w_dkv & w_krope
+replicated (shared latent); per-head decompression and output projections
+sharded on the head dim; out-proj row-parallel (one psum).
+
+FT: every projection (compress, decompress, q, out) is an ABFT GEMM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.ft_dense import ft_dense
+from repro.models.attention import NEG_INF, chunked_attention
+from repro.models.common import ShardCtx, apply_rope, dense_init, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    d_model: int
+    n_heads: int
+    kv_lora: int = 512
+    dh_nope: int = 128
+    dh_rope: int = 64
+    dh_v: int = 128
+    rope_theta: float = 10000.0
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+    @property
+    def dh_qk(self) -> int:
+        return self.dh_nope + self.dh_rope
+
+
+def mla_init(key, cfg: MLACfg, dtype) -> Dict[str, Any]:
+    ks = split_keys(key, 6)
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        "w_q": dense_init(ks[0], d, H * cfg.dh_qk, dtype),       # head-shard
+        "w_dkv": dense_init(ks[1], d, cfg.kv_lora, dtype),       # replicated
+        "w_krope": dense_init(ks[2], d, cfg.dh_rope, dtype),     # replicated
+        "w_uk": dense_init(ks[3], cfg.kv_lora, H * cfg.dh_nope, dtype),
+        "w_uv": dense_init(ks[4], cfg.kv_lora, H * cfg.dh_v, dtype),
+        "w_o": dense_init(ks[5], H * cfg.dh_v, d, dtype),        # row-shard
+    }
+
+
+def _project(p, x, positions, cfg: MLACfg, ctx: ShardCtx):
+    """Shared q / latent / decompression path.  Returns q,k,v heads+reports."""
+    B, S, D = x.shape
+    H_loc = cfg.n_heads // ctx.model_size
+
+    q, r1 = ft_dense(x, p["w_q"], policy=ctx.policy)
+    q = q.reshape(B, S, H_loc, cfg.dh_qk)
+    q_nope, q_rope = jnp.split(q, [cfg.dh_nope], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv, r2 = ft_dense(x, p["w_dkv"], policy=ctx.policy)        # (B,S,lora)
+    k_rope, r3 = ft_dense(x, p["w_krope"], policy=ctx.policy)    # (B,S,dr)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)                          # (B,S,1,dr)
+
+    k_nope, r4 = ft_dense(c_kv, p["w_uk"], policy=ctx.policy)
+    v, r5 = ft_dense(c_kv, p["w_uv"], policy=ctx.policy)
+    k_nope = k_nope.reshape(B, S, H_loc, cfg.dh_nope)
+    v = v.reshape(B, S, H_loc, cfg.dh_v)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (cfg.dh_rope,))],
+        axis=-1)
+    reps = ftreport.merge(r1, r2, r3, r4, r5)
+    return q_full, k_full, v, c_kv, k_rope, reps
+
+
+def mla(p: Dict[str, Any], x: jax.Array, positions: jax.Array,
+        cfg: MLACfg, ctx: ShardCtx, *,
+        protect_attention: bool = False) -> Tuple[jax.Array, dict]:
+    from repro.models.attention import AttnCfg
+    B, S, D = x.shape
+    H_loc = cfg.n_heads // ctx.model_size
+    q, k, v, _, _, rep = _project(p, x, positions, cfg, ctx)
+    acfg = AttnCfg(d_model=D, n_heads=cfg.n_heads, n_kv=cfg.n_heads,
+                   head_dim=cfg.dh_qk, causal=True,
+                   q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    # v has dh_v != dh_qk: pad v to dh_qk for the shared chunked kernel,
+    # slice after (cheap; avoids a second attention implementation).
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, cfg.dh_qk - cfg.dh_v)))
+    o, r_attn = chunked_attention(q, k, v_p, acfg, ctx,
+                                  protect=protect_attention)
+    o = o[..., :cfg.dh_v].reshape(B, S, H_loc * cfg.dh_v)
+    y, r_o = ft_dense(o, p["w_o"], policy=ctx.policy)
+    y = lax.psum(y, ctx.model_axis)
+    return y, ftreport.merge(rep, r_attn, r_o)
+
+
+# -- decode -------------------------------------------------------------------
+def mla_cache_init(cfg: MLACfg, batch_loc: int, s_max: int, dtype):
+    """Latent cache: (B, S, kv_lora + dh_rope) - MLA's 576 floats/token."""
+    return {"ckv": jnp.zeros((batch_loc, s_max, cfg.kv_lora), dtype),
+            "krope": jnp.zeros((batch_loc, s_max, cfg.dh_rope), dtype)}
+
+
+def mla_decode(p: Dict[str, Any], x: jax.Array, pos: jax.Array,
+               cache: Dict[str, Any], cfg: MLACfg, ctx: ShardCtx
+               ) -> Tuple[jax.Array, Dict[str, Any], dict]:
+    B = x.shape[0]
+    H_loc = cfg.n_heads // ctx.model_size
+    posv = jnp.full((B, 1), pos, jnp.int32)
+
+    q, r1 = ft_dense(x, p["w_q"], policy=ctx.policy)
+    q = q.reshape(B, 1, H_loc, cfg.dh_qk)
+    q_nope, q_rope = jnp.split(q, [cfg.dh_nope], axis=-1)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    c_new, r2 = ft_dense(x, p["w_dkv"], policy=ctx.policy)
+    kr_new, r3 = ft_dense(x, p["w_krope"], policy=ctx.policy)
+    kr_new = apply_rope(kr_new[:, :, None, :], posv, cfg.rope_theta
+                        )[:, :, 0, :]
+    ckv = lax.dynamic_update_slice(cache["ckv"],
+                                   c_new.astype(cache["ckv"].dtype),
+                                   (0, pos, 0))
+    krope = lax.dynamic_update_slice(cache["krope"],
+                                     kr_new.astype(cache["krope"].dtype),
+                                     (0, pos, 0))
+
+    # decompress the whole cache for this shard's heads
+    k_nope, r4 = ft_dense(ckv, p["w_uk"], policy=ctx.policy)
+    v, r5 = ft_dense(ckv, p["w_uv"], policy=ctx.policy)
+    S_max = ckv.shape[1]
+    k_nope = k_nope.reshape(B, S_max, H_loc, cfg.dh_nope)
+    v = v.reshape(B, S_max, H_loc, cfg.dh_v)
+    k_rope_pos = krope[:, :, None, :]      # cache already rope'd at write
+    k_full = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(k_rope_pos, (B, S_max, H_loc, cfg.dh_rope))],
+        axis=-1)
+
+    s = jnp.einsum("bqhd,bkhd->bhqk", q_full.astype(jnp.float32),
+                   k_full.astype(jnp.float32)) / jnp.sqrt(cfg.dh_qk)
+    valid = jnp.arange(S_max) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    o = o.reshape(B, 1, H_loc * cfg.dh_v).astype(x.dtype)
+    y, r6 = ft_dense(o, p["w_o"], policy=ctx.policy)
+    y = lax.psum(y, ctx.model_axis)
+    return y, {"ckv": ckv, "krope": krope}, ftreport.merge(
+        r1, r2, r3, r4, r5, r6)

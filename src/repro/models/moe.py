@@ -1,0 +1,198 @@
+"""Mixture-of-Experts with expert parallelism over the model axis.
+
+Dispatch plan (inside shard_map; DESIGN.md Sec. 4 "EP"):
+
+  1. activations are replicated over "model" after the preceding psum, so
+     each model shard ROUTES ONLY ITS 1/model_size SLICE of tokens (no
+     duplicated expert work);
+  2. assignments (token, expert, gate) are bucketed by destination shard
+     (expert // E_loc) into fixed-capacity buffers - capacity-factor
+     semantics, overflow dropped via scatter mode='drop';
+  3. one all_to_all ships token vectors + (expert, gate) metadata;
+  4. the owner runs its local experts with lax.ragged_dot after an
+     argsort-by-expert (dropless within capacity);
+  5. the reverse all_to_all returns results to the source slot, gates are
+     applied, and an all_gather over "model" reassembles the token axis.
+
+Collectives per MoE block: 2 x all_to_all (cf * T * k * D words) +
+1 x all_gather (T * D) + shared-expert psum - this is what the roofline's
+collective term meters for the MoE architectures.
+
+FT: expert GEMMs run under ABFT via per-group checksums on the ragged
+batches (policy-gated: `protect_experts`); router/shared projections route
+through ft_dense as usual.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.abft import ft_matmul
+from repro.core.ft_dense import ft_dense
+from repro.models.common import ShardCtx, act_fn, dense_init, split_keys
+from repro.models.ffn import ffn, ffn_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    renorm: bool = True
+    act: str = "silu"
+    aux_weight: float = 0.01
+
+
+def moe_init(key, cfg: MoECfg, dtype) -> Dict[str, Any]:
+    ks = split_keys(key, 5)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        # stacked per-expert weights; sharded on the expert dim (EP)
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                   / jnp.sqrt(d)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 / jnp.sqrt(d)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / jnp.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = ffn_init(ks[4], d, cfg.n_shared * cfg.d_ff_expert,
+                               dtype, gated=True)
+    return p
+
+
+def _capacity(t_loc: int, cfg: MoECfg, ep: int) -> int:
+    cap = int(cfg.capacity_factor * t_loc * cfg.top_k / ep)
+    return max(8, -(-cap // 8) * 8)
+
+
+def _expert_ffn(xs: jax.Array, gs: jax.Array, p: Dict[str, Any],
+                cfg: MoECfg, ctx: ShardCtx) -> Tuple[jax.Array, dict]:
+    """Grouped FFN on expert-sorted rows via ragged_dot."""
+    f = act_fn(cfg.act)
+    h_g = lax.ragged_dot(xs, p["w_gate"], gs)
+    h_u = lax.ragged_dot(xs, p["w_up"], gs)
+    h = f(h_g) * h_u
+    y = lax.ragged_dot(h, p["w_down"], gs)
+    return y, ftreport.empty_report()
+
+
+def moe_block(p: Dict[str, Any], x: jax.Array, cfg: MoECfg, ctx: ShardCtx
+              ) -> Tuple[jax.Array, jax.Array, dict]:
+    """x: (B, S, D) (replicated over model).  Returns (y, aux_loss, report).
+    """
+    B, S, D = x.shape
+    ep = ctx.model_size
+    e_loc = cfg.n_experts // ep
+    m_idx = lax.axis_index(ctx.model_axis)
+
+    # -- 1. route this shard's token slice -----------------------------------
+    # (decode steps can have fewer tokens than model shards: pad the token
+    # axis to a multiple of ep and zero the padded tokens' gates)
+    T = B * S
+    t_loc = -(-T // ep)
+    T_pad = t_loc * ep
+    x_flat = jnp.pad(x.reshape(T, D), ((0, T_pad - T), (0, 0)))
+    x_m = lax.dynamic_index_in_dim(x_flat.reshape(ep, t_loc, D), m_idx,
+                                   keepdims=False)            # (t_loc, D)
+    tok_valid = (m_idx * t_loc + jnp.arange(t_loc)) < T       # (t_loc,)
+
+    logits = (x_m.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (t_loc, E)
+    gates, experts = lax.top_k(probs, cfg.top_k)              # (t_loc, k)
+    if cfg.renorm:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    gates = gates * tok_valid[:, None]
+
+    # Switch-style load-balance aux loss.  me/ce are averaged over the model
+    # axis BEFORE the product so aux is exactly the full-token-set statistic
+    # (and replicated over "model" - shard_map loss outputs must agree).
+    me = lax.psum(jnp.sum(probs * tok_valid[:, None], axis=0),
+                  ctx.model_axis) / T
+    ce = lax.psum(
+        jnp.zeros((cfg.n_experts,), jnp.float32)
+        .at[experts.reshape(-1)].add(
+            jnp.repeat(tok_valid, cfg.top_k).astype(jnp.float32)
+            / (T * cfg.top_k)),
+        ctx.model_axis)
+    aux = cfg.aux_weight * cfg.n_experts * jnp.sum(me * ce)
+
+    # -- 2. bucket by destination shard --------------------------------------
+    a_tok = jnp.repeat(jnp.arange(t_loc), cfg.top_k)          # (t_loc*k,)
+    a_exp = experts.reshape(-1)
+    a_gate = gates.reshape(-1)
+    dest = a_exp // e_loc
+    order = jnp.argsort(dest, stable=True)
+    dest_s, tok_s, exp_s, gate_s = (dest[order], a_tok[order],
+                                    a_exp[order], a_gate[order])
+    counts = jnp.zeros((ep,), jnp.int32).at[dest_s].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t_loc * cfg.top_k) - starts[dest_s]
+    cap = _capacity(t_loc, cfg, ep)
+
+    send_x = jnp.zeros((ep, cap, D), x.dtype
+                       ).at[dest_s, rank].set(x_m[tok_s], mode="drop")
+    send_e = jnp.zeros((ep, cap), jnp.int32
+                       ).at[dest_s, rank].set(exp_s, mode="drop")
+    # Remember where each assignment went for the return trip.
+    kept = rank < cap
+
+    # -- 3. ship to expert owners --------------------------------------------
+    recv_x = lax.all_to_all(send_x, ctx.model_axis, 0, 0, tiled=False)
+    recv_e = lax.all_to_all(send_e, ctx.model_axis, 0, 0, tiled=False)
+    recv_x = recv_x.reshape(ep * cap, D)
+    local_e = jnp.clip(recv_e.reshape(-1) - m_idx * e_loc, 0, e_loc - 1)
+
+    # -- 4. grouped expert compute -------------------------------------------
+    sort2 = jnp.argsort(local_e, stable=True)
+    xs = recv_x[sort2].astype(x.dtype)
+    le_sorted = local_e[sort2]
+    w_loc = {k: p[k] for k in ("w_gate", "w_up", "w_down")}
+    if w_loc["w_gate"].shape[-1] != cfg.d_ff_expert:
+        # 2D expert sharding (serving): EP over "model" x TP over the data
+        # axes on the expert FFN width.  Weights stay RESIDENT (1/dp of F
+        # per device) instead of being re-gathered per step; the few decode
+        # tokens are gathered across the data row, the partial FFN runs on
+        # the local F-slice, and a reduce-scatter returns full-F results.
+        xs_all = lax.all_gather(xs, ctx.data_axis, axis=0, tiled=True)
+        le_all = lax.all_gather(le_sorted, ctx.data_axis, axis=0,
+                                tiled=True)
+        order = jnp.argsort(le_all, stable=True)
+        gs_all = jnp.zeros((e_loc,), jnp.int32).at[le_all].add(1)
+        ys_all, rep_e = _expert_ffn(xs_all[order], gs_all, w_loc, cfg, ctx)
+        ys_unsort = jnp.zeros_like(ys_all).at[order].set(ys_all)
+        ys = lax.psum_scatter(ys_unsort.astype(jnp.float32), ctx.data_axis,
+                              scatter_dimension=0, tiled=True
+                              ).astype(x.dtype)
+    else:
+        gs = jnp.zeros((e_loc,), jnp.int32).at[le_sorted].add(1)
+        ys, rep_e = _expert_ffn(xs, gs, w_loc, cfg, ctx)
+    y_sorted = jnp.zeros_like(ys).at[sort2].set(ys)           # unsort
+    y_back = y_sorted.reshape(ep, cap, D)
+
+    # -- 5. return trip + combine --------------------------------------------
+    ret_x = lax.all_to_all(y_back, ctx.model_axis, 0, 0, tiled=False)
+    got = ret_x[dest_s, jnp.clip(rank, 0, cap - 1)]           # (t_loc*k, D)
+    got = jnp.where(kept[:, None], got, jnp.zeros_like(got))
+    y_m = jnp.zeros((t_loc, D), jnp.float32).at[tok_s].add(
+        got.astype(jnp.float32) * gate_s[:, None])
+
+    y_full = lax.all_gather(y_m.astype(x.dtype), ctx.model_axis,
+                            axis=0, tiled=True)               # (T_pad, D)
+    y = y_full[:T].reshape(B, S, D)
+
+    rep = rep_e
+    if cfg.n_shared:
+        y_sh, rep_sh = ffn(p["shared"], x, ctx, act=cfg.act)
+        y = y + y_sh
+        rep = ftreport.merge(rep, rep_sh)
+    return y, aux, rep

@@ -1,0 +1,243 @@
+"""PartitionSpecs for every param / cache / batch leaf (pjit boundary).
+
+The models run inside shard_map with manual collectives; these specs tell
+shard_map how the *global* arrays slice into the per-device blocks the model
+code expects (DESIGN.md Sec. 4).  Rules are path-keyed: TP dims go to
+"model", batch dims to the data axes ("pod"+"data" when multi-pod), and the
+long-context mode flips KV caches from batch-sharded to sequence-sharded.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# (path substring match on the leaf name + context) -> spec factory.
+REPLICATED_NORMS = {"ln1", "ln2", "ln3", "ln", "ln_f", "ln_enc"}
+
+
+def _param_spec(path: Tuple[str, ...], ndim: int, stacked: bool):
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+
+    def out(*axes):
+        axes = list(axes)
+        # stacked layer/group leading axis is never sharded
+        if stacked:
+            axes = [None] + axes
+        assert len(axes) == ndim, (path, ndim, axes)
+        return P(*axes)
+
+    if name == "emb":
+        return P("model", None)                      # vocab-sharded
+    if parent in REPLICATED_NORMS or name in ("q_gamma", "k_gamma"):
+        return out(*([None] * (ndim - (1 if stacked else 0))))
+
+    two = ndim - (1 if stacked else 0)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_uk", "w_uv",
+                "w_in_x", "w_in_z", "w_up_x", "w_up_z", "w_dt", "conv_w",
+                "f_gate", "f_up", "w_in"):
+        if two == 3:                                  # MoE (E, D, F): EP
+            return out("model", None, None)
+        return out(None, "model")                     # column parallel
+    if name in ("wo", "w_o", "w_down", "w_xdbc", "w_out", "f_down",
+                "A_log"):
+        if parent == "cell" and name == "w_out":      # sLSTM: replicated
+            return out(None, None)
+        if two == 3:                                  # MoE (E, F, D): EP
+            return out("model", None, None)
+        return out("model", None)                     # row parallel
+    if name in ("conv_b", "dt_bias", "D", "gamma"):
+        if parent == "cell" and name == "gamma":      # mLSTM dv-sharded
+            return out("model")
+        return out("model") if name in ("conv_b", "dt_bias", "D") \
+            else out(None)
+    if name in ("router", "w_if", "w_krope", "w_dkv", "w_q", "w_k"):
+        if name == "w_q" and parent == "attn":        # MLA wq: head-sharded
+            return out(None, "model")
+        return out(*([None] * two))                   # replicated
+    if name in ("b_i", "b_f", "b"):
+        return out(*([None] * two))
+    if name in ("r_z", "r_i", "r_f", "r_o"):
+        return out(None, None, None)
+    if name == "w_v":
+        return out(None, "model")                     # mLSTM dv-sharded
+    raise ValueError(f"no spec rule for param path {path}")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(k.name)
+    return tuple(names)
+
+
+STACK_ROOTS = {"layers", "groups", "enc", "dec"}
+
+
+def param_specs(params, *, fsdp: bool = False, dp_axes="data",
+                expert_tp: bool = False) -> object:
+    """Pytree of PartitionSpec matching ``params`` (global shapes).
+
+    ``fsdp=True`` (ZeRO-3): additionally shards one free dim of every
+    weight matrix over the data axes; layer bodies all_gather it back just
+    before use (models.specs.fsdp_gather).  Required for archs whose
+    TP-sharded params exceed per-device HBM (qwen3-235B: 29 GB/device under
+    TP-16 alone -> 1.9 GB with FSDP over data=16).
+    """
+
+    def one(path, leaf):
+        names = _path_names(path)
+        stacked = bool(STACK_ROOTS & set(names))
+        spec = _param_spec(names, leaf.ndim, stacked)
+        if expert_tp and names[-1] in ("w_gate", "w_up", "w_down") \
+                and leaf.ndim - (1 if stacked else 0) == 3:
+            # 2D expert sharding: (L, E/ms, D, F) -> F over dp;
+            # (L, E/ms, F, D) -> F over dp
+            off = 1 if stacked else 0
+            ent = list(spec) + [None] * (leaf.ndim - len(spec))
+            f_dim = off + (2 if names[-1] != "w_down" else 1)
+            ent[f_dim] = dp_axes
+            return P(*ent)
+        if fsdp:
+            dim = _fsdp_dim(names, leaf.ndim, stacked)
+            if dim is not None:
+                entries = list(spec) + [None] * (leaf.ndim - len(spec))
+                cur = entries[dim]
+                if cur is None:
+                    entries[dim] = dp_axes
+                else:
+                    cur_t = cur if isinstance(cur, tuple) else (cur,)
+                    dp_t = dp_axes if isinstance(dp_axes, tuple) \
+                        else (dp_axes,)
+                    entries[dim] = cur_t + dp_t
+                spec = P(*entries)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# FSDP: which dim of each param is split over the data axes.
+_FSDP_FREE_DIM = {
+    # column-parallel (.., D, cols/ms): split D
+    "wq": 0, "wk": 0, "wv": 0, "w_gate": 0, "w_up": 0, "w_uk": 0,
+    "w_uv": 0, "w_in_x": 0, "w_in_z": 0, "w_up_x": 0, "w_up_z": 0,
+    "w_dt": 0, "f_gate": 0, "f_up": 0, "w_in": 0,
+    # row-parallel (.., rows/ms, D): split D
+    "wo": 1, "w_o": 1, "w_down": 1, "w_xdbc": 1, "w_out": 1, "f_down": 1,
+    # MoE stacks (E/ms, D, F): split D
+    # (3D handled by ndim check below)
+    # replicated matrices: split dim 0
+    "router": 0, "w_dkv": 0, "w_krope": 0, "w_q": 0, "w_k": 0,
+    # embedding (V/ms, D): split D
+    "emb": 1,
+    # mLSTM value path (di, H*dv/ms): split di
+    "w_v": 0, "w_if": 0,
+    # channel-sharded vectors/matrices: co-split the channel dim
+    "conv_w": 1, "A_log": 0, "conv_b": 0, "dt_bias": 0, "D": 0,
+}
+
+
+def _fsdp_dim(path, ndim, stacked):
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    if parent in REPLICATED_NORMS or name in (
+            "q_gamma", "k_gamma", "gamma", "b", "b_i", "b_f",
+            "r_z", "r_i", "r_f", "r_o"):
+        return None                     # tiny: stays replicated
+    if name not in _FSDP_FREE_DIM:
+        return None
+    base = _FSDP_FREE_DIM[name]
+    two = ndim - (1 if stacked else 0)
+    if two == 3 and name in ("w_gate", "w_up", "w_down"):
+        base = 1                        # MoE (E, D, F) / (E, F, D): split D
+        if name == "w_down":
+            base = 2
+    return base + (1 if stacked else 0)
+
+
+def fsdp_dims_unstacked(tree) -> object:
+    """Per-leaf gather dim (or None) for a layer-slice param tree."""
+
+    def one(path, leaf):
+        return _fsdp_dim(_path_names(path), leaf.ndim, stacked=False)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def fsdp_gather(tree, ctx):
+    """all_gather each FSDP-split leaf back to its TP-local shape.
+
+    Called at the top of every layer body (and on the embedding at the
+    head); the transpose is a reduce-scatter, i.e. backward gradients come
+    back dp-sharded and dp-summed - exactly ZeRO-3 semantics.
+    """
+    from jax import lax
+    dims = fsdp_dims_unstacked(tree)
+
+    def one(x, d):
+        if d is None:
+            return x
+        return lax.all_gather(x, ctx.data_axis, axis=d, tiled=True)
+
+    return jax.tree.map(one, tree, dims)
+
+
+# -- caches -------------------------------------------------------------------
+def _cache_spec(path: Tuple[str, ...], ndim: int, dp, seq_shard: bool):
+    name = path[-1]
+    # seq_shard (long-context, batch=1): the sequence dim of attention
+    # caches is sharded over the data axes; batch dims (and O(1) SSM
+    # states) are replicated since batch=1 cannot shard.
+    bdp = None if seq_shard else dp
+    if name in ("k", "v", "kscale", "vscale"):   # (L, B, S, NKV, dh|1)
+        if seq_shard:
+            return P(None, None, dp, "model", None)
+        return P(None, dp, None, "model", None)
+    if name in ("ckv", "krope"):        # MLA latent (L, B, S, d)
+        if seq_shard:
+            return P(None, None, dp, None)
+        return P(None, dp, None, None)
+    if name == "conv":                  # (G, B, K-1, di)
+        return P(None, bdp, None, "model")
+    if name == "ssm":                   # (G, B, di, ds)
+        return P(None, bdp, "model", None)
+    if name == "C":                     # mLSTM (G, B, H, dk, dv)
+        return P(None, bdp, None, None, "model")
+    if name in ("n", "m", "c", "h"):    # mLSTM/sLSTM small states
+        return P(*([None, bdp] + [None] * (ndim - 2)))
+    raise ValueError(f"no cache spec rule for {path}")
+
+
+def cache_specs(cache, *, multi_pod: bool, seq_shard: bool) -> object:
+    dp = ("pod", "data") if multi_pod else "data"
+
+    def one(path, leaf):
+        return _cache_spec(_path_names(path), leaf.ndim, dp, seq_shard)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# -- batches ------------------------------------------------------------------
+def batch_specs(batch, *, multi_pod: bool, replicated: bool = False
+                ) -> object:
+    """``replicated=True``: long-context batch=1 cells (nothing to shard)."""
+    dp = None if replicated else (("pod", "data") if multi_pod else "data")
+
+    def one(path, leaf):
+        name = _path_names(path)[-1]
+        if name in ("tokens", "labels"):
+            return P(dp, None)
+        if name == "src_embeds":
+            return P(dp, None, None)
+        if name == "images":
+            return P(dp, None, None, None)
+        raise ValueError(f"no batch spec rule for {name}")
+
+    return jax.tree_util.tree_map_with_path(one, batch)

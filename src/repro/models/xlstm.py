@@ -1,0 +1,383 @@
+"""xLSTM blocks: mLSTM (matrix memory) + sLSTM (scalar memory), ~7:1 mix.
+
+Arch-applicability (DESIGN.md Sec. 5): the sLSTM cell is an elementwise
+recurrence - no GEMM - so it takes the paper's DMR leg; the mLSTM chunkwise
+form IS matmul-shaped (intra-chunk q k^T products), so the paper's ABFT
+reasoning applies to its projections and chunk GEMMs.
+
+Sharding: xlstm-350m has 4 heads < 16-way model axis, so head sharding is
+impossible.  The *value* path is sharded instead: v, the matrix memory
+C (dh_k, dh_v) and the block output are sharded on dh_v over "model";
+q/k/gates are computed replicated (small).  The sLSTM cell is replicated.
+Model-axis utilization is accordingly poor for this arch - an honest
+property of a 350M model on a 256-chip pod, quantified in the roofline.
+
+Chunkwise stabilized mLSTM (log-space gates):
+  per chunk with local F_j = cumsum(log f), u_t = log i_t - F_t,
+  M_j = max(m_in, cummax u_t), per-position stabilizer m_j = F_j + M_j:
+    intra weight (t<=j): exp(u_t - M_j)
+    carry weight:        exp(m_in - M_j)
+    h_j = [sum_t w (q~_j.k_t) v_t + carry q~_j^T C_in]
+          / max(|n_j . q~_j|, exp(-m_j))
+  state out: scale M_ch, C_out = e^{m_in-M_ch} C_in + sum_t e^{u_t-M_ch} k v^T,
+  m_out = F_ch + M_ch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.dmr import dmr_compute, dmr_report
+from repro.core.ft_dense import ft_dense
+from repro.models.common import ShardCtx, dense_init, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMCfg:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0     # mLSTM up-projection
+    chunk: int = 64
+    slstm_every: int = 8         # slot 7 of each 8-layer group is sLSTM
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def dh_qk(self) -> int:
+        return self.d_inner // (2 * self.n_heads)
+
+    @property
+    def dh_v(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ====================== mLSTM =================================================
+def _v_perm(di: int, H: int, ms: int) -> jnp.ndarray:
+    """Channel permutation (h, m, i) -> (m, h, i).
+
+    Contiguous column-sharding over "model" hands shard m the channel block
+    [m*di/ms : (m+1)*di/ms]; to make that block mean "every head's m-th
+    dv-slice" (so the local (H, dv_loc) reshape is mesh-invariant), the
+    value-path params are materialized in (shard, head, inner) order at
+    init.  Applied consistently to w_v cols / w_up_z cols / gamma /
+    w_down rows, the model function is identical for every model_size.
+    """
+    dv = di // H
+    assert dv % ms == 0, (di, H, ms)
+    idx = jnp.arange(di).reshape(H, ms, dv // ms)
+    return idx.transpose(1, 0, 2).reshape(-1)
+
+
+def mlstm_init(key, cfg: XLSTMCfg, dtype, model_size: int = 1
+               ) -> Dict[str, Any]:
+    ks = split_keys(key, 7)
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    perm = _v_perm(di, H, model_size)
+    return {
+        # x / z branches as separate params (column-sharding correctness).
+        "w_up_x": dense_init(ks[0], d, di, dtype),
+        "w_up_z": dense_init(ks[6], d, di, dtype)[:, perm],
+        "w_q": dense_init(ks[1], di, H * cfg.dh_qk, dtype),
+        "w_k": dense_init(ks[2], di, H * cfg.dh_qk, dtype),
+        "w_v": dense_init(ks[3], di, H * cfg.dh_v, dtype)[:, perm],
+        "w_if": dense_init(ks[4], di, 2 * H, jnp.float32, scale=0.01),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),            # forget ~ open
+        "gamma": jnp.ones((H * cfg.dh_v,), dtype),          # dv sharded
+        "w_down": dense_init(ks[5], di, d, dtype)[perm, :],  # row-parallel
+    }
+
+
+def _mlstm_chunk(carry, inp, *, scale):
+    """One chunk step; see module docstring for the math."""
+    C, nrm, m_in = carry               # (B,H,dk,dv) (B,H,dk) (B,H)
+    qc, kc, vc, lfc, lic = inp         # (B,ch,H,*) gates (B,ch,H)
+    B, ch, H, dk = qc.shape
+
+    F = jnp.cumsum(lfc, axis=1)                              # (B,ch,H)
+    u = lic - F
+    M = jnp.maximum(m_in[:, None, :],
+                    lax.cummax(u, axis=1))                   # (B,ch,H)
+    m_pos = F + M
+
+    q_t = jnp.moveaxis(qc, 2, 1) * scale                     # (B,H,ch,dk)
+    k_t = jnp.moveaxis(kc, 2, 1)
+    v_t = jnp.moveaxis(vc, 2, 1)                             # (B,H,ch,dv)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q_t, k_t)
+    u_h = jnp.moveaxis(u, 2, 1)                              # (B,H,ch)
+    M_h = jnp.moveaxis(M, 2, 1)
+    D = jnp.exp(u_h[:, :, None, :] - M_h[:, :, :, None])     # (B,H,q,k)
+    tri = jnp.arange(ch)
+    D = jnp.where(tri[:, None] >= tri[None, :], D, 0.0)
+
+    carry_w = jnp.exp(m_in[:, None, :] - M)                  # (B,ch,H)
+    cw_h = jnp.moveaxis(carry_w, 2, 1)                       # (B,H,ch)
+
+    num = jnp.einsum("bhqk,bhkv->bhqv", s * D, v_t) \
+        + cw_h[..., None] * jnp.einsum("bhqd,bhdv->bhqv", q_t, C)
+    n_vec = jnp.einsum("bhqk,bhkd->bhqd", D, k_t) \
+        + cw_h[..., None] * nrm[:, :, None, :]
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhqd,bhqd->bhq", n_vec, q_t)),
+        jnp.exp(jnp.clip(-jnp.moveaxis(m_pos, 2, 1), -30.0, 30.0)))
+    h = num / denom[..., None]                               # (B,H,ch,dv)
+
+    M_last = M[:, -1, :]                                     # (B,H)
+    w_out = jnp.exp(u - M_last[:, None, :])                  # (B,ch,H)
+    decay = jnp.exp(m_in - M_last)
+    k_w = k_t * jnp.moveaxis(w_out, 2, 1)[..., None]
+    C_new = decay[..., None, None] * C \
+        + jnp.einsum("bhkd,bhkv->bhdv", k_w, v_t)
+    n_new = decay[..., None] * nrm + jnp.sum(k_w, axis=2)
+    m_new = F[:, -1, :] + M_last
+    return (C_new, n_new, m_new), jnp.moveaxis(h, 2, 1)      # (B,ch,H,dv)
+
+
+def mlstm_scan(q, k, v, log_f, log_i, cfg: XLSTMCfg, state=None):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv_loc); gates: (B,S,H)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    ch = min(cfg.chunk, S)
+    assert S % ch == 0
+    n = S // ch
+
+    def resh(x):
+        return jnp.moveaxis(x.reshape(B, n, ch, *x.shape[2:]), 1, 0)
+
+    if state is None:
+        state = (jnp.zeros((B, H, dk, dv), jnp.float32),
+                 jnp.zeros((B, H, dk), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    step = lambda c, i: _mlstm_chunk(c, i, scale=1.0 / jnp.sqrt(dk))
+    state, hs = lax.scan(step, state,
+                         (resh(q.astype(jnp.float32)),
+                          resh(k.astype(jnp.float32)),
+                          resh(v.astype(jnp.float32)),
+                          resh(log_f), resh(log_i)))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dv), state
+
+
+def mlstm_block(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx,
+                cfg: XLSTMCfg) -> Tuple[jax.Array, dict]:
+    B, S, D = x.shape
+    H = cfg.n_heads
+    # up proj column-sharded, then gathered: q/k/gates need the full d_inner.
+    w_up = jnp.concatenate([p["w_up_x"], p["w_up_z"]], axis=1)
+    xz, r1 = ft_dense(x, w_up, policy=ctx.policy)
+    xz = lax.all_gather(xz, ctx.model_axis, axis=-1, tiled=True)
+    # gathered layout is (shard, [x_loc | z_loc]): regroup to full x | z
+    ms = ctx.model_size
+    xz = xz.reshape(B, S, ms, 2, -1)
+    xi = xz[:, :, :, 0, :].reshape(B, S, -1)                 # (B,S,di) repl.
+    z = xz[:, :, :, 1, :].reshape(B, S, -1)
+    q, r2 = ft_dense(xi, p["w_q"], policy=ctx.policy)        # replicated
+    k, r3 = ft_dense(xi, p["w_k"], policy=ctx.policy)
+    v, r4 = ft_dense(xi, p["w_v"], policy=ctx.policy)        # dv sharded
+    dv_loc = v.shape[-1] // H
+    q = q.reshape(B, S, H, cfg.dh_qk)
+    k = k.reshape(B, S, H, cfg.dh_qk)
+    v = v.reshape(B, S, H, dv_loc)
+    gif = (xi.astype(jnp.float32) @ p["w_if"].astype(jnp.float32)
+           ).reshape(B, S, 2, H)
+    log_i = gif[:, :, 0] + p["b_i"]
+    log_f = jax.nn.log_sigmoid(gif[:, :, 1] + p["b_f"])
+    h, _ = mlstm_scan(q, k, v, log_f, log_i, cfg)
+    h = h.reshape(B, S, H * dv_loc)
+    # z-gate: take this shard's slice of the (replicated) gate branch that
+    # corresponds to its dv columns.
+    m_idx = lax.axis_index(ctx.model_axis)
+    z_loc = lax.dynamic_slice_in_dim(
+        z, m_idx * (z.shape[-1] // ctx.model_size),
+        z.shape[-1] // ctx.model_size, axis=-1)
+    h = (h * jax.nn.silu(z_loc.astype(jnp.float32))).astype(x.dtype)
+    h = h * p["gamma"][None, None, :]
+    out, r5 = ft_dense(h, p["w_down"], policy=ctx.policy)    # row-parallel
+    out = lax.psum(out, ctx.model_axis)
+    return out, ftreport.merge(r1, r2, r3, r4, r5)
+
+
+# mLSTM decode: single-token stabilized state update.
+def mlstm_cache_init(cfg: XLSTMCfg, batch_loc: int, dv_loc: int):
+    H = cfg.n_heads
+    return {"C": jnp.zeros((batch_loc, H, cfg.dh_qk, dv_loc), jnp.float32),
+            "n": jnp.zeros((batch_loc, H, cfg.dh_qk), jnp.float32),
+            "m": jnp.full((batch_loc, H), -1e30, jnp.float32)}
+
+
+def mlstm_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
+                 ctx: ShardCtx, cfg: XLSTMCfg):
+    B = x.shape[0]
+    H = cfg.n_heads
+    w_up = jnp.concatenate([p["w_up_x"], p["w_up_z"]], axis=1)
+    xz, r1 = ft_dense(x, w_up, policy=ctx.policy)
+    xz = lax.all_gather(xz, ctx.model_axis, axis=-1, tiled=True)
+    ms = ctx.model_size
+    B1 = x.shape[0]
+    xz = xz.reshape(B1, 1, ms, 2, -1)
+    xi = xz[:, :, :, 0, :].reshape(B1, 1, -1)                # (B,1,di)
+    z = xz[:, :, :, 1, :].reshape(B1, 1, -1)
+    q, r2 = ft_dense(xi, p["w_q"], policy=ctx.policy)
+    k, r3 = ft_dense(xi, p["w_k"], policy=ctx.policy)
+    v, r4 = ft_dense(xi, p["w_v"], policy=ctx.policy)
+    dv_loc = v.shape[-1] // H
+    q = q.reshape(B, H, cfg.dh_qk).astype(jnp.float32) / jnp.sqrt(cfg.dh_qk)
+    k = k.reshape(B, H, cfg.dh_qk).astype(jnp.float32)
+    v = v.reshape(B, H, dv_loc).astype(jnp.float32)
+    gif = (xi[:, 0].astype(jnp.float32) @ p["w_if"].astype(jnp.float32)
+           ).reshape(B, 2, H)
+    li = gif[:, 0] + p["b_i"]
+    lf = jax.nn.log_sigmoid(gif[:, 1] + p["b_f"])
+    m_new = jnp.maximum(lf + cache["m"], li)
+    f_w = jnp.exp(lf + cache["m"] - m_new)
+    i_w = jnp.exp(li - m_new)
+    C = f_w[..., None, None] * cache["C"] \
+        + i_w[..., None, None] * jnp.einsum("bhd,bhv->bhdv", k, v)
+    nv = f_w[..., None] * cache["n"] + i_w[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, nv)),
+                        jnp.exp(jnp.clip(-m_new, -30.0, 30.0)))
+    h = (num / denom[..., None]).reshape(B, 1, H * dv_loc)
+    m_idx = lax.axis_index(ctx.model_axis)
+    z_loc = lax.dynamic_slice_in_dim(
+        z, m_idx * (z.shape[-1] // ctx.model_size),
+        z.shape[-1] // ctx.model_size, axis=-1)
+    h = (h * jax.nn.silu(z_loc.astype(jnp.float32)))
+    h = h.astype(x.dtype) * p["gamma"][None, None, :]
+    out, r5 = ft_dense(h, p["w_down"], policy=ctx.policy)
+    out = lax.psum(out, ctx.model_axis)
+    new_cache = {"C": C, "n": nv, "m": m_new}
+    return out, new_cache, ftreport.merge(r1, r2, r3, r4, r5)
+
+
+# ====================== sLSTM =================================================
+def _ffn_dim(d: int) -> int:
+    """pf=4/3 FFN width rounded up to a multiple of 128 (TP-divisible)."""
+    return -(-(4 * d // 3) // 128) * 128
+
+
+def slstm_init(key, cfg: XLSTMCfg, dtype) -> Dict[str, Any]:
+    ks = split_keys(key, 11)
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    p = {"w_in": dense_init(ks[0], d, 4 * d, dtype),   # z,i,f,o pre-acts
+         "r_z": (jax.random.normal(ks[1], (H, dh, dh), jnp.float32)
+                 / jnp.sqrt(dh)).astype(jnp.float32),
+         "r_i": (jax.random.normal(ks[2], (H, dh, dh), jnp.float32)
+                 / jnp.sqrt(dh)).astype(jnp.float32),
+         "r_f": (jax.random.normal(ks[3], (H, dh, dh), jnp.float32)
+                 / jnp.sqrt(dh)).astype(jnp.float32),
+         "r_o": (jax.random.normal(ks[4], (H, dh, dh), jnp.float32)
+                 / jnp.sqrt(dh)).astype(jnp.float32),
+         "b": jnp.zeros((4, d), jnp.float32),
+         "w_out": dense_init(ks[5], d, d, dtype),
+         # post-cell gated FFN, pf = 4/3 (rounded up to a TP-friendly
+         # multiple of 128 so F % model_size == 0)
+         "f_gate": dense_init(ks[6], d, _ffn_dim(d), dtype),
+         "f_up": dense_init(ks[7], d, _ffn_dim(d), dtype),
+         "f_down": dense_init(ks[8], _ffn_dim(d), d, dtype)}
+    return p
+
+
+def slstm_cell(p: Dict[str, Any], pre: jax.Array, cfg: XLSTMCfg,
+               state=None):
+    """Sequential sLSTM over pre-activations (B, S, 4, H, dh).
+
+    Elementwise + block-diagonal recurrent matmuls; strictly sequential
+    (this is the op with no TPU-parallel form - replicated over model).
+    Returns (h (B,S,H,dh), state).
+    """
+    B, S = pre.shape[0], pre.shape[1]
+    H = cfg.n_heads
+    dh = pre.shape[-1]
+    if state is None:
+        state = (jnp.zeros((B, H, dh), jnp.float32),   # c
+                 jnp.zeros((B, H, dh), jnp.float32),   # n
+                 jnp.zeros((B, H, dh), jnp.float32),   # h
+                 jnp.zeros((B, H, dh), jnp.float32))   # m
+
+    def step(carry, xt):                               # xt: (B,4,H,dh)
+        c, n, h, m = carry
+        rz = jnp.einsum("bhd,hde->bhe", h, p["r_z"])
+        ri = jnp.einsum("bhd,hde->bhe", h, p["r_i"])
+        rf = jnp.einsum("bhd,hde->bhe", h, p["r_f"])
+        ro = jnp.einsum("bhd,hde->bhe", h, p["r_o"])
+        z = jnp.tanh(xt[:, 0] + rz)
+        li = xt[:, 1] + ri
+        lf = jax.nn.log_sigmoid(xt[:, 2] + rf)
+        o = jax.nn.sigmoid(xt[:, 3] + ro)
+        m_new = jnp.maximum(lf + m, li)
+        i_w = jnp.exp(li - m_new)
+        f_w = jnp.exp(lf + m - m_new)
+        c_new = f_w * c + i_w * z
+        n_new = jnp.maximum(f_w * n + i_w, 1.0)
+        h_new = o * c_new / n_new
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = lax.scan(step, state, jnp.moveaxis(
+        pre.astype(jnp.float32), 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def slstm_block(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx,
+                cfg: XLSTMCfg) -> Tuple[jax.Array, dict]:
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    pre, r1 = ft_dense(x, p["w_in"], policy=ctx.policy)    # col-sharded
+    pre = lax.all_gather(pre, ctx.model_axis, axis=-1, tiled=True)
+    pre = pre.reshape(B, S, 4, D).astype(jnp.float32) \
+        + p["b"][None, None, :, :]
+    pre = pre.reshape(B, S, 4, H, dh)
+    h, _ = slstm_cell(p, pre, cfg)                         # replicated cell
+    rep = ftreport.empty_report()
+    if ctx.policy.dmr_on:
+        v = dmr_compute(lambda a: jnp.tanh(a[:, :, 0]) * 1.0,
+                        pre[:, -1:].astype(jnp.float32),
+                        vote=ctx.policy.dmr_vote)
+        rep = dmr_report(v)                                # DMR spot-check
+    h = h.reshape(B, S, D).astype(x.dtype)
+    y, r2 = ft_dense(h, p["w_out"], policy=ctx.policy)     # w_out replicated
+    # gated FFN (pf=4/3), column->row parallel
+    g, r3 = ft_dense(y, p["f_gate"], policy=ctx.policy)
+    u, r4 = ft_dense(y, p["f_up"], policy=ctx.policy)
+    f = jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+    out, r5 = ft_dense(f.astype(x.dtype), p["f_down"], policy=ctx.policy)
+    out = lax.psum(out, ctx.model_axis)
+    return out, ftreport.merge(r1, rep, r2, r3, r4, r5)
+
+
+def slstm_cache_init(cfg: XLSTMCfg, batch_loc: int, d_model: int):
+    H = cfg.n_heads
+    dh = d_model // H
+    z = jnp.zeros((batch_loc, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_decode(p: Dict[str, Any], x: jax.Array, cache, ctx: ShardCtx,
+                 cfg: XLSTMCfg):
+    B = x.shape[0]
+    D = x.shape[-1]
+    H = cfg.n_heads
+    dh = D // H
+    pre, r1 = ft_dense(x, p["w_in"], policy=ctx.policy)
+    pre = lax.all_gather(pre, ctx.model_axis, axis=-1, tiled=True)
+    pre = pre.reshape(B, 1, 4, D).astype(jnp.float32) + p["b"][None, None]
+    pre = pre.reshape(B, 1, 4, H, dh)
+    st = (cache["c"], cache["n"], cache["h"], cache["m"])
+    h, st = slstm_cell(p, pre, cfg, state=st)
+    h = h.reshape(B, 1, D).astype(x.dtype)
+    y, r2 = ft_dense(h, p["w_out"], policy=ctx.policy)
+    g, r3 = ft_dense(y, p["f_gate"], policy=ctx.policy)
+    u, r4 = ft_dense(y, p["f_up"], policy=ctx.policy)
+    f = jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+    out, r5 = ft_dense(f.astype(x.dtype), p["f_down"], policy=ctx.policy)
+    out = lax.psum(out, ctx.model_axis)
+    new_cache = {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+    return out, new_cache, ftreport.merge(r1, r2, r3, r4, r5)

@@ -1,0 +1,4 @@
+from repro.runtime.elastic import (RemeshPlan, make_mesh_from_plan,
+                                   plan_remesh, reshard, survivors)
+from repro.runtime.straggler import (EXCLUDE, RESTART, WARN, StepTimer,
+                                     StragglerConfig, StragglerMonitor)

@@ -1,0 +1,72 @@
+"""Elastic scaling: re-mesh planning + state resharding.
+
+When a host is excluded (failure / straggler) or capacity is added, the job
+restarts its SPMD program on a new mesh.  Policy (DESIGN.md Sec. 4):
+
+  - the model axis is held fixed (TP degree is an architectural choice:
+    weight shards, KV layouts and kernel tilings are specialized to it);
+  - the data axes absorb elasticity: dp' = largest feasible divisor of the
+    remaining host count that still divides the global batch;
+  - parameters are mesh-invariant global arrays, so resharding is a
+    device_put with the new NamedSharding; ZeRO optimizer slices are
+    re-scattered (they are 1/dp-sharded views of mesh-invariant flats);
+  - the data stream is a pure function of (seed, step): no loader state.
+
+plan_remesh computes the new shape; reshard moves a pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    data: int
+    model: int
+    dropped_devices: int
+    batch_per_shard: int
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.data, self.model)
+
+
+def plan_remesh(n_devices: int, *, model_size: int, global_batch: int,
+                old_data: Optional[int] = None) -> RemeshPlan:
+    """Largest data degree that fits the surviving devices and the batch."""
+    if n_devices < model_size:
+        raise ValueError(
+            f"{n_devices} devices cannot host a model axis of {model_size}")
+    dp_max = n_devices // model_size
+    dp = dp_max
+    while dp > 0 and global_batch % dp != 0:
+        dp -= 1
+    if dp == 0:
+        raise ValueError("no feasible data degree")
+    used = dp * model_size
+    return RemeshPlan(data=dp, model=model_size,
+                      dropped_devices=n_devices - used,
+                      batch_per_shard=global_batch // dp)
+
+
+def make_mesh_from_plan(plan: RemeshPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    used = plan.data * plan.model
+    arr = np.array(devices[:used]).reshape(plan.shape)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard(tree, specs, mesh: Mesh):
+    """Move a (global-array) pytree onto a new mesh per its PartitionSpecs."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+
+
+def survivors(all_devices, failed_ids) -> list:
+    return [d for d in all_devices if d.id not in set(failed_ids)]

@@ -1,0 +1,97 @@
+"""Straggler mitigation: step-time surveillance + policy decisions.
+
+At 1000+ nodes the slowest worker sets the step time (synchronous SPMD).
+This monitor implements the standard production countermeasures at the
+framework layer:
+
+  - per-host step-time EWMA + robust (median/MAD) outlier detection;
+  - a grace budget before a host is flagged (transient hiccups are free);
+  - decisions: NONE -> WARN -> EXCLUDE (hand the host's shard to the
+    elastic planner, runtime/elastic.py) or CHECKPOINT_RESTART when too
+    many hosts degrade at once (correlated slowdown = infra event);
+  - hooks for backup-task dispatch ("speculative execution"): the caller
+    re-issues the slow host's shard on a spare.
+
+Wall-clock decisions are host-side (never traced), so this composes with
+any jit'd step function.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+WARN, EXCLUDE, RESTART = "warn", "exclude", "checkpoint_restart"
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ewma: float = 0.9
+    mad_factor: float = 5.0     # flag if step > median + k * MAD
+    grace: int = 3              # consecutive flags before a decision
+    window: int = 64
+    correlated_frac: float = 0.25  # >25% of hosts slow -> infra event
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, cfg: StragglerConfig = StragglerConfig()):
+        self.cfg = cfg
+        self.n_hosts = n_hosts
+        self.hist: List[Deque[float]] = [deque(maxlen=cfg.window)
+                                         for _ in range(n_hosts)]
+        self.ewma: List[Optional[float]] = [None] * n_hosts
+        self.flags: List[int] = [0] * n_hosts
+        self.excluded: set = set()
+
+    def record(self, host: int, step_time: float) -> None:
+        self.hist[host].append(step_time)
+        prev = self.ewma[host]
+        self.ewma[host] = step_time if prev is None else (
+            self.cfg.ewma * prev + (1 - self.cfg.ewma) * step_time)
+
+    def _median_mad(self) -> (float, float):
+        vals = sorted(e for e in self.ewma if e is not None)
+        if not vals:
+            return 0.0, 0.0
+        m = vals[len(vals) // 2]
+        mad = sorted(abs(v - m) for v in vals)[len(vals) // 2]
+        return m, max(mad, 1e-6 * max(m, 1e-9))
+
+    def decide(self) -> Dict[int, str]:
+        """Per-host decision after this step's records."""
+        med, mad = self._median_mad()
+        out: Dict[int, str] = {}
+        slow = []
+        for h in range(self.n_hosts):
+            if h in self.excluded or self.ewma[h] is None:
+                continue
+            if self.ewma[h] > med + self.cfg.mad_factor * mad:
+                self.flags[h] += 1
+                slow.append(h)
+                if self.flags[h] >= self.cfg.grace:
+                    out[h] = EXCLUDE
+                    self.excluded.add(h)
+                else:
+                    out[h] = WARN
+            else:
+                self.flags[h] = 0
+        if len(slow) > self.cfg.correlated_frac * self.n_hosts:
+            return {h: RESTART for h in slow}
+        return out
+
+
+class StepTimer:
+    """Context manager feeding the monitor for the local host."""
+
+    def __init__(self, monitor: StragglerMonitor, host: int = 0):
+        self.monitor = monitor
+        self.host = host
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.monitor.record(self.host, time.perf_counter() - self.t0)
+        return False

@@ -1,0 +1,42 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here - smoke tests and benches must
+see the real single device; multi-device tests spawn subprocesses."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import OFF, report as ftreport  # noqa: E402
+from repro.models.common import ShardCtx  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def ctx11():
+    return ShardCtx(data_axis=("data",), model_axis="model",
+                    data_size=1, model_size=1, policy=OFF)
+
+
+def ctx11_with(policy):
+    return ShardCtx(data_axis=("data",), model_axis="model",
+                    data_size=1, model_size=1, policy=policy)
+
+
+@pytest.fixture(scope="session")
+def rspec():
+    return {k: P() for k in ftreport.FIELDS}
+
+
+def run_sharded(mesh, fn, in_specs, out_specs, *args):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))(*args)

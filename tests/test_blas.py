@@ -1,0 +1,198 @@
+"""FT-BLAS Level-1/2/3 vs numpy oracles, clean + under injection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import blas
+from repro.blas import ref
+from repro.core import (ABFT_ONLY, DMR_ONLY, HYBRID, HYBRID_UNFUSED, OFF,
+                        Injection)
+
+POLICIES = {"off": OFF, "hybrid_unfused": HYBRID_UNFUSED}
+
+
+def _vec(n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+
+
+def _mat(m, n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, n), jnp.float32)
+
+
+@pytest.mark.parametrize("policy_name", list(POLICIES))
+@pytest.mark.parametrize("n", [7, 128, 1000])
+class TestLevel1:
+    def test_scal(self, policy_name, n):
+        x = _vec(n)
+        r, rep = blas.scal(2.5, x, policy=POLICIES[policy_name])
+        np.testing.assert_allclose(np.asarray(r), ref.scal(2.5, np.asarray(x)),
+                                   rtol=1e-6)
+
+    def test_axpy(self, policy_name, n):
+        x, y = _vec(n, 0), _vec(n, 1)
+        r, _ = blas.axpy(1.5, x, y, policy=POLICIES[policy_name])
+        np.testing.assert_allclose(
+            np.asarray(r), ref.axpy(1.5, np.asarray(x), np.asarray(y)),
+            rtol=1e-5, atol=1e-6)
+
+    def test_dot(self, policy_name, n):
+        x, y = _vec(n, 0), _vec(n, 1)
+        r, _ = blas.dot(x, y, policy=POLICIES[policy_name])
+        np.testing.assert_allclose(float(r),
+                                   ref.dot(np.asarray(x), np.asarray(y)),
+                                   rtol=1e-4)
+
+    def test_nrm2(self, policy_name, n):
+        x = _vec(n)
+        r, _ = blas.nrm2(x, policy=POLICIES[policy_name])
+        np.testing.assert_allclose(float(r), ref.nrm2(np.asarray(x)),
+                                   rtol=1e-5)
+
+    def test_rot(self, policy_name, n):
+        x, y = _vec(n, 0), _vec(n, 1)
+        rx, ry, _ = blas.rot(x, y, 0.8, 0.6, policy=POLICIES[policy_name])
+        wx, wy = ref.rot(np.asarray(x), np.asarray(y), 0.8, 0.6)
+        np.testing.assert_allclose(np.asarray(rx), wx, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ry), wy, rtol=1e-5, atol=1e-6)
+
+    def test_iamax(self, policy_name, n):
+        x = _vec(n)
+        i, _ = blas.iamax(x, policy=POLICIES[policy_name])
+        assert int(i) == ref.iamax(np.asarray(x))
+
+
+@pytest.mark.parametrize("policy_name", list(POLICIES))
+class TestLevel2:
+    def test_gemv(self, policy_name):
+        A, x, y = _mat(37, 53), _vec(53, 1), _vec(37, 2)
+        r, _ = blas.gemv(1.2, A, x, 0.7, y, policy=POLICIES[policy_name])
+        np.testing.assert_allclose(
+            np.asarray(r, np.float64),
+            ref.gemv(1.2, np.asarray(A), np.asarray(x), 0.7, np.asarray(y)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_gemv_trans(self, policy_name):
+        A, x, y = _mat(37, 53), _vec(37, 1), _vec(53, 2)
+        r, _ = blas.gemv(1.0, A, x, 1.0, y, trans=True,
+                         policy=POLICIES[policy_name])
+        np.testing.assert_allclose(
+            np.asarray(r, np.float64),
+            ref.gemv(1.0, np.asarray(A), np.asarray(x), 1.0, np.asarray(y),
+                     trans=True), rtol=1e-4, atol=1e-4)
+
+    def test_ger(self, policy_name):
+        A, x, y = _mat(17, 23), _vec(17, 1), _vec(23, 2)
+        r, _ = blas.ger(0.5, x, y, A, policy=POLICIES[policy_name])
+        np.testing.assert_allclose(
+            np.asarray(r, np.float64),
+            ref.ger(0.5, np.asarray(x), np.asarray(y), np.asarray(A)),
+            rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("lower", [True, False])
+    def test_trsv(self, policy_name, lower):
+        n = 48
+        A = _mat(n, n)
+        tri = (jnp.tril(A) if lower else jnp.triu(A)) + 4 * jnp.eye(n)
+        b = _vec(n, 3)
+        r, _ = blas.trsv(tri, b, lower=lower, policy=POLICIES[policy_name])
+        want = ref.trsv_np(np.asarray(tri), np.asarray(b), lower=lower)
+        np.testing.assert_allclose(np.asarray(r, np.float64), want,
+                                   rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("policy_name", list(POLICIES))
+class TestLevel3:
+    def test_gemm(self, policy_name):
+        A, B, C = _mat(33, 45), _mat(45, 29, 1), _mat(33, 29, 2)
+        r, _ = blas.gemm(1.1, A, B, 0.4, C, policy=POLICIES[policy_name])
+        np.testing.assert_allclose(
+            np.asarray(r, np.float64),
+            ref.gemm(1.1, np.asarray(A), np.asarray(B), 0.4, np.asarray(C)),
+            rtol=1e-4, atol=1e-3)
+
+    def test_symm(self, policy_name):
+        A, B = _mat(31, 31), _mat(31, 19, 1)
+        r, _ = blas.symm(1.0, A, B, policy=POLICIES[policy_name])
+        want = ref.symm(1.0, np.asarray(A), np.asarray(B), 0.0,
+                        np.zeros((31, 19)))
+        np.testing.assert_allclose(np.asarray(r, np.float64), want,
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_trmm(self, policy_name):
+        A, B = _mat(26, 26), _mat(26, 14, 1)
+        r, _ = blas.trmm(2.0, A, B, policy=POLICIES[policy_name])
+        np.testing.assert_allclose(
+            np.asarray(r, np.float64),
+            ref.trmm(2.0, np.asarray(A), np.asarray(B)),
+            rtol=1e-4, atol=1e-3)
+
+    def test_syrk(self, policy_name):
+        A = _mat(22, 31)
+        r, _ = blas.syrk(1.0, A, policy=POLICIES[policy_name])
+        np.testing.assert_allclose(
+            np.asarray(r, np.float64),
+            ref.syrk(1.0, np.asarray(A), 0.0, np.zeros((22, 22))),
+            rtol=1e-4, atol=1e-3)
+
+    @pytest.mark.parametrize("lower", [True, False])
+    def test_trsm(self, policy_name, lower):
+        n = 64
+        A = _mat(n, n)
+        tri = (jnp.tril(A) if lower else jnp.triu(A)) + 4 * jnp.eye(n)
+        B = _mat(n, 24, 1)
+        r, _ = blas.trsm(1.0, tri, B, lower=lower,
+                         policy=POLICIES[policy_name])
+        want = ref.trsm(1.0, np.asarray(tri), np.asarray(B), lower=lower)
+        np.testing.assert_allclose(np.asarray(r, np.float64), want,
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestInjection:
+    """Paper Sec. 6.3: inject, detect, correct, verify against the oracle."""
+
+    def test_gemm_20_errors(self):
+        """20 independent single-error intervals, all corrected."""
+        A, B = _mat(40, 50), _mat(50, 30, 1)
+        want = np.asarray(A, np.float64) @ np.asarray(B, np.float64)
+        det = corr = 0
+        for i in range(20):
+            inj = Injection.at(stream=2, pos=(37 * i) % (40 * 30),
+                               delta=2.0 + i * 0.1)
+            C, rep = blas.gemm(1.0, A, B, policy=HYBRID_UNFUSED,
+                               injection=inj)
+            det += int(rep["abft_detected"])
+            corr += int(rep["abft_corrected"])
+            np.testing.assert_allclose(np.asarray(C, np.float64), want,
+                                       rtol=1e-3, atol=1e-3)
+        assert det == 20 and corr == 20
+
+    def test_dmr_streams_both_detected(self):
+        x = _vec(500)
+        for stream in (0, 1):
+            inj = Injection.at(stream=stream, pos=123, delta=1.0)
+            r, rep = blas.scal(3.0, x, policy=HYBRID_UNFUSED, injection=inj)
+            assert int(rep["dmr_detected"]) == 1
+            assert int(rep["dmr_corrected"]) == 1
+            np.testing.assert_allclose(np.asarray(r),
+                                       3.0 * np.asarray(x), rtol=1e-6)
+
+    def test_trsv_injected(self):
+        n = 32
+        A = jnp.tril(_mat(n, n)) + 4 * jnp.eye(n)
+        b = _vec(n, 3)
+        inj = Injection.at(stream=0, pos=2, delta=1.0)
+        r, rep = blas.trsv(A, b, policy=HYBRID_UNFUSED, injection=inj)
+        assert int(rep["dmr_detected"]) >= 1
+        want = ref.trsv_np(np.asarray(A), np.asarray(b))
+        np.testing.assert_allclose(np.asarray(r, np.float64), want,
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_unprotected_is_wrong(self):
+        """Sanity: with FT off the same injection corrupts the result."""
+        A, B = _mat(20, 20), _mat(20, 20, 1)
+        inj = Injection.at(stream=2, pos=5, delta=10.0)
+        C, rep = blas.gemm(1.0, A, B, policy=OFF, injection=inj)
+        want = np.asarray(A) @ np.asarray(B)
+        assert abs(np.asarray(C).reshape(-1)[5] - want.reshape(-1)[5]) > 1.0
+        assert int(rep["abft_detected"]) == 0

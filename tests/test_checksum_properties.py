@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) on the ABFT checksum invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import checksum as cks
+from repro.core import ft_config
+from repro.core.abft import ft_matmul
+from repro.core.injection import Injection
+
+HYP = dict(deadline=None, max_examples=25,
+           suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+@st.composite
+def matmul_case(draw):
+    m = draw(st.integers(2, 24))
+    k = draw(st.integers(2, 24))
+    n = draw(st.integers(2, 24))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, k, n, seed
+
+
+def _mats(m, k, n, seed, scale=1.0):
+    kk = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(kk)
+    A = jax.random.normal(k1, (m, k), jnp.float32) * scale
+    B = jax.random.normal(k2, (k, n), jnp.float32) * scale
+    return A, B
+
+
+@given(matmul_case())
+@settings(**HYP)
+def test_checksum_identity_holds_clean(case):
+    """e^T (AB) == (e^T A) B and (AB) e == A (B e) within round-off."""
+    m, k, n, seed = case
+    A, B = _mats(m, k, n, seed)
+    refs = cks.encode_refs(A, B)
+    C = A @ B
+    np.testing.assert_allclose(np.asarray(C.sum(0)),
+                               np.asarray(refs.colsum_ref),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(C.sum(1)),
+                               np.asarray(refs.rowsum_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+@given(matmul_case())
+@settings(**HYP)
+def test_clean_matmul_never_flags(case):
+    m, k, n, seed = case
+    A, B = _mats(m, k, n, seed)
+    _, rep = ft_matmul(A, B, policy=ft_config.HYBRID_UNFUSED)
+    assert int(rep["abft_detected"]) == 0
+    assert int(rep["abft_unrecoverable"]) == 0
+
+
+@given(matmul_case(), st.integers(0, 10**6), st.floats(0.5, 50.0),
+       st.booleans())
+@settings(**HYP)
+def test_single_error_corrected(case, pos_seed, delta, negative):
+    """Any single injected error above threshold is located + removed."""
+    m, k, n, seed = case
+    A, B = _mats(m, k, n, seed)
+    pos = pos_seed % (m * n)
+    d = -delta if negative else delta
+    inj = Injection.at(stream=2, pos=pos, delta=float(d))
+    C, rep = ft_matmul(A, B, policy=ft_config.HYBRID_UNFUSED, injection=inj)
+    assert int(rep["abft_detected"]) >= 1
+    assert int(rep["abft_corrected"]) >= 1
+    assert int(rep["abft_unrecoverable"]) == 0
+    np.testing.assert_allclose(np.asarray(C), np.asarray(A @ B),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(matmul_case(), st.integers(0, 10**6), st.floats(1.0, 20.0))
+@settings(**HYP)
+def test_two_errors_distinct_rows_cols(case, pos_seed, delta):
+    m, k, n, seed = case
+    if m < 3 or n < 3:
+        return
+    A, B = _mats(m, k, n, seed)
+    r1, c1 = pos_seed % m, (pos_seed // m) % n
+    r2, c2 = (r1 + 1) % m, (c1 + 1) % n
+    inj = (Injection.at(stream=2, pos=r1 * n + c1, delta=float(delta))
+           .add(stream=3, pos=r2 * n + c2, delta=float(-delta) * 0.7,
+                slot=1))
+    C, rep = ft_matmul(A, B, policy=ft_config.HYBRID_UNFUSED, injection=inj)
+    assert int(rep["abft_corrected"]) >= 2
+    np.testing.assert_allclose(np.asarray(C), np.asarray(A @ B),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(matmul_case())
+@settings(**HYP)
+def test_scaling_invariance_of_tolerance(case):
+    """Large-magnitude clean matmuls must not false-positive (tolerance
+    scales with |A||B|)."""
+    m, k, n, seed = case
+    A, B = _mats(m, k, n, seed, scale=1e3)
+    _, rep = ft_matmul(A, B, policy=ft_config.HYBRID_UNFUSED)
+    assert int(rep["abft_detected"]) == 0
+
+
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(0, 2**31 - 1))
+@settings(**HYP)
+def test_dmr_reduce_matches_sum(rows, cols, seed):
+    from repro.core.dmr import dmr_reduce_sum
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols), jnp.float32)
+    s, v = dmr_reduce_sum(x, block=64)
+    np.testing.assert_allclose(float(s), float(x.sum()), rtol=1e-4,
+                               atol=1e-4)
+    assert int(v.detected) == 0

@@ -1,0 +1,105 @@
+"""End-to-end fault drills: errors injected into a full train step are
+corrected online - the trained model is bit-equivalent to the clean run
+(the paper's Sec. 6.3 validation, at framework scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import FTPolicy, Injection, OFF, report as ftreport
+from repro.core.ft_dense import ft_dense
+from repro.models import ShardCtx, build_model, param_specs
+from repro.models.specs import batch_specs
+
+HYBRID_MODEL = FTPolicy(mode="hybrid", fused=False)
+MSPEC = {"nll": P(), "aux": P(), "report": {k: P() for k in ftreport.FIELDS}}
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _ctx(policy):
+    return ShardCtx(data_axis=("data",), model_axis="model",
+                    data_size=1, model_size=1, policy=policy)
+
+
+def test_ft_on_equals_ft_off_clean(mesh):
+    """With no faults, the hybrid FT pipeline must not change the loss."""
+    cfg = get_config("llama3_8b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), 1)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                          cfg.vocab)}
+    pspecs = param_specs(params)
+    bspecs = batch_specs(batch, multi_pod=False)
+
+    losses = {}
+    for name, pol in [("off", OFF), ("hybrid", HYBRID_MODEL)]:
+        ctx = _ctx(pol)
+        fn = jax.jit(jax.shard_map(
+            lambda p, b: model.train_loss(p, b, ctx), mesh=mesh,
+            in_specs=(pspecs, bspecs), out_specs=(P(), MSPEC),
+            check_vma=False))
+        loss, metrics = fn(params, batch)
+        losses[name] = float(loss)
+        assert int(metrics["report"]["abft_unrecoverable"]) == 0
+    # identical math modulo matmul rounding: very tight tolerance
+    assert abs(losses["off"] - losses["hybrid"]) < 5e-3
+
+
+def test_layer_injection_corrected_in_fwd():
+    """Inject into one FT-protected projection inside a model-sized matmul;
+    the corrected output must match the clean output."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 128), jnp.float32)
+    clean, _ = ft_dense(x, w, policy=HYBRID_MODEL)
+    inj = Injection.at(stream=2, pos=1234, delta=4.0)
+    fixed, rep = ft_dense(x, w, policy=HYBRID_MODEL, injection=inj)
+    assert int(rep["abft_detected"]) == 1
+    assert int(rep["abft_corrected"]) == 1
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(clean),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_collective_checksum_clean_path(mesh):
+    from repro.core import ft_psum
+    pol = FTPolicy(mode="hybrid", verify_collectives=True)
+
+    def f(x):
+        ctx = _ctx(pol)
+        y, rep = ft_psum(x, "data", policy=pol)
+        return y, rep
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,), jnp.float32)
+    y, rep = jax.jit(jax.shard_map(
+        f, mesh=mesh, in_specs=P(), out_specs=(P(), {
+            k: P() for k in ftreport.FIELDS}), check_vma=False))(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+    assert int(rep["collective_detected"]) == 0
+
+
+def test_report_counters_flow_through_train_metrics(mesh):
+    """FT counters must surface in step metrics (fleet SDC observability)."""
+    cfg = get_config("granite_8b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), 1)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                          cfg.vocab)}
+    ctx = _ctx(HYBRID_MODEL)
+    fn = jax.jit(jax.shard_map(
+        lambda p, b: model.train_loss(p, b, ctx), mesh=mesh,
+        in_specs=(param_specs(params), batch_specs(batch, multi_pod=False)),
+        out_specs=(P(), MSPEC), check_vma=False))
+    _, metrics = fn(params, batch)
+    rep = metrics["report"]
+    assert set(rep) == set(ftreport.FIELDS)
+    assert int(rep["dmr_detected"]) == 0  # clean run

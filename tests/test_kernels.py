@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + injection.
+
+Kernels run in interpret mode (CPU container); BlockSpecs are the TPU
+tilings.  Cross-implementation compares use allclose (FMA contraction can
+differ by 1 ulp); in-kernel DMR comparisons remain bitwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Injection
+from repro.core.checksum import verify_and_correct
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+SHAPES_MM = [(16, 16, 16), (128, 128, 128), (200, 150, 260), (64, 300, 40),
+             (129, 257, 130), (8, 8, 520)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mats(m, k, n, dtype, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    A = jax.random.normal(k1, (m, k), jnp.float32).astype(dtype)
+    B = jax.random.normal(k2, (k, n), jnp.float32).astype(dtype)
+    return A, B
+
+
+@pytest.mark.parametrize("shape", SHAPES_MM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_abft_gemm_matches_oracle(shape, dtype):
+    m, k, n = shape
+    A, B = _mats(m, k, n, dtype)
+    C, rs, cs, refs = kops.abft_gemm(A, B, bm=64, bn=128, bk=128)
+    Cr, rsr, csr, refsr = kref.abft_gemm_ref(A, B)
+    tol = dict(rtol=2e-2, atol=1e-1) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cr), **tol)
+    np.testing.assert_allclose(np.asarray(rs), np.asarray(rsr), rtol=2e-2,
+                               atol=1.0)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(csr), rtol=2e-2,
+                               atol=1.0)
+    np.testing.assert_allclose(np.asarray(refs.rowsum_ref),
+                               np.asarray(refsr.rowsum_ref), rtol=2e-2,
+                               atol=1.0)
+
+
+@pytest.mark.parametrize("pos", [0, 777, 199 * 260 - 1])
+def test_abft_gemm_kernel_injection_detected_and_corrected(pos):
+    A, B = _mats(199, 150, 260, jnp.float32)
+    inj = Injection.at(stream=2, pos=pos, delta=7.5)
+    C, rs, cs, refs = kops.abft_gemm(A, B, injection=inj, bm=64, bn=128,
+                                     bk=128)
+    v = verify_and_correct(C, rs, cs, refs, k_dim=150)
+    assert int(v.detected) >= 1 and int(v.corrected) >= 1
+    Cr, *_ = kref.abft_gemm_ref(A, B)
+    np.testing.assert_allclose(np.asarray(v.C), np.asarray(Cr), rtol=1e-3,
+                               atol=1e-2)
+
+
+def test_abft_gemm_checksum_catches_kernel_bug():
+    """The checksums are an oracle for the kernel itself: a corrupted C
+    violates them even when the reference implementation is not at hand."""
+    A, B = _mats(64, 64, 64, jnp.float32)
+    C, rs, cs, refs = kops.abft_gemm(A, B)
+    bad = C.at[3, 5].add(1.0)
+    v = verify_and_correct(bad, bad.sum(1), bad.sum(0), refs, k_dim=64)
+    assert int(v.detected) >= 1
+
+
+@pytest.mark.parametrize("n", [64, 1000, 4096, 5000])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dmr_scal_axpy(n, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32
+                          ).astype(dtype)
+    y = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32
+                          ).astype(dtype)
+    r, rep = kops.dmr_scal(2.5, x)
+    np.testing.assert_allclose(np.asarray(r, np.float32),
+                               np.asarray(kref.scal_ref(2.5, x), np.float32),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+    assert int(rep["dmr_detected"]) == 0
+    r, rep = kops.dmr_axpy(1.5, x, y)
+    np.testing.assert_allclose(
+        np.asarray(r, np.float32),
+        np.asarray(kref.axpy_ref(1.5, x, y), np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-2)
+
+
+@pytest.mark.parametrize("n", [100, 4096, 9000])
+def test_dmr_reductions(n):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    r, _ = kops.dmr_dot(x, y)
+    np.testing.assert_allclose(float(r), float(kref.dot_ref(x, y)),
+                               rtol=1e-4)
+    r, _ = kops.dmr_nrm2(x)
+    np.testing.assert_allclose(float(r), float(kref.nrm2_ref(x)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (300, 700), (128, 1024)])
+def test_dmr_gemv(shape):
+    m, k = shape
+    A = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (k,), jnp.float32)
+    r, rep = kops.dmr_gemv(A, x)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(kref.gemv_ref(A, x)),
+                               rtol=1e-4, atol=1e-4)
+    assert int(rep["dmr_detected"]) == 0
+
+
+@pytest.mark.parametrize("op,args", [
+    ("scal", ()), ("axpy", ()), ("dot", ()), ("nrm2", ()), ("gemv", ()),
+])
+@pytest.mark.parametrize("stream", [0, 1])
+def test_dmr_kernels_inject_detect_correct(op, args, stream):
+    n = 2000
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+    y = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    A = jax.random.normal(jax.random.PRNGKey(2), (128, n), jnp.float32)
+    # reductions: pos indexes the BLOCK partial (verification interval),
+    # elementwise/gemv: pos indexes the output element
+    pos = 1 if op in ("dot", "nrm2") else 3
+    inj = Injection.at(stream=stream, pos=pos, delta=5.0)
+    if op == "scal":
+        r, rep = kops.dmr_scal(2.0, x, injection=inj)
+        want = np.asarray(kref.scal_ref(2.0, x))
+    elif op == "axpy":
+        r, rep = kops.dmr_axpy(2.0, x, y, injection=inj)
+        want = np.asarray(kref.axpy_ref(2.0, x, y))
+    elif op == "dot":
+        r, rep = kops.dmr_dot(x, y, injection=inj)
+        want = np.asarray(kref.dot_ref(x, y))
+    elif op == "nrm2":
+        r, rep = kops.dmr_nrm2(x, injection=inj)
+        want = np.asarray(kref.nrm2_ref(x))
+    else:
+        r, rep = kops.dmr_gemv(A, x, injection=inj)
+        want = np.asarray(kref.gemv_ref(A, x))
+    assert int(rep["dmr_detected"]) == 1
+    assert int(rep["dmr_corrected"]) == 1
+    assert int(rep["dmr_unrecoverable"]) == 0
+    np.testing.assert_allclose(np.asarray(r), want, rtol=1e-4, atol=1e-4)
+
+
+def test_dmr_no_vote_detection_only():
+    x = jax.random.normal(jax.random.PRNGKey(0), (512,), jnp.float32)
+    inj = Injection.at(stream=0, pos=7, delta=1.0)
+    r, rep = kops.dmr_scal(2.0, x, injection=inj, vote=False)
+    assert int(rep["dmr_detected"]) == 1
+    assert int(rep["dmr_corrected"]) == 0
+    # stream-1 carried the corruption and was NOT fixed
+    assert abs(float(r[7]) - float(2.0 * x[7])) > 0.5
+
+
+def test_fused_vs_unfused_same_result():
+    from repro.core import HYBRID, HYBRID_UNFUSED, ft_matmul
+    A, B = _mats(130, 140, 150, jnp.float32)
+    Cf, _ = ft_matmul(A, B, policy=HYBRID)
+    Cu, _ = ft_matmul(A, B, policy=HYBRID_UNFUSED)
+    np.testing.assert_allclose(np.asarray(Cf), np.asarray(Cu), rtol=1e-5,
+                               atol=1e-4)

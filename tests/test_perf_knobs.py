@@ -1,0 +1,97 @@
+"""Perf levers (EXPERIMENTS.md Perf) must not change semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import OFF, report as ftreport
+from repro.models import ShardCtx, build_model, param_specs
+from repro.models.specs import batch_specs
+
+MSPEC = {"nll": P(), "aux": P(), "report": {k: P() for k in ftreport.FIELDS}}
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return ShardCtx(data_axis=("data",), model_axis="model",
+                    data_size=1, model_size=1, policy=OFF)
+
+
+def _loss(cfg, mesh, ctx):
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), 1)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                          cfg.vocab)}
+    fn = jax.jit(jax.shard_map(
+        lambda p, b: model.train_loss(p, b, ctx), mesh=mesh,
+        in_specs=(param_specs(params), batch_specs(batch, multi_pod=False)),
+        out_specs=(P(), MSPEC), check_vma=False))
+    loss, _ = fn(params, batch)
+    # and gradient flows with this remat policy
+    g = jax.jit(jax.shard_map(
+        jax.grad(lambda p, b: model.train_loss(p, b, ctx)[0]), mesh=mesh,
+        in_specs=(param_specs(params), batch_specs(batch, multi_pod=False)),
+        out_specs=param_specs(params), check_vma=False))(params, batch)
+    gn = float(jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                            for x in jax.tree.leaves(g))))
+    return float(loss), gn
+
+
+def test_save_tp_outputs_remat_is_equivalent(mesh, ctx):
+    base = get_config("llama3_8b").smoke()
+    opt = dataclasses.replace(base, remat_policy="save_tp_outputs")
+    l0, g0 = _loss(base, mesh, ctx)
+    l1, g1 = _loss(opt, mesh, ctx)
+    assert abs(l0 - l1) < 1e-5
+    assert abs(g0 - g1) / g0 < 1e-4
+
+
+def test_int8_kv_cache_decode_close_to_bf16(mesh, ctx):
+    logits = {}
+    for mode in ("bf16", "int8"):
+        cfg = dataclasses.replace(get_config("llama3_8b").smoke(),
+                                  kv_cache_dtype=mode)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0), 1)
+        pspecs = param_specs(params)
+        cache = jax.jit(jax.shard_map(
+            lambda p, e: model.init_cache(p, 2, 16, ctx, e), mesh=mesh,
+            in_specs=(pspecs, None), out_specs=P(), check_vma=False))(
+            params, None)
+        cspecs = jax.tree.map(lambda _: P(), cache)
+        rspec = {k: P() for k in ftreport.FIELDS}
+        tok = jax.random.randint(jax.random.PRNGKey(5), (2, 1), 0, cfg.vocab)
+        fn = jax.jit(jax.shard_map(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, ctx),
+            mesh=mesh, in_specs=(pspecs, cspecs, P("data", None), P()),
+            out_specs=(P("data", None, "model"), cspecs, rspec),
+            check_vma=False))
+        lg, cache, _ = fn(params, cache, tok, jnp.int32(0))
+        lg2, _, _ = fn(params, cache, tok, jnp.int32(1))
+        logits[mode] = np.asarray(lg2)
+        if mode == "int8":
+            assert cache["k"].dtype == jnp.int8
+    # int8 cache perturbs logits only at quantization noise level
+    np.testing.assert_allclose(logits["int8"], logits["bf16"],
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_fsdp_single_device_equivalent(mesh, ctx):
+    base = get_config("qwen3_moe_235b_a22b").smoke()  # fsdp in full cfg
+    tp = dataclasses.replace(base, param_shard="tp")
+    fs = dataclasses.replace(base, param_shard="fsdp")
+    l0, _ = _loss(tp, mesh, ctx)
+    l1, _ = _loss(fs, mesh, ctx)
+    assert abs(l0 - l1) < 1e-6

@@ -1,0 +1,193 @@
+"""Optimizer / data / checkpoint / runtime substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import ckpt
+from repro.core import DMR_ONLY, OFF
+from repro.data import DataConfig, Prefetcher, make_batch
+from repro.models.common import ShardCtx
+from repro.optim import adamw
+from repro.runtime import (EXCLUDE, WARN, StragglerConfig, StragglerMonitor,
+                           plan_remesh)
+
+
+# -- optimizer ----------------------------------------------------------------
+def _toy_params():
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (33, 7), jnp.float32),
+            "b": jnp.zeros((7,), jnp.float32)}
+
+
+def test_adamw_decreases_quadratic():
+    params = _toy_params()
+    state = adamw.init_state(params)
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0, warmup=0,
+                            total_steps=100)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum((p["b"] - 1.0) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < 0.5 * l0
+
+
+def test_adamw_dmr_matches_plain():
+    params = _toy_params()
+    g = jax.tree.map(lambda p: jnp.ones_like(p) * 0.1, params)
+    cfg = adamw.AdamWConfig()
+    s1 = adamw.init_state(params)
+    s2 = adamw.init_state(params)
+    p1, _, rep1 = adamw.apply_updates(params, g, s1, cfg, policy=OFF)
+    p2, _, rep2 = adamw.apply_updates(params, g, s2, cfg, policy=DMR_ONLY)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(rep2["dmr_detected"]) == 0
+
+
+def test_zero_single_device_matches_plain():
+    """ZeRO-1 on a 1x1 mesh must equal the replicated-state update."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ctx = ShardCtx(data_axis=("data",), model_axis="model",
+                   data_size=1, model_size=1, policy=OFF)
+    params = _toy_params()
+    g = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    cfg = adamw.AdamWConfig()
+
+    plain_p, _, _ = adamw.apply_updates(params, g, adamw.init_state(params),
+                                        cfg)
+    zstate = adamw.zero_init(params, 1, 1)
+    zfn = jax.jit(jax.shard_map(
+        lambda p, gg, s: adamw.zero_apply(p, gg, s, cfg, ctx, dp_size=1)[0],
+        mesh=mesh, in_specs=(P(), P(), P()), out_specs=P(),
+        check_vma=False))
+    zp = zfn(params, g, zstate)
+    for a, b in zip(jax.tree.leaves(plain_p), jax.tree.leaves(zp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-7)
+
+
+# -- data ---------------------------------------------------------------------
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=8)
+    b1 = make_batch(cfg, 3)
+    b2 = make_batch(cfg, 3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert (b1["tokens"] != make_batch(cfg, 4)["tokens"]).any()
+    # labels are next-token shifted
+    full = make_batch(cfg, 0)
+    np.testing.assert_array_equal(full["tokens"][:, 1:],
+                                  full["labels"][:, :-1])
+    # host sharding slices the same global stream
+    s0 = make_batch(cfg, 3, process_index=0, process_count=2)
+    s1 = make_batch(cfg, 3, process_index=1, process_count=2)
+    np.testing.assert_array_equal(
+        np.concatenate([s0["tokens"], s1["tokens"]]), b1["tokens"])
+
+
+def test_prefetcher_yields_in_order():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=4)
+    pf = Prefetcher(cfg, start_step=5)
+    try:
+        for want in range(5, 9):
+            step, batch = next(pf)
+            assert step == want
+            np.testing.assert_array_equal(batch["tokens"],
+                                          make_batch(cfg, step)["tokens"])
+    finally:
+        pf.close()
+
+
+# -- checkpoint ---------------------------------------------------------------
+def test_ckpt_roundtrip_and_gc(tmp_path):
+    tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "nest": {"b": np.ones((5,), np.int32)}}
+    for step in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), step, tree, keep=2,
+                  extra={"loss": 1.0 / step})
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    dirs = sorted(os.listdir(tmp_path))
+    assert len([d for d in dirs if d.startswith("step_")]) == 2  # gc'd
+    step, got, extra = ckpt.restore(str(tmp_path), tree)
+    assert step == 4 and extra["loss"] == 0.25
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_array_equal(got["nest"]["b"], tree["nest"]["b"])
+
+
+def test_ckpt_detects_corruption(tmp_path):
+    tree = {"w": np.random.default_rng(0).standard_normal(64).astype(
+        np.float32)}
+    path = ckpt.save(str(tmp_path), 7, tree)
+    fn = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    # flip bytes mid-file (the paper's bit-rot scenario at rest)
+    full = os.path.join(path, fn)
+    blob = bytearray(open(full, "rb").read())
+    blob[-10] ^= 0xFF
+    open(full, "wb").write(bytes(blob))
+    with pytest.raises((ckpt.CorruptLeaf, ValueError)):
+        ckpt.restore(str(tmp_path), tree)
+
+
+def test_ckpt_replica_repairs_corruption(tmp_path):
+    tree = {"w": np.random.default_rng(0).standard_normal(64).astype(
+        np.float32)}
+    path = ckpt.save(str(tmp_path), 9, tree, replicas=2)
+    fn = [f for f in os.listdir(path)
+          if f.endswith(".npy") and ".r" not in f][0]
+    full = os.path.join(path, fn)
+    blob = bytearray(open(full, "rb").read())
+    blob[-10] ^= 0xFF
+    open(full, "wb").write(bytes(blob))
+    step, got, _ = ckpt.restore(str(tmp_path), tree)  # falls back to .r1
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+def test_ckpt_no_partial_publish(tmp_path):
+    """A crashed save leaves only a .tmp dir; latest_step ignores it."""
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+# -- runtime ------------------------------------------------------------------
+def test_straggler_flags_slow_host():
+    mon = StragglerMonitor(8, StragglerConfig(grace=2))
+    for step in range(6):
+        for h in range(8):
+            mon.record(h, 1.0 + (3.0 if h == 5 and step >= 2 else 0.0))
+        d = mon.decide()
+        if step >= 4:
+            assert d.get(5) == EXCLUDE or 5 in mon.excluded
+    assert 5 in mon.excluded
+
+
+def test_straggler_ignores_transient():
+    mon = StragglerMonitor(4, StragglerConfig(grace=3, ewma=0.0))
+    for h in range(4):
+        mon.record(h, 1.0)
+    mon.record(2, 9.0)       # one hiccup
+    d = mon.decide()
+    assert d.get(2) in (None, WARN)
+    for _ in range(4):
+        for h in range(4):
+            mon.record(h, 1.0)
+    assert 2 not in mon.excluded
+
+
+def test_plan_remesh_after_failures():
+    plan = plan_remesh(256, model_size=16, global_batch=256)
+    assert plan.shape == (16, 16) and plan.dropped_devices == 0
+    # lose a host (8 chips): 248 devices -> dp 15 doesn't divide 256
+    plan = plan_remesh(248, model_size=16, global_batch=256)
+    assert plan.model == 16
+    assert plan.data * 16 <= 248
+    assert 256 % plan.data == 0
+    with pytest.raises(ValueError):
+        plan_remesh(8, model_size=16, global_batch=256)
