@@ -1,0 +1,24 @@
+# One entry point for the tier-1 suite, the campaign smoke gate, and the
+# benchmark smokes.  CI runs `make ci`.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test campaign-smoke campaign-full drill bench-smoke ci
+
+test:            ## tier-1 test suite (ROADMAP contract)
+	$(PY) -m pytest -x -q
+
+campaign-smoke:  ## fault-injection campaign, CI sub-grid (gates on verdict)
+	$(PY) -m repro.campaign.run --smoke --quiet --out /tmp/ftblas_campaign
+
+campaign-full:   ## full grid: all policies (incl. novote/abft/dmr-fused)
+	$(PY) -m repro.campaign.run --quiet --time --out /tmp/ftblas_campaign_full
+
+drill:           ## Poisson errors-per-minute train-loop drill
+	$(PY) -m repro.campaign.run --smoke --quiet --drill \
+	    --routines gemm --dtypes f32 --out /tmp/ftblas_drill
+
+bench-smoke:     ## per-routine FT overhead timings via the campaign engine
+	$(PY) benchmarks/campaign_overhead.py
+
+ci: test campaign-smoke

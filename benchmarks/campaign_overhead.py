@@ -1,0 +1,33 @@
+"""FT-overhead smoke bench driven by the campaign engine.
+
+Times every protected routine's clean path under the hybrid policies
+against policy "off" (same operands, same compiled-callable discipline as
+the campaign) and prints ``name,us_per_call,derived`` CSV rows - the same
+harness contract as benchmarks/run.py, but cheap enough for CI.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from repro.campaign import build_cells, run_cells, summarize
+
+    cells = build_cells(
+        smoke=True, dtypes=["f32"], models=["single"],
+        policies=["off", "hybrid-unfused", "hybrid-fused"])
+    results = run_cells(cells, seed=0, with_timings=True)
+    report = summarize(results, seed=0, smoke=True)
+
+    print("name,us_per_call,derived")
+    for o in report["overheads"]:
+        print(f"campaign_{o['routine']}_{o['policy']},"
+              f"{o['time_ft_us']:.1f},"
+              f"overhead_pct={o['overhead_pct']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,10 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import blas, ckpt
+from repro import ckpt
 from repro.configs import get_config
-from repro.core import FTPolicy, Injection, report as ftreport
-from repro.core.ft_dense import ft_dense
+from repro.core import FTPolicy, report as ftreport
 from repro.launch.mesh import smoke_mesh
 from repro.launch.steps import make_ctx
 from repro.models import build_model, param_specs
@@ -37,28 +36,26 @@ MSPEC = {"nll": P(), "aux": P(), "report": {k: P() for k in ftreport.FIELDS}}
 
 
 def drill_soft_errors():
+    """Thin client of the campaign engine (repro.campaign): one hybrid
+    mini-grid over an ABFT routine and a DMR routine, oracle-checked."""
     print("== Drill 1: fail-continue (soft errors) ==")
-    key = jax.random.PRNGKey(0)
-    A = jax.random.normal(key, (128, 96), jnp.float32)
-    B = jax.random.normal(jax.random.PRNGKey(1), (96, 160), jnp.float32)
-    total = {"det": 0, "corr": 0}
-    for i in range(20):
-        inj = Injection.at(stream=2, pos=(97 * i) % (128 * 160),
-                           delta=1.5 + 0.1 * i)
-        C, rep = blas.gemm(1.0, A, B, policy=HYBRID, injection=inj)
-        assert np.allclose(np.asarray(C), np.asarray(A) @ np.asarray(B),
-                           atol=1e-3)
-        total["det"] += int(rep["abft_detected"])
-        total["corr"] += int(rep["abft_corrected"])
-    print(f"   ABFT GEMM: 20 errors injected -> {total['det']} detected, "
-          f"{total['corr']} corrected, all outputs match the oracle")
+    from repro.campaign import build_cells, run_cells, summarize
 
-    x = jax.random.normal(key, (50_000,), jnp.float32)
-    y, rep = blas.scal(3.0, x, policy=HYBRID,
-                       injection=Injection.at(stream=1, pos=9, delta=2.0))
-    assert np.array_equal(np.asarray(y), np.asarray(3.0 * x))
-    print(f"   DMR dscal: detected={int(rep['dmr_detected'])} "
-          f"corrected={int(rep['dmr_corrected'])} (bit-exact result)")
+    cells = build_cells(smoke=True,
+                        routines=["gemm", "scal", "trsm"],
+                        policies=["hybrid-unfused"],
+                        dtypes=["f32"], models=["single"])
+    results = run_cells(cells, seed=0)
+    summary = summarize(results, seed=0, smoke=True)["summary"]
+    for r in results:
+        print(f"   {r.cell.cell_id}: {r.verdict} "
+              f"(detected={r.detected} corrected={r.corrected}, "
+              f"|out-oracle|={r.output_err:.2e})")
+    assert summary["ok"], summary
+    print(f"   campaign mini-grid: {summary['cells']} cells, "
+          f"{summary['clean_false_positives']} false positives, "
+          f"detection {summary['detected_protected']}"
+          f"/{summary['protected_cells']}")
 
     # whole train step: injected vs clean loss identical
     cfg = get_config("llama3_8b").smoke()

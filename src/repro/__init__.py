@@ -1,0 +1,1 @@
+from repro import compat as _compat  # noqa: F401  (installs jax polyfills)

@@ -20,14 +20,14 @@ import jax.numpy as jnp
 from repro.core import report as ftreport
 from repro.core.dmr import dmr_compute, dmr_report
 from repro.core.ft_config import FTPolicy, default_policy
-from repro.core.injection import Injection
+from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
 
 
 def _dmr_or_plain(f, *operands, policy: FTPolicy, injection, out_dtype=None):
     if not policy.dmr_on:
         y = f(*operands)
-        if injection is not None:
-            y = injection.perturb(y, stream=0)  # lands unprotected
+        if injection is not None:  # lands unprotected, either DMR stream
+            y = injection.perturb(y, stream=(DMR_STREAM_1, DMR_STREAM_2))
         return y, ftreport.empty_report()
     v = dmr_compute(f, *operands, injection=injection, vote=policy.dmr_vote)
     return v.y, dmr_report(v)

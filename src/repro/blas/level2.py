@@ -23,7 +23,7 @@ from jax import lax
 from repro.core import report as ftreport
 from repro.core.dmr import dmr_compute, dmr_report
 from repro.core.ft_config import FTPolicy, default_policy
-from repro.core.injection import Injection
+from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
 
 
 # -- GEMV ---------------------------------------------------------------------
@@ -48,8 +48,8 @@ def gemv(alpha, A: jax.Array, x: jax.Array, beta, y: jax.Array, *,
 
     if not policy.dmr_on:
         out = f(A, x, y)
-        if injection is not None:
-            out = injection.perturb(out, stream=0)
+        if injection is not None:  # lands unprotected, either DMR stream
+            out = injection.perturb(out, stream=(DMR_STREAM_1, DMR_STREAM_2))
         return out, ftreport.empty_report()
     v = dmr_compute(f, A, x, y, injection=injection, vote=policy.dmr_vote)
     return v.y, dmr_report(v)

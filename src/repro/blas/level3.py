@@ -21,7 +21,7 @@ from repro.core import report as ftreport
 from repro.core.abft import ft_matmul
 from repro.core.dmr import dmr_compute, dmr_report
 from repro.core.ft_config import FTPolicy, default_policy
-from repro.core.injection import Injection
+from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
 
 
 def _combine(alpha, P, beta, C, policy, injection=None):
@@ -37,7 +37,10 @@ def _combine(alpha, P, beta, C, policy, injection=None):
             return alpha * p + beta * c
         args = (P, C)
     if not policy.dmr_on:
-        return f(*args), ftreport.empty_report()
+        y = f(*args)
+        if injection is not None:  # lands unprotected, either DMR stream
+            y = injection.perturb(y, stream=(DMR_STREAM_1, DMR_STREAM_2))
+        return y, ftreport.empty_report()
     v = dmr_compute(f, *args, injection=injection, vote=policy.dmr_vote)
     return v.y, dmr_report(v)
 
@@ -50,7 +53,9 @@ def gemm(alpha, A: jax.Array, B: jax.Array, beta=0.0,
     """C := alpha A B + beta C.  A@B under online ABFT; epilogue under DMR."""
     policy = policy or default_policy()
     P, rep_mm = ft_matmul(A, B, policy=policy, injection=injection)
-    out, rep_ep = _combine(alpha, P, beta, C, policy)
+    # The injection spec carries disjoint stream ids, so passing it to both
+    # phases is safe: ABFT slots fire in the matmul, DMR slots here.
+    out, rep_ep = _combine(alpha, P, beta, C, policy, injection=injection)
     return out, ftreport.merge(rep_mm, rep_ep)
 
 
@@ -88,7 +93,7 @@ def syrk(alpha, A: jax.Array, beta=0.0, C: Optional[jax.Array] = None, *,
     """C := alpha A A^T + beta C under ABFT."""
     policy = policy or default_policy()
     P, rep_mm = ft_matmul(A, A.T, policy=policy, injection=injection)
-    out, rep_ep = _combine(alpha, P, beta, C, policy)
+    out, rep_ep = _combine(alpha, P, beta, C, policy, injection=injection)
     return out, ftreport.merge(rep_mm, rep_ep)
 
 
@@ -150,7 +155,8 @@ def trsm(alpha, A: jax.Array, B: jax.Array, *, lower: bool = True,
             return xs
 
         if policy.dmr_on:
-            v = dmr_compute(solve_diag, diag, rhs, rd, vote=policy.dmr_vote)
+            v = dmr_compute(solve_diag, diag, rhs, rd, injection=inj,
+                            vote=policy.dmr_vote)
             X_blk, rep_diag = v.y, dmr_report(v)
         else:
             X_blk, rep_diag = solve_diag(diag, rhs, rd), ftreport.empty_report()

@@ -1,0 +1,21 @@
+"""Fault-injection campaign engine (paper Sec. 6.3, at subsystem scale).
+
+Sweeps routine x policy x dtype x error-model cells, injecting soft errors
+through the jit-compatible ``Injection`` seam and scoring every cell against
+the float64 oracles in ``blas/ref.py``.
+
+  from repro.campaign import build_cells, run_cells, summarize
+
+  cells = build_cells(smoke=True)
+  results = run_cells(cells, seed=0)
+  report = summarize(results, seed=0, smoke=True)
+
+CLI: ``python -m repro.campaign.run --smoke --out /tmp/campaign``.
+"""
+from repro.campaign.errors import (PoissonSchedule, burst, exponent_delta,
+                                   single_error)
+from repro.campaign.grid import (Cell, POLICIES, ROUTINES, SMOKE_POLICIES,
+                                 build_cells)
+from repro.campaign.report import (summarize, to_markdown, write_json,
+                                   write_markdown)
+from repro.campaign.runner import CellResult, run_cells

@@ -1,0 +1,168 @@
+"""Error models for fault-injection campaigns.
+
+``core.injection.Injection`` is the *mechanism* (where a delta lands, jit
+compatible); this module is the *model* - how campaigns choose deltas,
+positions, counts and schedules.  Three models, mirroring the injection
+methodology of FT-GEMM (arXiv:2305.02444) and the GPU online-ABFT anatomy
+paper (arXiv:2305.01024):
+
+  single   one error per run: exponent-scaled delta (a soft error flips an
+           exponent bit, so magnitudes are log-uniform, not uniform) at a
+           PRNG-chosen position on a chosen stream.
+
+  burst    multiple errors in one verification interval, occupying both
+           ABFT accumulator slots - stresses the multi-correction loop of
+           ``checksum.verify_and_correct`` and the recompute fallback.
+
+  poisson  a *rate* model: errors arrive as a Poisson process with a
+           configured errors-per-minute intensity; each step samples the
+           error count for its time slice.  This reproduces the paper's
+           "hundreds of errors injected per minute" regime inside a jitted
+           train loop - the schedule is driven entirely by a PRNG key, so
+           a campaign is bit-reproducible from its seed.
+
+Everything returns ``Injection`` pytrees built from traced arrays, so every
+model composes with ``jax.jit`` / ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, DMR_STREAM_1,
+                                  Injection)
+
+ERROR_MODELS = ("single", "burst", "poisson")
+
+
+def exponent_delta(key: jax.Array, *, base_scale: float = 1.0,
+                   min_exp: int = 0, max_exp: int = 8) -> jax.Array:
+    """Soft-error magnitude model: sign * base_scale * 2^e, e ~ U[min, max].
+
+    An exponent-bit flip multiplies a value by a power of two, so injected
+    magnitudes should be log-uniform.  ``base_scale`` anchors the ladder to
+    the routine's output scale (e.g. sqrt(K) for a unit-normal GEMM) so the
+    smallest rung still clears the checksum round-off threshold.
+    """
+    k_exp, k_sign = jax.random.split(key)
+    e = jax.random.randint(k_exp, (), min_exp, max_exp + 1)
+    sign = jnp.where(jax.random.bernoulli(k_sign), 1.0, -1.0)
+    return sign * base_scale * jnp.exp2(e.astype(jnp.float32))
+
+
+def _empty_arrays() -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    n = Injection.N_SLOTS
+    z = jnp.zeros((n,), jnp.int32)
+    return jnp.zeros((n,), jnp.bool_), z, z, jnp.zeros((n,), jnp.float32)
+
+
+def single_error(key: jax.Array, *, stream: int, out_size: int,
+                 base_scale: float = 1.0, pos: int | None = None,
+                 min_exp: int = 0, max_exp: int = 8,
+                 force_positive: bool = False) -> Injection:
+    """One exponent-scaled error on ``stream``; position PRNG-chosen unless
+    pinned by ``pos`` (routines with location-sensitive detection, e.g.
+    iamax, pin the position so the error is architecturally visible).
+    ``force_positive`` drops the random sign - needed when detection rides
+    on a magnitude comparison (argmax over |x|) that a large negative delta
+    cannot win."""
+    k_pos, k_mag = jax.random.split(key)
+    active, streams, poss, deltas = _empty_arrays()
+    p = (jnp.asarray(pos, jnp.int32) if pos is not None
+         else jax.random.randint(k_pos, (), 0, max(out_size, 1), jnp.int32))
+    d = exponent_delta(k_mag, base_scale=base_scale,
+                       min_exp=min_exp, max_exp=max_exp)
+    d = jnp.abs(d) if force_positive else d
+    return Injection.from_arrays(
+        active.at[0].set(True),
+        streams.at[0].set(stream),
+        poss.at[0].set(p),
+        deltas.at[0].set(d),
+    )
+
+
+def burst(key: jax.Array, *, out_size: int,
+          streams: Sequence[int] = (ABFT_ACC, ABFT_ACC_2),
+          base_scale: float = 1.0,
+          min_exp: int = 0, max_exp: int = 8) -> Injection:
+    """len(streams) simultaneous errors in one verification interval.
+
+    Positions are drawn without replacement when the output is large enough
+    (distinct positions exercise the multi-correction path; coincident ones
+    would alias into a single larger error).
+    """
+    n = len(streams)
+    assert n <= Injection.N_SLOTS
+    k_pos, k_mag = jax.random.split(key)
+    # Distinct positions: random base + distinct offsets, mod size.  The
+    # +1 keeps matrix-shaped domains from putting every error in the same
+    # column (out_size//n is often a multiple of the row length).
+    base = jax.random.randint(k_pos, (), 0, max(out_size, 1), jnp.int32)
+    offsets = jnp.arange(n, dtype=jnp.int32) \
+        * (max(out_size // max(n, 1), 1) + 1)
+    pos = (base + offsets) % max(out_size, 1)
+    mags = jax.vmap(
+        lambda k: exponent_delta(k, base_scale=base_scale,
+                                 min_exp=min_exp, max_exp=max_exp)
+    )(jax.random.split(k_mag, n))
+    active, st, poss, deltas = _empty_arrays()
+    for i, s in enumerate(streams):
+        active = active.at[i].set(True)
+        st = st.at[i].set(s)
+        poss = poss.at[i].set(pos[i])
+        deltas = deltas.at[i].set(mags[i])
+    return Injection.from_arrays(active, st, poss, deltas)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonSchedule:
+    """Errors-per-minute rate schedule for train-loop drills.
+
+    ``sample(key)`` draws one step's Injection: the number of errors in the
+    step's time slice is Poisson(rate_per_min * step_time_s / 60), truncated
+    to ``Injection.N_SLOTS`` (the per-interval slot budget; the truncation
+    count is visible via ``expected_per_step`` for calibration).  Streams
+    cycle through ``stream_choices`` so a hybrid policy sees both DMR- and
+    ABFT-bound errors.
+    """
+
+    rate_per_min: float
+    step_time_s: float
+    out_size: int
+    stream_choices: Tuple[int, ...] = (DMR_STREAM_1, ABFT_ACC)
+    base_scale: float = 1.0
+    min_exp: int = 0
+    max_exp: int = 6
+
+    @property
+    def lam(self) -> float:
+        return self.rate_per_min * self.step_time_s / 60.0
+
+    @property
+    def expected_per_step(self) -> float:
+        return self.lam
+
+    def sample(self, key: jax.Array) -> Injection:
+        k_n, k_pos, k_mag, k_st = jax.random.split(key, 4)
+        n_slots = Injection.N_SLOTS
+        n_err = jnp.minimum(
+            jax.random.poisson(k_n, self.lam).astype(jnp.int32), n_slots)
+        slot = jnp.arange(n_slots, dtype=jnp.int32)
+        active = slot < n_err
+        pos = jax.random.randint(k_pos, (n_slots,), 0,
+                                 max(self.out_size, 1), jnp.int32)
+        choices = jnp.asarray(self.stream_choices, jnp.int32)
+        st = choices[jax.random.randint(k_st, (n_slots,), 0, len(choices))]
+        deltas = jax.vmap(
+            lambda k: exponent_delta(k, base_scale=self.base_scale,
+                                     min_exp=self.min_exp,
+                                     max_exp=self.max_exp)
+        )(jax.random.split(k_mag, n_slots))
+        return Injection.from_arrays(
+            active, st, pos, jnp.where(active, deltas, 0.0))
+
+    def n_active(self, inj: Injection) -> jax.Array:
+        return inj.active.sum().astype(jnp.int32)

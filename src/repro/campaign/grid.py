@@ -1,0 +1,510 @@
+"""Campaign sweep grid: routine x policy x dtype x shape x error model.
+
+``build_cells`` enumerates the campaign as a list of plain-data ``Cell``
+records (JSON-trivial, shippable to workers); ``ROUTINES`` / ``POLICIES``
+are the registries that materialize a cell back into executable pieces.
+
+Each ``Routine`` wraps one protected FT-BLAS entry point behind a uniform
+four-method surface:
+
+  make(key, dtype)          -> operand pytree (deterministic from the key)
+  run(ops, policy, inj)     -> (flat result, FTReport)  [jit-able]
+  oracle(ops)               -> flat float64 numpy reference (blas/ref.py)
+  streams                   -> which injection streams the routine exposes,
+                               and the flat-index domain each stream targets
+
+Stream protection is a *joint* property of routine and policy: a DMR stream
+is protected iff the policy runs DMR on that routine's compute class, an
+ABFT stream iff the policy checksums its matmuls.  Cells where the injected
+stream is NOT protected are kept as controls - they demonstrate the error
+actually corrupts the output when nothing defends it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import blas
+from repro.blas import ref
+from repro.core.ft_config import FTPolicy
+from repro.core.ft_dense import ft_bmm, ft_dense
+from repro.core.injection import (ABFT_ACC, DMR_STREAM_1, DMR_STREAM_2)
+
+DTYPES: Dict[str, jnp.dtype] = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+# Per-dtype relative tolerance for oracle comparison, scaled by each
+# routine's typical output magnitude (ref_scale).  bf16 carries ~8 mantissa
+# bits, so clean results already drift at the percent level.
+TOL_REL = {"f32": 2e-3, "bf16": 0.12}
+
+
+# -- axes ---------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PolicyCase:
+    name: str
+    policy: FTPolicy
+
+
+POLICIES: Dict[str, PolicyCase] = {
+    p.name: p for p in (
+        PolicyCase("off", FTPolicy(mode="off")),
+        PolicyCase("hybrid-fused", FTPolicy(mode="hybrid", fused=True)),
+        PolicyCase("hybrid-unfused", FTPolicy(mode="hybrid", fused=False)),
+        PolicyCase("dmr-unfused", FTPolicy(mode="dmr", fused=False)),
+        PolicyCase("dmr-fused", FTPolicy(mode="dmr", fused=True)),
+        PolicyCase("abft-unfused", FTPolicy(mode="abft", fused=False)),
+        PolicyCase("hybrid-novote",
+                   FTPolicy(mode="hybrid", fused=False, dmr_vote=False)),
+        PolicyCase("hybrid-recompute",
+                   FTPolicy(mode="hybrid", fused=False,
+                            recompute_fallback=True)),
+    )
+}
+
+SMOKE_POLICIES = ("off", "hybrid-fused", "hybrid-unfused", "dmr-unfused")
+FULL_POLICIES = tuple(POLICIES)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One injectable stream of a routine."""
+    kind: str                    # "dmr" | "abft"
+    stream: int                  # core.injection stream id
+    domain: int                  # flat-index positions the stream can hit
+    pin_pos: Optional[int] = None  # fixed position (location-sensitive dets)
+    positive_delta: bool = False   # magnitude-comparison detection (iamax)
+
+    def protected_under(self, policy: FTPolicy) -> bool:
+        if self.kind == "dmr":
+            return policy.dmr_on
+        return policy.abft_on
+
+
+@dataclasses.dataclass(frozen=True)
+class Routine:
+    name: str
+    level: str                                   # "L1" | "L2" | "L3" | "model"
+    make: Callable[[jax.Array, jnp.dtype], tuple]
+    run: Callable[..., Tuple[jax.Array, dict]]   # (ops, policy, inj)
+    oracle: Callable[[tuple], np.ndarray]
+    streams: Callable[[tuple], Tuple[StreamSpec, ...]]
+    base_scale: float                            # delta anchor (output scale)
+    ref_scale: float                             # oracle-comparison scale
+    # DMR voting corrects; ABFT corrects via checksum algebra.  iamax is the
+    # one detect+correct-by-vote routine whose *detection* needs the error
+    # to change the argmax - its StreamSpec pins the position.
+
+    def tol(self, dtype_name: str) -> float:
+        return TOL_REL[dtype_name] * self.ref_scale
+
+
+def _np64(x) -> np.ndarray:
+    return np.asarray(x, np.float64)
+
+
+def _f(x) -> np.ndarray:
+    return np.asarray(jnp.asarray(x, jnp.float32)).astype(np.float64)
+
+
+# -- operand builders ---------------------------------------------------------
+N1 = 1000                 # L1 vector length (not a lane multiple)
+GEMV_M, GEMV_K = 96, 80
+TRSV_N = 21               # forces the padding path (block=8)
+GEMM_M, GEMM_K, GEMM_N = 48, 40, 56
+TRSM_M, TRSM_N = 48, 24   # 48 % 32 != 0 -> padded panel loop
+DENSE_B, DENSE_S, DENSE_K, DENSE_N = 2, 8, 40, 56
+BMM_B, BMM_M, BMM_K, BMM_N = 3, 16, 40, 24
+
+
+def _normal(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tri_wellcond(key, n, dtype, lower=True):
+    """Triangular operand with dominant diagonal (stable substitution)."""
+    A = 0.2 * jax.random.normal(key, (n, n), jnp.float32)
+    A = jnp.tril(A) if lower else jnp.triu(A)
+    A = A + 3.0 * jnp.eye(n)
+    return A.astype(dtype)
+
+
+def _routines() -> Dict[str, Routine]:
+    r: Dict[str, Routine] = {}
+
+    def add(rt: Routine):
+        r[rt.name] = rt
+
+    # ---- Level 1 (DMR) ----
+    add(Routine(
+        "scal", "L1",
+        make=lambda key, dt: (_normal(key, (N1,), dt),),
+        run=lambda ops, pol, inj: blas.scal(2.5, ops[0], policy=pol,
+                                            injection=inj),
+        oracle=lambda ops: ref.scal(2.5, _f(ops[0])).ravel(),
+        streams=lambda ops: (StreamSpec("dmr", DMR_STREAM_2, N1),),
+        base_scale=4.0, ref_scale=12.0))
+
+    add(Routine(
+        "axpy", "L1",
+        make=lambda key, dt: tuple(
+            _normal(k, (N1,), dt) for k in jax.random.split(key, 2)),
+        run=lambda ops, pol, inj: blas.axpy(1.5, ops[0], ops[1], policy=pol,
+                                            injection=inj),
+        oracle=lambda ops: ref.axpy(1.5, _f(ops[0]), _f(ops[1])).ravel(),
+        streams=lambda ops: (StreamSpec("dmr", DMR_STREAM_1, N1),),
+        base_scale=4.0, ref_scale=10.0))
+
+    def _dot_run(ops, pol, inj):
+        y, rep = blas.dot(ops[0], ops[1], policy=pol, injection=inj)
+        return y.reshape(1), rep
+
+    add(Routine(
+        "dot", "L1",
+        make=lambda key, dt: tuple(
+            _normal(k, (N1,), dt) for k in jax.random.split(key, 2)),
+        run=_dot_run,
+        oracle=lambda ops: np.asarray(
+            [ref.dot(_f(ops[0]), _f(ops[1]))]),
+        # pos indexes the DMR *block partial*; with N1 < 4096 there is
+        # exactly one, so the position is pinned to 0.
+        streams=lambda ops: (StreamSpec("dmr", DMR_STREAM_1, 1, pin_pos=0),),
+        base_scale=8.0, ref_scale=float(np.sqrt(N1) * 2)))
+
+    def _nrm2_run(ops, pol, inj):
+        y, rep = blas.nrm2(ops[0], policy=pol, injection=inj)
+        return y.reshape(1), rep
+
+    add(Routine(
+        "nrm2", "L1",
+        make=lambda key, dt: (_normal(key, (N1,), dt),),
+        run=_nrm2_run,
+        oracle=lambda ops: np.asarray([ref.nrm2(_f(ops[0]))]),
+        streams=lambda ops: (StreamSpec("dmr", DMR_STREAM_2, 1, pin_pos=0),),
+        base_scale=16.0, ref_scale=float(np.sqrt(N1))))
+
+    def _rot_run(ops, pol, inj):
+        xo, yo, rep = blas.rot(ops[0], ops[1], 0.8, 0.6, policy=pol,
+                               injection=inj)
+        return jnp.concatenate([xo.ravel(), yo.ravel()]), rep
+
+    add(Routine(
+        "rot", "L1",
+        make=lambda key, dt: tuple(
+            _normal(k, (N1,), dt) for k in jax.random.split(key, 2)),
+        run=_rot_run,
+        oracle=lambda ops: np.concatenate(
+            [a.ravel() for a in ref.rot(_f(ops[0]), _f(ops[1]), 0.8, 0.6)]),
+        streams=lambda ops: (StreamSpec("dmr", DMR_STREAM_1, 2 * N1),),
+        base_scale=4.0, ref_scale=8.0))
+
+    def _iamax_run(ops, pol, inj):
+        i, rep = blas.iamax(ops[0], policy=pol, injection=inj)
+        return i.astype(jnp.float32).reshape(1), rep
+
+    def _iamax_streams(ops):
+        # Detection needs the argmax to MOVE: pin the error next to the
+        # true maximum with a magnitude that dwarfs it (base_scale below).
+        x = np.asarray(jnp.asarray(ops[0], jnp.float32))
+        pin = int((np.argmax(np.abs(x)) + 1) % x.shape[0])
+        return (StreamSpec("dmr", DMR_STREAM_1, N1, pin_pos=pin,
+                           positive_delta=True),)
+
+    add(Routine(
+        "iamax", "L1",
+        make=lambda key, dt: (_normal(key, (N1,), dt),),
+        run=_iamax_run,
+        oracle=lambda ops: np.asarray([ref.iamax(_f(ops[0]))], np.float64),
+        streams=_iamax_streams,
+        base_scale=64.0, ref_scale=0.4))
+
+    # ---- Level 2 (DMR) ----
+    def _gemv_make(key, dt):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return (_normal(k1, (GEMV_M, GEMV_K), dt),
+                _normal(k2, (GEMV_K,), dt), _normal(k3, (GEMV_M,), dt))
+
+    add(Routine(
+        "gemv", "L2",
+        make=_gemv_make,
+        run=lambda ops, pol, inj: blas.gemv(1.0, ops[0], ops[1], 0.5, ops[2],
+                                            policy=pol, injection=inj),
+        oracle=lambda ops: ref.gemv(1.0, _f(ops[0]), _f(ops[1]), 0.5,
+                                    _f(ops[2])).ravel(),
+        streams=lambda ops: (StreamSpec("dmr", DMR_STREAM_1, GEMV_M),),
+        base_scale=float(4 * np.sqrt(GEMV_K)),
+        ref_scale=float(4 * np.sqrt(GEMV_K))))
+
+    def _ger_make(key, dt):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return (_normal(k1, (GEMV_M,), dt), _normal(k2, (GEMV_K,), dt),
+                _normal(k3, (GEMV_M, GEMV_K), dt))
+
+    add(Routine(
+        "ger", "L2",
+        make=_ger_make,
+        run=lambda ops, pol, inj: blas.ger(1.5, ops[0], ops[1], ops[2],
+                                           policy=pol, injection=inj),
+        oracle=lambda ops: ref.ger(1.5, _f(ops[0]), _f(ops[1]),
+                                   _f(ops[2])).ravel(),
+        streams=lambda ops: (StreamSpec("dmr", DMR_STREAM_2,
+                                        GEMV_M * GEMV_K),),
+        base_scale=8.0, ref_scale=12.0))
+
+    def _trsv_make(key, dt):
+        k1, k2 = jax.random.split(key)
+        return (_tri_wellcond(k1, TRSV_N, dt), _normal(k2, (TRSV_N,), dt))
+
+    add(Routine(
+        "trsv", "L2",
+        make=_trsv_make,
+        run=lambda ops, pol, inj: blas.trsv(ops[0], ops[1], policy=pol,
+                                            injection=inj),
+        oracle=lambda ops: ref.trsv_np(_f(ops[0]), _f(ops[1])).ravel(),
+        # pos indexes the per-panel rhs (block=8); the same spec fires in
+        # every panel of the fori_loop.
+        streams=lambda ops: (StreamSpec("dmr", DMR_STREAM_1, 8),),
+        base_scale=4.0, ref_scale=3.0))
+
+    # ---- Level 3 (ABFT matmul core + DMR epilogue) ----
+    def _gemm_make(key, dt):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return (_normal(k1, (GEMM_M, GEMM_K), dt),
+                _normal(k2, (GEMM_K, GEMM_N), dt),
+                _normal(k3, (GEMM_M, GEMM_N), dt))
+
+    mn = GEMM_M * GEMM_N
+    sK = float(np.sqrt(GEMM_K))
+
+    add(Routine(
+        "gemm", "L3",
+        make=_gemm_make,
+        run=lambda ops, pol, inj: blas.gemm(1.0, ops[0], ops[1], 0.5, ops[2],
+                                            policy=pol, injection=inj),
+        oracle=lambda ops: ref.gemm(1.0, _f(ops[0]), _f(ops[1]), 0.5,
+                                    _f(ops[2])).ravel(),
+        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, mn),
+                             StreamSpec("dmr", DMR_STREAM_1, mn)),
+        base_scale=4 * sK, ref_scale=4 * sK))
+
+    def _symm_make(key, dt):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return (_normal(k1, (GEMM_M, GEMM_M), dt),
+                _normal(k2, (GEMM_M, GEMM_N), dt),
+                _normal(k3, (GEMM_M, GEMM_N), dt))
+
+    add(Routine(
+        "symm", "L3",
+        make=_symm_make,
+        run=lambda ops, pol, inj: blas.symm(1.0, ops[0], ops[1], 0.5, ops[2],
+                                            policy=pol, injection=inj),
+        oracle=lambda ops: ref.symm(1.0, _f(ops[0]), _f(ops[1]), 0.5,
+                                    _f(ops[2])).ravel(),
+        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, mn),
+                             StreamSpec("dmr", DMR_STREAM_2, mn)),
+        base_scale=float(4 * np.sqrt(GEMM_M)),
+        ref_scale=float(4 * np.sqrt(GEMM_M))))
+
+    add(Routine(
+        "trmm", "L3",
+        make=lambda key, dt: (
+            _normal(jax.random.fold_in(key, 0), (GEMM_M, GEMM_M), dt),
+            _normal(jax.random.fold_in(key, 1), (GEMM_M, GEMM_N), dt)),
+        run=lambda ops, pol, inj: blas.trmm(2.0, ops[0], ops[1], policy=pol,
+                                            injection=inj),
+        oracle=lambda ops: ref.trmm(2.0, _f(ops[0]), _f(ops[1])).ravel(),
+        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, mn),
+                             StreamSpec("dmr", DMR_STREAM_1, mn)),
+        base_scale=float(8 * np.sqrt(GEMM_M)),
+        ref_scale=float(8 * np.sqrt(GEMM_M))))
+
+    add(Routine(
+        "syrk", "L3",
+        make=lambda key, dt: (
+            _normal(jax.random.fold_in(key, 0), (GEMM_M, GEMM_K), dt),
+            _normal(jax.random.fold_in(key, 1), (GEMM_M, GEMM_M), dt)),
+        run=lambda ops, pol, inj: blas.syrk(1.0, ops[0], 0.5, ops[1],
+                                            policy=pol, injection=inj),
+        oracle=lambda ops: ref.syrk(1.0, _f(ops[0]), 0.5,
+                                    _f(ops[1])).ravel(),
+        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, GEMM_M * GEMM_M),
+                             StreamSpec("dmr", DMR_STREAM_2,
+                                        GEMM_M * GEMM_M)),
+        base_scale=4 * sK, ref_scale=4 * sK))
+
+    def _trsm_make(key, dt):
+        k1, k2 = jax.random.split(key)
+        return (_tri_wellcond(k1, TRSM_M, dt),
+                _normal(k2, (TRSM_M, TRSM_N), dt))
+
+    add(Routine(
+        "trsm", "L3",
+        make=_trsm_make,
+        run=lambda ops, pol, inj: blas.trsm(1.0, ops[0], ops[1], policy=pol,
+                                            injection=inj),
+        oracle=lambda ops: ref.trsm(1.0, _f(ops[0]), _f(ops[1])).ravel(),
+        # Both streams index the per-panel (block x n) working set: the
+        # ABFT stream hits the trailing-update GEMM, the DMR stream the
+        # diagonal substitution micro-kernel.
+        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, 32 * TRSM_N),
+                             StreamSpec("dmr", DMR_STREAM_1, 32 * TRSM_N)),
+        base_scale=float(2 * np.sqrt(TRSM_M)), ref_scale=3.0))
+
+    # ---- model seams (ABFT) ----
+    def _dense_make(key, dt):
+        k1, k2 = jax.random.split(key)
+        return (_normal(k1, (DENSE_B, DENSE_S, DENSE_K), dt),
+                _normal(k2, (DENSE_K, DENSE_N), dt))
+
+    def _dense_run(ops, pol, inj):
+        y, rep = ft_dense(ops[0], ops[1], policy=pol, injection=inj)
+        return y.ravel(), rep
+
+    add(Routine(
+        "ft_dense", "model",
+        make=_dense_make,
+        run=_dense_run,
+        oracle=lambda ops: (_np64(_f(ops[0]).reshape(-1, DENSE_K))
+                            @ _np64(_f(ops[1]))).ravel(),
+        streams=lambda ops: (StreamSpec(
+            "abft", ABFT_ACC, DENSE_B * DENSE_S * DENSE_N),),
+        base_scale=float(4 * np.sqrt(DENSE_K)),
+        ref_scale=float(4 * np.sqrt(DENSE_K))))
+
+    def _bmm_make(key, dt):
+        k1, k2 = jax.random.split(key)
+        return (_normal(k1, (BMM_B, BMM_M, BMM_K), dt),
+                _normal(k2, (BMM_B, BMM_K, BMM_N), dt))
+
+    def _bmm_run(ops, pol, inj):
+        y, rep = ft_bmm_with_injection(ops[0], ops[1], pol, inj)
+        return y.ravel(), rep
+
+    add(Routine(
+        "ft_bmm", "model",
+        make=_bmm_make,
+        run=_bmm_run,
+        oracle=lambda ops: np.einsum(
+            "bmk,bkn->bmn", _f(ops[0]), _f(ops[1])).ravel(),
+        # batched ABFT targets slice 0; pos domain is one slice.
+        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, BMM_M * BMM_N),),
+        base_scale=float(4 * np.sqrt(BMM_K)),
+        ref_scale=float(4 * np.sqrt(BMM_K))))
+
+    return r
+
+
+def ft_bmm_with_injection(a, b, policy, injection):
+    """ft_bmm's public surface takes no injection; campaigns reach one level
+    down to the batched matmul so the per-slice seam is exercised."""
+    from repro.core.abft import ft_matmul_batched
+    return ft_matmul_batched(a, b, policy=policy, injection=injection)
+
+
+ROUTINES: Dict[str, Routine] = _routines()
+SMOKE_ROUTINES = tuple(ROUTINES)          # every protected routine
+L3_ABFT_ROUTINES = ("gemm", "symm", "trmm", "syrk", "trsm", "ft_dense",
+                    "ft_bmm")
+
+
+# -- cells --------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    cell_id: str
+    routine: str
+    level: str
+    policy: str
+    dtype: str
+    model: str            # "single" | "burst"
+    stream_kind: str      # "dmr" | "abft"
+    stream: int
+    protected: bool
+    expect: str           # "recovered" | "detected" | "unprotected"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _expectation(kind: str, policy: FTPolicy, protected: bool) -> str:
+    if not protected:
+        return "unprotected"
+    if kind == "dmr" and not policy.dmr_vote:
+        return "detected"           # detect-only: no vote, no correction
+    return "recovered"              # detected AND output matches the oracle
+
+
+def _mk_cell(rt: Routine, pc: PolicyCase, dtype: str, model: str,
+             spec: StreamSpec) -> Cell:
+    protected = spec.protected_under(pc.policy)
+    return Cell(
+        cell_id=f"{rt.name}/{pc.name}/{dtype}/{model}-{spec.kind}",
+        routine=rt.name, level=rt.level, policy=pc.name, dtype=dtype,
+        model=model, stream_kind=spec.kind, stream=spec.stream,
+        protected=protected,
+        expect=_expectation(spec.kind, pc.policy, protected))
+
+
+def build_cells(*, smoke: bool = True,
+                routines: Optional[Sequence[str]] = None,
+                policies: Optional[Sequence[str]] = None,
+                dtypes: Optional[Sequence[str]] = None,
+                models: Optional[Sequence[str]] = None) -> List[Cell]:
+    """Enumerate campaign cells.
+
+    Smoke grid: every routine x {off, hybrid-fused, hybrid-unfused,
+    dmr-unfused} x {f32, bf16} x single-error on every protected stream,
+    one control cell per routine (policy off, f32), plus an L3 burst row
+    under the recompute policy.  The full grid adds the remaining policies
+    (abft-unfused, dmr-fused, hybrid-novote) and bf16 controls.
+    """
+    def _check(sel, known, what):
+        bad = sorted(set(sel) - set(known))
+        if bad:
+            raise ValueError(
+                f"unknown {what} {bad}; valid: {sorted(known)}")
+        return tuple(sel)
+
+    sel_routines = (_check(routines, ROUTINES, "routine")
+                    if routines else tuple(ROUTINES))
+    sel_policies = (_check(policies, POLICIES, "policy") if policies
+                    else (SMOKE_POLICIES if smoke else FULL_POLICIES))
+    sel_dtypes = (_check(dtypes, DTYPES, "dtype")
+                  if dtypes else ("f32", "bf16"))
+    sel_models = (_check(models, ("single", "burst"), "error model")
+                  if models else ("single", "burst"))
+
+    # Stream domains don't depend on operand values except iamax's pin;
+    # enumerate with a throwaway key (cells are plain data).
+    probe_ops = {name: ROUTINES[name].make(jax.random.PRNGKey(0),
+                                           jnp.float32)
+                 for name in sel_routines}
+
+    cells: List[Cell] = []
+    for name in sel_routines:
+        rt = ROUTINES[name]
+        specs = rt.streams(probe_ops[name])
+        for pname in sel_policies:
+            pc = POLICIES[pname]
+            for dtype in sel_dtypes:
+                if "single" in sel_models:
+                    for spec in specs:
+                        if not spec.protected_under(pc.policy):
+                            # keep ONE control per routine: off/f32 on the
+                            # routine's primary stream.
+                            if not (pname == "off" and dtype == "f32"
+                                    and spec is specs[0]):
+                                continue
+                        cells.append(_mk_cell(rt, pc, dtype, "single", spec))
+        # burst: both ABFT slots in one interval, recompute-fallback policy.
+        if ("burst" in sel_models and name in L3_ABFT_ROUTINES
+                and (not policies or "hybrid-recompute" in policies)):
+            pc = POLICIES["hybrid-recompute"]
+            spec = rt.streams(probe_ops[name])[0]
+            for dtype in (("f32",) if smoke else sel_dtypes):
+                if dtype not in sel_dtypes:
+                    continue
+                cells.append(_mk_cell(rt, pc, dtype, "burst", spec))
+    return cells

@@ -1,0 +1,170 @@
+"""Campaign verdict reports: machine-readable JSON + human markdown.
+
+The JSON schema (consumed by tests and dashboards):
+
+  {
+    "meta":    {seed, smoke, jax_version, n_cells, duration_s},
+    "summary": {cells, protected_cells, detection_rate, clean_false_positives,
+                recovered, detected, escaped, masked, failed, ok},
+    "cells":   [ {cell_id, routine, level, policy, dtype, model,
+                  stream_kind, stream, protected, expect, verdict,
+                  detected, corrected, unrecoverable,
+                  clean_false_positive, clean_ok, output_ok, output_err,
+                  tol, clean_counters, inj_counters,
+                  overhead_pct, time_ft_us, time_off_us} ],
+    "overheads": [ {routine, policy, time_ft_us, time_off_us,
+                    overhead_pct} ]
+  }
+
+``summary.ok`` is the campaign gate: True iff zero clean false positives,
+every protected cell detected its error, and every cell expected to recover
+matched the oracle.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Sequence
+
+import jax
+
+from repro.campaign.runner import CellResult
+
+VERDICTS = ("recovered", "detected", "escaped", "masked",
+            "false-positive", "failed")
+
+
+def summarize(results: Sequence[CellResult], *, seed: int, smoke: bool,
+              duration_s: float = 0.0) -> dict:
+    protected = [r for r in results if r.cell.protected]
+    n_det = sum(1 for r in protected if r.detected >= 1)
+    by_verdict = {v: sum(1 for r in results if r.verdict == v)
+                  for v in VERDICTS}
+    n_fp = sum(1 for r in results if r.clean_false_positive)
+    # An empty grid (or one with no protected cells - e.g. an over-narrow
+    # filter combination) verifies nothing and must not green the gate.
+    ok = (len(protected) > 0
+          and n_fp == 0
+          and n_det == len(protected)
+          and by_verdict["failed"] == 0)
+
+    overheads = []
+    seen = set()
+    for r in results:
+        if r.overhead_pct is None:
+            continue
+        k = (r.cell.routine, r.cell.policy)
+        if k in seen:
+            continue
+        seen.add(k)
+        overheads.append({
+            "routine": r.cell.routine, "policy": r.cell.policy,
+            "time_ft_us": r.time_ft_us, "time_off_us": r.time_off_us,
+            "overhead_pct": r.overhead_pct})
+
+    return {
+        "meta": {
+            "seed": seed,
+            "smoke": smoke,
+            "jax_version": jax.__version__,
+            "n_cells": len(results),
+            "duration_s": round(duration_s, 2),
+        },
+        "summary": {
+            "cells": len(results),
+            "protected_cells": len(protected),
+            "detected_protected": n_det,
+            "detection_rate": (n_det / len(protected)) if protected else 1.0,
+            "clean_false_positives": n_fp,
+            **by_verdict,
+            "ok": ok,
+        },
+        "cells": [r.as_dict() for r in results],
+        "overheads": overheads,
+    }
+
+
+def write_json(report: dict, path: str) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=False)
+        f.write("\n")
+    return path
+
+
+_SYMBOL = {"recovered": "✓", "detected": "d", "escaped": "✗",
+           "masked": "·", "false-positive": "FP", "failed": "FAIL"}
+
+
+def to_markdown(report: dict) -> str:
+    s = report["summary"]
+    lines: List[str] = []
+    lines.append("# Fault-injection campaign report")
+    lines.append("")
+    m = report["meta"]
+    lines.append(f"- grid: {'smoke' if m['smoke'] else 'full'}, "
+                 f"{m['n_cells']} cells, seed {m['seed']}, "
+                 f"jax {m['jax_version']}, {m['duration_s']}s")
+    lines.append(f"- **verdict: {'PASS' if s['ok'] else 'FAIL'}** - "
+                 f"detection {s['detected_protected']}"
+                 f"/{s['protected_cells']} protected cells "
+                 f"({100 * s['detection_rate']:.1f}%), "
+                 f"{s['clean_false_positives']} clean false positives")
+    lines.append(f"- recovered {s['recovered']}, detect-only {s['detected']},"
+                 f" escaped(control) {s['escaped']}, masked {s['masked']},"
+                 f" failed {s['failed']}")
+    lines.append("")
+    lines.append("symbols: ✓ recovered | d detected | ✗ escaped (control) | "
+                 "· masked | FAIL expectation violated")
+    lines.append("")
+
+    cells = report["cells"]
+    policies, seen_p = [], set()
+    for c in cells:
+        k = (c["policy"], c["dtype"], c["model"], c["stream_kind"])
+        if k not in seen_p:
+            seen_p.add(k)
+            policies.append(k)
+    routines, seen_r = [], set()
+    for c in cells:
+        if c["routine"] not in seen_r:
+            seen_r.add(c["routine"])
+            routines.append(c["routine"])
+
+    def col_name(k):
+        return f"{k[0]}/{k[1]}/{k[2][0]}-{k[3]}"
+
+    lines.append("| routine | " + " | ".join(col_name(p)
+                                             for p in policies) + " |")
+    lines.append("|---" * (len(policies) + 1) + "|")
+    index = {(c["routine"], c["policy"], c["dtype"], c["model"],
+              c["stream_kind"]): c for c in cells}
+    for rt in routines:
+        row = [rt]
+        for (pol, dt, model, kind) in policies:
+            c = index.get((rt, pol, dt, model, kind))
+            row.append(_SYMBOL.get(c["verdict"], "?") if c else " ")
+        lines.append("| " + " | ".join(row) + " |")
+
+    if report["overheads"]:
+        lines.append("")
+        lines.append("## FT overhead (f32, clean path, interpret-mode "
+                     "kernels where fused)")
+        lines.append("")
+        lines.append("| routine | policy | t_ft (us) | t_off (us) | "
+                     "overhead |")
+        lines.append("|---|---|---|---|---|")
+        for o in report["overheads"]:
+            lines.append(
+                f"| {o['routine']} | {o['policy']} | "
+                f"{o['time_ft_us']:.0f} | {o['time_off_us']:.0f} | "
+                f"{o['overhead_pct']:+.1f}% |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def write_markdown(report: dict, path: str) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write(to_markdown(report))
+    return path

@@ -1,0 +1,189 @@
+"""Campaign CLI.
+
+  PYTHONPATH=src python -m repro.campaign.run --smoke --out /tmp/campaign
+
+Runs the sweep grid (routine x policy x dtype x error model), writes
+``campaign.json`` + ``campaign.md`` verdict reports, and exits nonzero if
+the campaign gate fails (any clean false positive, any missed detection on
+a protected cell, any violated expectation).
+
+``--drill`` additionally runs the train-loop rate drill: a jitted
+``lax.scan`` over steps with a Poisson errors-per-minute schedule feeding
+the FT seams, reproducing the paper's "hundreds of errors per minute"
+regime, then a real model train step via ``launch/steps.py`` to assert the
+step-level SDC metrics (``ft/abft_corrected`` etc.) flow through.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.campaign import grid as gridmod
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.campaign.run",
+        description="FT-BLAS fault-injection campaign")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sub-grid (4 policies; bursts f32-only)")
+    ap.add_argument("--out", default="/tmp/ftblas_campaign",
+                    help="output directory for campaign.json / campaign.md")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--routines", default=None,
+                    help="comma-separated routine filter (default: all)")
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated policy filter")
+    ap.add_argument("--dtypes", default=None,
+                    help="comma-separated dtype filter (f32,bf16)")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated error-model filter (single,burst)")
+    ap.add_argument("--time", dest="timings", action="store_true",
+                    help="measure per-routine FT-vs-off overhead")
+    ap.add_argument("--list", action="store_true",
+                    help="print the cell list and exit")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--drill", action="store_true",
+                    help="run the Poisson-rate train-loop drill too")
+    ap.add_argument("--drill-steps", type=int, default=60)
+    ap.add_argument("--drill-rate", type=float, default=300.0,
+                    help="errors per minute for the drill schedule")
+    return ap
+
+
+def _csv(v):
+    return v.split(",") if v else None
+
+
+def run_campaign(args) -> dict:
+    from repro.campaign import report as repmod
+    from repro.campaign import runner as runmod
+
+    cells = gridmod.build_cells(
+        smoke=args.smoke,
+        routines=_csv(args.routines), policies=_csv(args.policies),
+        dtypes=_csv(args.dtypes), models=_csv(args.models))
+    if args.list:
+        for c in cells:
+            print(c.cell_id, "(protected)" if c.protected else "(control)")
+        print(f"{len(cells)} cells")
+        return {"summary": {"ok": True, "cells": len(cells)}}
+
+    log = (lambda m: None) if args.quiet else print
+    t0 = time.time()
+    results = runmod.run_cells(cells, seed=args.seed,
+                               with_timings=args.timings, log=log)
+    report = repmod.summarize(results, seed=args.seed, smoke=args.smoke,
+                              duration_s=time.time() - t0)
+    jpath = repmod.write_json(report, f"{args.out}/campaign.json")
+    mpath = repmod.write_markdown(report, f"{args.out}/campaign.md")
+    s = report["summary"]
+    print(f"\ncampaign: {s['cells']} cells in "
+          f"{report['meta']['duration_s']}s -> "
+          f"{'PASS' if s['ok'] else 'FAIL'}")
+    print(f"  detection {s['detected_protected']}/{s['protected_cells']} "
+          f"protected cells, {s['clean_false_positives']} clean false "
+          f"positives, {s['failed']} failed expectations")
+    print(f"  reports: {jpath}  {mpath}")
+    return report
+
+
+# -- train-loop drill ---------------------------------------------------------
+def run_drill(args) -> bool:
+    """Poisson-rate drill: (1) a jitted scan loop hammers ft_dense with a
+    configured errors-per-minute schedule and checks every injected error
+    is detected with oracle-matching outputs; (2) one real train step via
+    launch/steps.py machinery proves the FT counters flow into metrics."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.campaign.errors import PoissonSchedule
+    from repro.core import report as ftreport
+    from repro.core.ft_config import FTPolicy
+    from repro.core.ft_dense import ft_dense
+    from repro.core.injection import ABFT_ACC, ABFT_ACC_2
+
+    # recompute_fallback: at hundreds of errors/min, multi-error intervals
+    # occur; the paper's escalation (third calculation) must be armed.
+    policy = FTPolicy(mode="hybrid", fused=False, recompute_fallback=True)
+    B, S, K, N = 2, 16, 64, 96
+    # Nominal 50ms steps: 300 err/min -> lam = 0.25 errors per step.
+    sched = PoissonSchedule(
+        rate_per_min=args.drill_rate, step_time_s=0.05,
+        out_size=B * S * N, stream_choices=(ABFT_ACC, ABFT_ACC_2),
+        base_scale=float(4 * np.sqrt(K)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, N), jnp.float32)
+
+    def step(carry, key):
+        inj = sched.sample(key)
+        y, rep = ft_dense(x, w, policy=policy, injection=inj)
+        return carry, (y, rep, inj.n_active())
+
+    keys = jax.random.split(jax.random.PRNGKey(args.seed), args.drill_steps)
+    _, (ys, reps, n_inj) = jax.jit(
+        lambda ks: jax.lax.scan(step, 0, ks))(keys)
+
+    clean, _ = ft_dense(x, w, policy=policy)
+    max_err = float(jnp.max(jnp.abs(ys - clean[None])))
+    injected = int(n_inj.sum())
+    detected = int(reps["abft_detected"].sum())
+    corrected = int(reps["abft_corrected"].sum())
+    unrec = int(reps["abft_unrecoverable"].sum())
+    rate = injected / (args.drill_steps * sched.step_time_s) * 60.0
+    print(f"\ndrill: {args.drill_steps} steps @ {args.drill_rate:.0f} "
+          f"err/min nominal -> {injected} injected "
+          f"({rate:.0f}/min realized), {detected} detected, "
+          f"{corrected} corrected, {unrec} unrecoverable")
+    print(f"  max |step output - clean| = {max_err:.3e}")
+    ok = detected >= injected and max_err < 1e-2
+
+    # (2) step-level metrics flow through the launch/steps.py train path.
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.launch.mesh import smoke_mesh
+    from repro.launch.steps import make_ctx
+    from repro.models import build_model, param_specs
+    from repro.models.specs import batch_specs
+
+    cfg = get_config("llama3_8b").smoke()
+    model = build_model(cfg)
+    mesh = smoke_mesh()
+    ctx = make_ctx(multi_pod=False, data_size=1, model_size=1, policy=policy)
+    params = model.init(jax.random.PRNGKey(0), 1)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                                          cfg.vocab)}
+    mspec = {"nll": P(), "aux": P(),
+             "report": {k: P() for k in ftreport.FIELDS}}
+    fn = jax.jit(jax.shard_map(
+        lambda p, b: model.train_loss(p, b, ctx), mesh=mesh,
+        in_specs=(param_specs(params), batch_specs(batch, multi_pod=False)),
+        out_specs=(P(), mspec), check_vma=False))
+    loss, metrics = fn(params, batch)
+    have = set(metrics["report"]) == set(ftreport.FIELDS)
+    print(f"  train step: loss={float(loss):.4f}, ft/abft_corrected="
+          f"{int(metrics['report']['abft_corrected'])}, metrics keys "
+          f"{'OK' if have else 'MISSING'}")
+    return ok and have
+
+
+def main(argv=None) -> int:
+    args = build_argparser().parse_args(argv)
+    try:
+        report = run_campaign(args)
+    except ValueError as e:      # bad --routines/--policies/... filter
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    ok = bool(report["summary"]["ok"])
+    if args.drill and not args.list:
+        ok = run_drill(args) and ok
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

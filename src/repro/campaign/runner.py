@@ -1,0 +1,244 @@
+"""Campaign execution: run cells under jax.jit, compare against oracles.
+
+One compiled callable per (routine, policy, dtype): the Injection spec is a
+pytree *argument*, so the clean run and every injected run of a combo share
+a single XLA program - exactly how a production fleet would keep an
+always-on injection seam at zero recompile cost.  Per-cell outcome:
+
+  clean run     counters must be all-zero (any hit = false positive) and
+                the output must match the float64 oracle.
+  injected run  protected cells must detect (and, when the policy can
+                correct, match the oracle); unprotected control cells
+                document the corruption escaping.
+
+Verdicts:
+  recovered    detected>=1 and oracle-matching output
+  detected     detected>=1, correction not expected (e.g. vote disabled)
+  escaped      corruption visible in the output, nothing detected
+  masked       injection did not change the output (e.g. error below
+               output precision); only possible on control cells
+  false-positive  clean run raised any counter
+  failed       expectation violated (protected cell missed the error)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.campaign import errors as errmod
+from repro.campaign.grid import (Cell, DTYPES, POLICIES, ROUTINES, Routine,
+                                 StreamSpec)
+from repro.core import report as ftreport
+from repro.core.injection import ABFT_ACC, ABFT_ACC_2, Injection
+
+_DETECT_KEYS = ("abft_detected", "dmr_detected")
+_CORRECT_KEYS = ("abft_corrected", "dmr_corrected")
+_BAD_KEYS = ("abft_unrecoverable", "dmr_unrecoverable")
+
+
+@dataclasses.dataclass
+class CellResult:
+    cell: Cell
+    verdict: str
+    detected: int
+    corrected: int
+    unrecoverable: int
+    clean_false_positive: bool
+    clean_ok: bool
+    output_ok: bool
+    output_err: float
+    tol: float
+    clean_counters: dict
+    inj_counters: dict
+    overhead_pct: Optional[float] = None
+    time_ft_us: Optional[float] = None
+    time_off_us: Optional[float] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.verdict in ("recovered", "detected", "escaped", "masked")
+
+    def as_dict(self) -> dict:
+        d = self.cell.as_dict()
+        d.update(
+            verdict=self.verdict, detected=self.detected,
+            corrected=self.corrected, unrecoverable=self.unrecoverable,
+            clean_false_positive=self.clean_false_positive,
+            clean_ok=self.clean_ok, output_ok=self.output_ok,
+            output_err=self.output_err, tol=self.tol,
+            clean_counters=self.clean_counters,
+            inj_counters=self.inj_counters,
+            overhead_pct=self.overhead_pct,
+            time_ft_us=self.time_ft_us, time_off_us=self.time_off_us)
+        return d
+
+
+class _Combo:
+    """Compiled state shared by all cells of one (routine, policy, dtype)."""
+
+    def __init__(self, rt: Routine, policy_name: str, dtype_name: str,
+                 seed: int):
+        self.rt = rt
+        self.policy = POLICIES[policy_name].policy
+        self.dtype_name = dtype_name
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(seed),
+            zlib.crc32(f"{rt.name}/{dtype_name}".encode()) % (2 ** 31))
+        self.ops = rt.make(key, DTYPES[dtype_name])
+        self.fn = jax.jit(
+            lambda ops, inj: rt.run(ops, self.policy, inj))
+        self.oracle = rt.oracle(self.ops)
+        self.streams = rt.streams(self.ops)
+        out, rep = self.fn(self.ops, Injection.none())
+        self.clean_out = self._flat(out)
+        self.clean_rep = ftreport.to_py(rep)
+
+    @staticmethod
+    def _flat(out) -> np.ndarray:
+        return np.asarray(jnp.asarray(out, jnp.float32),
+                          np.float64).ravel()
+
+    def run_injected(self, inj: Injection) -> Tuple[np.ndarray, dict]:
+        out, rep = self.fn(self.ops, inj)
+        return self._flat(out), ftreport.to_py(rep)
+
+    def spec_for(self, cell: Cell) -> StreamSpec:
+        for s in self.streams:
+            if s.stream == cell.stream and s.kind == cell.stream_kind:
+                return s
+        raise KeyError(f"{cell.cell_id}: stream {cell.stream} not declared")
+
+
+def _counts(rep: dict, keys: Sequence[str]) -> int:
+    return sum(int(rep[k]) for k in keys)
+
+
+def _verdict(cell: Cell, detected: int, output_ok: bool,
+             clean_fp: bool) -> str:
+    if clean_fp:
+        return "false-positive"
+    if cell.expect == "recovered":
+        return "recovered" if (detected >= 1 and output_ok) else "failed"
+    if cell.expect == "detected":
+        return "detected" if detected >= 1 else "failed"
+    # unprotected control: document what the error did.
+    if detected >= 1:
+        return "detected"      # partial protection caught it anyway
+    return "masked" if output_ok else "escaped"
+
+
+def _build_injection(cell: Cell, spec: StreamSpec, rt: Routine,
+                     key: jax.Array) -> Injection:
+    if cell.model == "burst":
+        return errmod.burst(key, out_size=spec.domain,
+                            streams=(ABFT_ACC, ABFT_ACC_2),
+                            base_scale=rt.base_scale)
+    return errmod.single_error(key, stream=spec.stream,
+                               out_size=spec.domain,
+                               base_scale=rt.base_scale,
+                               pos=spec.pin_pos,
+                               force_positive=spec.positive_delta)
+
+
+def _time_us(fn, ops, inj, reps: int = 5) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(ops, inj)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return 1e6 * best
+
+
+def run_cells(cells: Sequence[Cell], *, seed: int = 0,
+              with_timings: bool = False,
+              log=lambda msg: None) -> List[CellResult]:
+    """Execute every cell; returns one CellResult per cell.
+
+    Combos are compiled lazily and cached; timings (optional) compare each
+    f32 FT combo's clean latency against the same routine under policy
+    "off" - the campaign analogue of the paper's overhead tables.
+    """
+    combos: Dict[Tuple[str, str, str], _Combo] = {}
+
+    def combo(rt_name: str, policy: str, dtype: str) -> _Combo:
+        k = (rt_name, policy, dtype)
+        if k not in combos:
+            log(f"compile {rt_name}/{policy}/{dtype}")
+            combos[k] = _Combo(ROUTINES[rt_name], policy, dtype, seed)
+        return combos[k]
+
+    results: List[CellResult] = []
+    for i, cell in enumerate(cells):
+        cb = combo(cell.routine, cell.policy, cell.dtype)
+        rt = cb.rt
+        spec = cb.spec_for(cell)
+        tol = rt.tol(cell.dtype)
+
+        clean_fp = (_counts(cb.clean_rep, _DETECT_KEYS)
+                    + _counts(cb.clean_rep, _CORRECT_KEYS)
+                    + _counts(cb.clean_rep, _BAD_KEYS)) > 0
+        clean_err = float(np.max(np.abs(cb.clean_out - cb.oracle)))
+        clean_ok = clean_err <= tol
+
+        key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5EED), i)
+        inj = _build_injection(cell, spec, rt, key)
+        out, rep = cb.run_injected(inj)
+        detected = _counts(rep, _DETECT_KEYS)
+        corrected = _counts(rep, _CORRECT_KEYS)
+        unrec = _counts(rep, _BAD_KEYS)
+        output_err = float(np.max(np.abs(out - cb.oracle)))
+        output_ok = output_err <= tol
+
+        verdict = _verdict(cell, detected, output_ok, clean_fp)
+        if not clean_ok and verdict != "false-positive":
+            verdict = "failed"     # oracle disagreement even without faults
+
+        res = CellResult(
+            cell=cell, verdict=verdict, detected=detected,
+            corrected=corrected, unrecoverable=unrec,
+            clean_false_positive=clean_fp, clean_ok=clean_ok,
+            output_ok=output_ok, output_err=output_err, tol=tol,
+            clean_counters=cb.clean_rep, inj_counters=rep)
+        results.append(res)
+        log(f"[{i + 1}/{len(cells)}] {cell.cell_id}: {verdict} "
+            f"(det={detected} corr={corrected})")
+
+    if with_timings:
+        _attach_timings(results, combo, log)
+    return results
+
+
+def _attach_timings(results: List[CellResult], combo, log) -> None:
+    """Per-routine FT-vs-off latency on the f32 combos already compiled."""
+    none = Injection.none()
+    off_cache: Dict[str, float] = {}
+    seen = set()
+    for res in results:
+        cell = res.cell
+        if cell.dtype != "f32" or cell.policy == "off":
+            continue
+        k = (cell.routine, cell.policy)
+        if k in seen:
+            continue
+        seen.add(k)
+        cb = combo(cell.routine, cell.policy, "f32")
+        if cell.routine not in off_cache:
+            cb_off = combo(cell.routine, "off", "f32")
+            off_cache[cell.routine] = _time_us(cb_off.fn, cb_off.ops, none)
+        t_ft = _time_us(cb.fn, cb.ops, none)
+        t_off = off_cache[cell.routine]
+        overhead = 100.0 * (t_ft - t_off) / max(t_off, 1e-9)
+        log(f"timing {cell.routine}/{cell.policy}: "
+            f"{t_ft:.0f}us vs off {t_off:.0f}us ({overhead:+.1f}%)")
+        for r2 in results:
+            if (r2.cell.routine, r2.cell.policy) == k \
+                    and r2.cell.dtype == "f32":
+                r2.time_ft_us, r2.time_off_us = t_ft, t_off
+                r2.overhead_pct = overhead

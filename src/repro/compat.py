@@ -1,0 +1,132 @@
+"""JAX version-compat polyfills (feature-detected, no-ops on new jax).
+
+The repo targets the current jax API surface:
+
+  - ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+  - ``jax.make_mesh(shape, axes, axis_types=...)``
+  - ``jax.sharding.AxisType``
+
+Older releases in the supported range (see requirements-dev.txt) ship the
+same functionality under the pre-stabilization spellings
+(``jax.experimental.shard_map.shard_map`` with ``check_rep``, ``make_mesh``
+without ``axis_types``, no ``AxisType`` enum).  Importing this module
+installs thin adapters into the ``jax`` namespace for exactly the missing
+pieces, so every call site - library, tests, examples - uses one spelling.
+
+Imported from ``repro/__init__.py``; importing anything under ``repro``
+activates the shims.  Each shim is guarded by a feature check: on a jax
+that already provides the attribute, nothing is touched.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    base = jax.make_mesh
+    if "axis_types" in inspect.signature(base).parameters:
+        return
+
+    @functools.wraps(base)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        # Old make_mesh has no axis-type concept; every axis behaves as
+        # the new API's Auto, which is the only mode this repo requests.
+        return base(axis_shapes, axis_names, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as legacy
+
+    @functools.wraps(legacy)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        # check_vma (new) supersedes check_rep (old); both default-strict.
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return legacy(f, mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_size() -> None:
+    if hasattr(jax.lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        # psum of 1 over the axis is the axis size, constant-folded at trace
+        # time - the pre-stabilization idiom axis_size replaced.
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+def _install_optimization_barrier_vmap() -> None:
+    # Old jax has no batching rule for optimization_barrier, so any DMR/ABFT
+    # recompute fence under vmap (e.g. batched ABFT matmul) fails.  The
+    # barrier is elementwise-transparent: batching passes straight through.
+    from jax.interpreters import batching
+
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+    except ImportError:  # pragma: no cover - layout changed; newer jax
+        return
+    if optimization_barrier_p in batching.primitive_batchers:
+        return
+
+    def rule(args, dims):
+        return optimization_barrier_p.bind(*args), list(dims)
+
+    batching.primitive_batchers[optimization_barrier_p] = rule
+
+
+def _install_cost_analysis() -> None:
+    # Old jax returns a one-element list of per-device dicts from
+    # Compiled.cost_analysis(); new jax returns the dict directly.  Wrap to
+    # always hand back the dict (no-op passthrough on new jax).
+    import jax.stages
+
+    cls = jax.stages.Compiled
+    orig = cls.cost_analysis
+    if getattr(orig, "_repro_normalized", False):
+        return
+
+    @functools.wraps(orig)
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, (list, tuple)):
+            out = out[0] if out else {}
+        return out
+
+    cost_analysis._repro_normalized = True
+    cls.cost_analysis = cost_analysis
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()
+    _install_axis_size()
+    _install_cost_analysis()
+    _install_optimization_barrier_vmap()
+
+
+install()

@@ -178,7 +178,14 @@ def verify_and_correct_with_tol(
         delta = r[i_star]
         col_score = jnp.where(col_bad, jnp.abs(c - delta), jnp.inf)
         j_star = jnp.argmin(col_score)
-        match_tol = row_tol[i_star] + col_tol[j_star]
+        # The two residual measurements of one physical error differ by the
+        # round-off of sums *containing* that error, which scales with
+        # |delta| itself - large injected magnitudes need the relative term
+        # or the row/col match is rejected and the error goes uncorrected.
+        eps_val = jnp.finfo(r.dtype).eps
+        rel = tol_factor * eps_val * (r.shape[0] + c.shape[0]) \
+            * jnp.abs(delta)
+        match_tol = row_tol[i_star] + col_tol[j_star] + rel
         ok = (row_bad[i_star]
               & col_bad[j_star]
               & (jnp.abs(c[j_star] - delta) <= match_tol))
@@ -194,11 +201,18 @@ def verify_and_correct_with_tol(
         (C, r_res, c_res, jnp.zeros((), jnp.int32)))
 
     row_bad_fin, col_bad_fin = residual_masks(r_fin, c_fin)
-    # One-sided residuals (row flagged, no col flagged anywhere, or vice
-    # versa) mean the *checksum vector itself* was corrupted, not C: C is
-    # self-consistent on the other axis.  Trust C; count as corrected.
-    one_sided = (jnp.any(row_bad_fin) ^ jnp.any(col_bad_fin))
-    unrecoverable = (jnp.any(row_bad_fin) | jnp.any(col_bad_fin)) & ~one_sided
+    # A single one-sided residual (exactly one row flagged and no col, or
+    # vice versa) means the *checksum vector itself* was corrupted, not C:
+    # C is self-consistent on the other axis.  Trust C; count as corrected.
+    # The count must be exactly one: multiple flags on one side with a clean
+    # other side is also the signature of several C errors whose deltas
+    # cancel in the other axis's sum - that case must escalate, not be
+    # trusted (found by the same-column burst campaign cells).
+    row_cnt = row_bad_fin.sum()
+    col_cnt = col_bad_fin.sum()
+    one_sided = (((row_cnt == 1) & (col_cnt == 0))
+                 | ((row_cnt == 0) & (col_cnt == 1)))
+    unrecoverable = ((row_cnt > 0) | (col_cnt > 0)) & ~one_sided
     corrected = corrected + (one_sided & (detected > 0)).astype(jnp.int32)
     return AbftVerdict(C_fixed, detected, corrected, unrecoverable)
 

@@ -58,6 +58,14 @@ class Injection:
                    jnp.zeros((cls.N_SLOTS,), jnp.float32))
 
     @classmethod
+    def from_arrays(cls, active, stream, pos, delta) -> "Injection":
+        """Coercing constructor for traced/batched specs (campaign engine)."""
+        return cls(jnp.asarray(active, jnp.bool_),
+                   jnp.asarray(stream, jnp.int32),
+                   jnp.asarray(pos, jnp.int32),
+                   jnp.asarray(delta, jnp.float32))
+
+    @classmethod
     def at(cls, *, stream: int, pos: int, delta: float,
            slot: int = 0) -> "Injection":
         inj = cls.none()
@@ -111,6 +119,10 @@ class Injection:
     def from_rows(cls, rows: jax.Array) -> "Injection":
         return cls(rows[:, 0] > 0.5, rows[:, 1].astype(jnp.int32),
                    rows[:, 2].astype(jnp.int32), rows[:, 3])
+
+    def n_active(self) -> jax.Array:
+        """Number of armed error slots (i32 scalar; traced-safe)."""
+        return self.active.sum().astype(jnp.int32)
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):

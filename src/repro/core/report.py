@@ -46,6 +46,11 @@ def scan_sum(report_stack: dict) -> dict:
             for f, v in report_stack.items()}
 
 
+def to_py(report: dict) -> dict:
+    """Host-side view: every counter as a plain int (JSON-serializable)."""
+    return {f: int(report[f]) for f in FIELDS}
+
+
 def total_errors(report: dict) -> jax.Array:
     return (report["abft_detected"] + report["dmr_detected"]
             + report["collective_detected"])

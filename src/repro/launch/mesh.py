@@ -3,19 +3,35 @@
 A function, not a module-level constant: importing this module must never
 touch jax device state (the dry-run pins the device count via XLA_FLAGS
 before any jax import; tests and benches see the real single device).
+
+Version compat: ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+``jax.make_mesh``) only exist on newer jax releases.  ``_make_mesh`` feature-
+detects and falls back to the plain call so the same code runs across the
+range pinned in requirements-dev.txt.
 """
 from __future__ import annotations
 
 import jax
+
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the jax version supports it."""
+    if _AXIS_TYPE is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod ("data", "model"); 2 pods adds a "pod" axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def mesh_axes(multi_pod: bool):
@@ -25,5 +41,4 @@ def mesh_axes(multi_pod: bool):
 
 def smoke_mesh():
     """1x1 mesh binding the same axis names for single-device tests."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,164 @@
+"""Campaign engine tests: the smoke grid must show zero false positives on
+clean runs and 100% detection of injected single errors on every protected
+routine x policy x dtype cell, with oracle-matching outputs wherever the
+policy can correct (ISSUE acceptance criteria)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.campaign import (PoissonSchedule, build_cells, exponent_delta,
+                            run_cells, summarize, to_markdown, write_json)
+from repro.campaign.grid import ROUTINES, SMOKE_POLICIES
+from repro.core.ft_config import FTPolicy
+from repro.core.ft_dense import ft_dense
+from repro.core.injection import ABFT_ACC, ABFT_ACC_2
+
+
+@pytest.fixture(scope="module")
+def smoke_results():
+    cells = build_cells(smoke=True)
+    results = run_cells(cells, seed=0)
+    return cells, results
+
+
+@pytest.fixture(scope="module")
+def smoke_report(smoke_results):
+    _, results = smoke_results
+    return summarize(results, seed=0, smoke=True, duration_s=1.0)
+
+
+def test_grid_covers_every_protected_routine(smoke_results):
+    cells, _ = smoke_results
+    names = {c.routine for c in cells}
+    assert names == set(ROUTINES)
+    assert {c.policy for c in cells} >= set(SMOKE_POLICIES)
+    assert {c.dtype for c in cells} == {"f32", "bf16"}
+    # every routine has at least one protected cell and one control cell
+    for rt in ROUTINES:
+        sub = [c for c in cells if c.routine == rt]
+        assert any(c.protected for c in sub), rt
+        assert any(not c.protected for c in sub), rt
+
+
+def test_clean_runs_have_zero_false_positives(smoke_results):
+    _, results = smoke_results
+    fps = [r.cell.cell_id for r in results if r.clean_false_positive]
+    assert fps == []
+    # and clean outputs match the oracle on every combo
+    bad = [r.cell.cell_id for r in results if not r.clean_ok]
+    assert bad == []
+
+
+def test_single_error_detection_is_100pct_on_protected_cells(smoke_results):
+    _, results = smoke_results
+    protected = [r for r in results
+                 if r.cell.protected and r.cell.model == "single"]
+    assert protected
+    missed = [r.cell.cell_id for r in protected if r.detected < 1]
+    assert missed == []
+    # detected + corrected >= 1 with oracle-matching output wherever the
+    # policy corrects (the "recovered" expectation)
+    for r in protected:
+        assert r.detected + r.corrected >= 1, r.cell.cell_id
+        if r.cell.expect == "recovered":
+            assert r.output_ok, (r.cell.cell_id, r.output_err, r.tol)
+
+
+def test_burst_cells_recover_via_multicorrection_or_recompute(smoke_results):
+    _, results = smoke_results
+    bursts = [r for r in results if r.cell.model == "burst"]
+    assert bursts
+    for r in bursts:
+        assert r.detected >= 1, r.cell.cell_id
+        assert r.output_ok, (r.cell.cell_id, r.output_err, r.tol)
+
+
+def test_no_failed_cells_and_gate_is_green(smoke_report):
+    s = smoke_report["summary"]
+    assert s["failed"] == 0
+    assert s["false-positive"] == 0
+    assert s["clean_false_positives"] == 0
+    assert s["detection_rate"] == 1.0
+    assert s["ok"] is True
+
+
+def test_json_report_schema_and_roundtrip(smoke_report, tmp_path):
+    path = write_json(smoke_report, str(tmp_path / "campaign.json"))
+    loaded = json.loads(open(path).read())
+    assert set(loaded) == {"meta", "summary", "cells", "overheads"}
+    assert loaded["summary"]["ok"] is True
+    assert loaded["summary"]["cells"] == len(loaded["cells"])
+    cell = loaded["cells"][0]
+    for k in ("cell_id", "routine", "policy", "dtype", "model", "stream",
+              "protected", "expect", "verdict", "detected", "corrected",
+              "clean_false_positive", "output_ok", "inj_counters"):
+        assert k in cell, k
+    md = to_markdown(loaded)
+    assert "PASS" in md and "| routine |" in md
+
+
+def test_controls_prove_injection_corrupts(smoke_results):
+    """At least one unprotected control must show the error escaping -
+    otherwise the campaign isn't actually injecting anything."""
+    _, results = smoke_results
+    controls = [r for r in results if not r.cell.protected]
+    assert controls
+    assert any(r.verdict == "escaped" for r in controls)
+
+
+# -- error models -------------------------------------------------------------
+def test_exponent_delta_is_log_uniform_ladder():
+    keys = jax.random.split(jax.random.PRNGKey(0), 64)
+    mags = np.asarray([float(jnp.abs(exponent_delta(
+        k, base_scale=2.0, min_exp=0, max_exp=4))) for k in keys])
+    assert mags.min() >= 2.0 and mags.max() <= 2.0 * 16
+    # every magnitude is base_scale * 2^int
+    assert np.allclose(np.log2(mags / 2.0), np.round(np.log2(mags / 2.0)))
+
+
+def test_poisson_schedule_reproducible_and_calibrated():
+    sched = PoissonSchedule(rate_per_min=600, step_time_s=0.1, out_size=512)
+    assert sched.lam == pytest.approx(1.0)
+    k = jax.random.PRNGKey(7)
+    a, b = sched.sample(k), sched.sample(k)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    keys = jax.random.split(jax.random.PRNGKey(0), 256)
+    counts = np.asarray([int(sched.n_active(sched.sample(k))) for k in keys])
+    # mean within 4 sigma of lam (truncation at N_SLOTS=4 barely bites)
+    assert abs(counts.mean() - 1.0) < 4 / np.sqrt(len(keys))
+
+
+def test_poisson_drill_under_jit_scan_detects_all():
+    """The paper's errors-per-minute regime inside one jitted scan loop.
+
+    recompute_fallback is the paper's full escalation ladder: a multi-error
+    interval that correction can't disambiguate (e.g. two errors sharing a
+    row) triggers the third calculation instead of escaping."""
+    policy = FTPolicy(mode="hybrid", fused=False, recompute_fallback=True)
+    B, S, K, N = 2, 8, 32, 48
+    sched = PoissonSchedule(rate_per_min=1200, step_time_s=0.05,
+                            out_size=B * S * N,
+                            stream_choices=(ABFT_ACC, ABFT_ACC_2),
+                            base_scale=float(4 * np.sqrt(K)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, N), jnp.float32)
+
+    def step(carry, key):
+        inj = sched.sample(key)
+        y, rep = ft_dense(x, w, policy=policy, injection=inj)
+        return carry, (y, rep, inj.n_active())
+
+    keys = jax.random.split(jax.random.PRNGKey(3), 20)
+    _, (ys, reps, n_inj) = jax.jit(
+        lambda ks: jax.lax.scan(step, 0, ks))(keys)
+    injected = int(n_inj.sum())
+    assert injected >= 10        # lam=1.0 over 20 steps; seeded, stable
+    assert int(reps["abft_detected"].sum()) >= injected
+    clean, _ = ft_dense(x, w, policy=policy)
+    np.testing.assert_allclose(np.asarray(ys),
+                               np.broadcast_to(np.asarray(clean), ys.shape),
+                               atol=1e-3)

@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) on the ABFT checksum invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
