@@ -21,4 +21,4 @@ drill:           ## Poisson errors-per-minute train-loop drill
 bench-smoke:     ## per-routine FT overhead timings via the campaign engine
 	$(PY) benchmarks/campaign_overhead.py
 
-ci: test campaign-smoke
+ci: test campaign-smoke bench-smoke

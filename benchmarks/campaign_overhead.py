@@ -4,13 +4,73 @@ Times every protected routine's clean path under the hybrid policies
 against policy "off" (same operands, same compiled-callable discipline as
 the campaign) and prints ``name,us_per_call,derived`` CSV rows - the same
 harness contract as benchmarks/run.py, but cheap enough for CI.
+
+Also times the fused-epilogue vs separate-epilogue GEMM contract
+(``C = alpha*A@B + beta*C0``) head to head and emits the comparison as a
+single ``BENCH JSON {...}`` line: the separate-epilogue configuration
+re-reads and re-writes the whole O(MN) product after the kernel (plus the
+DMR duplicate), which is exactly the traffic the fusion deletes.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _bench_us(fn, *args, reps: int = 5) -> float:
+    import jax
+    jax.block_until_ready(fn(*args))   # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return 1e6 * best
+
+
+def bench_epilogue_fusion() -> dict:
+    """Fused vs separate alpha/beta epilogue on the full GEMM contract."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.blas import level3
+    from repro.core.ft_config import FTPolicy
+
+    n = 128
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    A = jax.random.normal(k1, (n, n), jnp.float32)
+    B = jax.random.normal(k2, (n, n), jnp.float32)
+    C = jax.random.normal(k3, (n, n), jnp.float32)
+
+    policies = {
+        "off": FTPolicy(mode="off"),
+        "fused_epilogue": FTPolicy(mode="hybrid", fused=True,
+                                   fuse_epilogue=True),
+        "separate_epilogue": FTPolicy(mode="hybrid", fused=True,
+                                      fuse_epilogue=False),
+    }
+    times = {}
+    for name, pol in policies.items():
+        fn = jax.jit(lambda a, b, c, _p=pol: level3.gemm(
+            1.1, a, b, 0.5, c, policy=_p)[0])
+        times[name] = _bench_us(fn, A, B, C)
+    t_off = max(times["off"], 1e-9)
+    return {
+        "bench": "gemm_epilogue_fusion",
+        "shape": [n, n, n],
+        "beta": 0.5,
+        "us_off": round(times["off"], 1),
+        "us_fused_epilogue": round(times["fused_epilogue"], 1),
+        "us_separate_epilogue": round(times["separate_epilogue"], 1),
+        "overhead_pct_fused": round(
+            100.0 * (times["fused_epilogue"] - t_off) / t_off, 2),
+        "overhead_pct_separate": round(
+            100.0 * (times["separate_epilogue"] - t_off) / t_off, 2),
+    }
 
 
 def main() -> None:
@@ -27,6 +87,13 @@ def main() -> None:
         print(f"campaign_{o['routine']}_{o['policy']},"
               f"{o['time_ft_us']:.1f},"
               f"overhead_pct={o['overhead_pct']:.2f}")
+
+    row = bench_epilogue_fusion()
+    print(f"campaign_gemm_epilogue_fused,{row['us_fused_epilogue']},"
+          f"overhead_pct={row['overhead_pct_fused']:.2f}")
+    print(f"campaign_gemm_epilogue_separate,{row['us_separate_epilogue']},"
+          f"overhead_pct={row['overhead_pct_separate']:.2f}")
+    print("BENCH JSON " + json.dumps(row))
 
 
 if __name__ == "__main__":

@@ -3,9 +3,18 @@
 Paper Sec. 3.3 / 5: GEMM-family routines run near peak FLOP/s, so DMR would
 double their cost; checksum-based online ABFT costs O(n^2) against O(n^3) -
 *if* the checksum traffic is fused into passes that already move the data
-(Sec. 5.2).  TRSM follows the paper's blocked scheme: off-diagonal panels
-are GEMM updates (ABFT), the small diagonal solves are substitution with
-reciprocal-diagonal precomputation (DMR) - the same hybrid, one level down.
+(Sec. 5.2).  Every routine here is a thin wrapper over the fused
+``ft_matmul`` contract ``C = alpha*A@B + beta*C0``: the alpha/beta epilogue
+rides inside the ABFT verification interval (beta-adjusted checksums), so
+under the default ``fuse_epilogue`` policy a gemm with beta != 0 lowers to
+exactly one Pallas kernel call and there is no separate O(MN) combine pass.
+``policy.fuse_epilogue = False`` restores the pre-fusion separate
+DMR-protected epilogue as the A/B ablation.
+
+TRSM follows the paper's blocked scheme: off-diagonal panels are GEMM
+updates (ABFT, with the alpha*B accumulate folded into the same interval),
+the small diagonal solves are substitution with reciprocal-diagonal
+precomputation (DMR) - the same hybrid, one level down.
 
 All routines return (result, FTReport).
 """
@@ -21,28 +30,7 @@ from repro.core import report as ftreport
 from repro.core.abft import ft_matmul
 from repro.core.dmr import dmr_compute, dmr_report
 from repro.core.ft_config import FTPolicy, default_policy
-from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
-
-
-def _combine(alpha, P, beta, C, policy, injection=None):
-    """alpha*P + beta*C - a memory-bound epilogue, so DMR (hybrid scheme)."""
-    alpha = jnp.asarray(alpha, P.dtype)
-    beta = jnp.asarray(beta, P.dtype)
-    if C is None:
-        def f(p):
-            return alpha * p
-        args = (P,)
-    else:
-        def f(p, c):
-            return alpha * p + beta * c
-        args = (P, C)
-    if not policy.dmr_on:
-        y = f(*args)
-        if injection is not None:  # lands unprotected, either DMR stream
-            y = injection.perturb(y, stream=(DMR_STREAM_1, DMR_STREAM_2))
-        return y, ftreport.empty_report()
-    v = dmr_compute(f, *args, injection=injection, vote=policy.dmr_vote)
-    return v.y, dmr_report(v)
+from repro.core.injection import Injection
 
 
 # -- GEMM ---------------------------------------------------------------------
@@ -50,13 +38,15 @@ def gemm(alpha, A: jax.Array, B: jax.Array, beta=0.0,
          C: Optional[jax.Array] = None, *,
          policy: Optional[FTPolicy] = None,
          injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
-    """C := alpha A B + beta C.  A@B under online ABFT; epilogue under DMR."""
+    """C := alpha A B + beta C - one fused ABFT interval, epilogue included.
+
+    The injection spec carries disjoint stream ids: ABFT slots fire on the
+    (epilogue-scaled) accumulator; DMR slots only exist when the policy
+    runs the separate-epilogue ablation.
+    """
     policy = policy or default_policy()
-    P, rep_mm = ft_matmul(A, B, policy=policy, injection=injection)
-    # The injection spec carries disjoint stream ids, so passing it to both
-    # phases is safe: ABFT slots fire in the matmul, DMR slots here.
-    out, rep_ep = _combine(alpha, P, beta, C, policy, injection=injection)
-    return out, ftreport.merge(rep_mm, rep_ep)
+    return ft_matmul(A, B, alpha=alpha, beta=beta, C0=C, policy=policy,
+                     injection=injection)
 
 
 # -- SYMM ---------------------------------------------------------------------
@@ -68,7 +58,7 @@ def symm(alpha, A: jax.Array, B: jax.Array, beta=0.0,
 
     The paper implements SYMM as GEMM with a modified packing routine that
     mirrors the triangle while streaming A; here the mirror is a pure data
-    rearrangement (packing analogue) feeding the same ABFT GEMM.
+    rearrangement (packing analogue) feeding the same fused ABFT GEMM.
     """
     policy = policy or default_policy()
     tri = jnp.tril(A) if lower else jnp.triu(A)
@@ -90,11 +80,10 @@ def trmm(alpha, A: jax.Array, B: jax.Array, *, lower: bool = True,
 def syrk(alpha, A: jax.Array, beta=0.0, C: Optional[jax.Array] = None, *,
          policy: Optional[FTPolicy] = None,
          injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
-    """C := alpha A A^T + beta C under ABFT."""
+    """C := alpha A A^T + beta C under one fused ABFT interval."""
     policy = policy or default_policy()
-    P, rep_mm = ft_matmul(A, A.T, policy=policy, injection=injection)
-    out, rep_ep = _combine(alpha, P, beta, C, policy, injection=injection)
-    return out, ftreport.merge(rep_mm, rep_ep)
+    return ft_matmul(A, A.T, alpha=alpha, beta=beta, C0=C, policy=policy,
+                     injection=injection)
 
 
 # -- TRSM ---------------------------------------------------------------------
@@ -104,10 +93,12 @@ def trsm(alpha, A: jax.Array, B: jax.Array, *, lower: bool = True,
          injection: Optional[Injection] = None) -> Tuple[jax.Array, dict]:
     """Solve op(A) X = alpha B, A triangular - paper's blocked algorithm.
 
-    Panel loop: X[p] = inv(diag_p) (alpha*B[p] - A[p, :p0] X[:p0]) where the
-    trailing update is the ABFT GEMM macro-kernel and the diagonal solve is a
-    substitution micro-kernel with precomputed reciprocal diagonal (packing
-    trick, paper Sec. 3.3.3) under DMR.
+    Panel loop: X[p] = inv(diag_p) (alpha*B[p] - A[p, :p0] X[:p0]).  The
+    trailing update is one fused ABFT interval for the full contract
+    ``-A[p,:p0] @ X[:p0] + alpha*B[p]`` (alpha = -1, beta = alpha of the
+    solve), and the diagonal solve is a substitution micro-kernel with
+    precomputed reciprocal diagonal (packing trick, paper Sec. 3.3.3)
+    under DMR.
     """
     policy = policy or default_policy()
     if not lower:
@@ -136,12 +127,13 @@ def trsm(alpha, A: jax.Array, B: jax.Array, *, lower: bool = True,
         X, rep = carry
         row0 = p * block
         A_rows = lax.dynamic_slice(Ap, (row0, 0), (block, mm))
-        B_blk = alpha * lax.dynamic_slice(Bp, (row0, 0), (block, n))
+        B_blk = lax.dynamic_slice(Bp, (row0, 0), (block, n))
         mask = (jnp.arange(mm) < row0).astype(Ap.dtype)[:, None]
 
-        # Trailing update: GEMM macro-kernel => ABFT.
-        U, rep_mm = ft_matmul(A_rows, X * mask, policy=policy, injection=inj)
-        rhs = B_blk - U
+        # Trailing update: alpha*B[p] - A[p,:p0] X[:p0] as ONE fused ABFT
+        # interval (the accumulate is the GEMM epilogue).
+        rhs, rep_mm = ft_matmul(A_rows, X * mask, alpha=-1.0, beta=alpha,
+                                C0=B_blk, policy=policy, injection=inj)
 
         # Diagonal micro-solve (block x block vs n RHS) => DMR.
         diag = lax.dynamic_slice(Ap, (row0, row0), (block, block))

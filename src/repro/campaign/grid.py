@@ -32,7 +32,8 @@ from repro import blas
 from repro.blas import ref
 from repro.core.ft_config import FTPolicy
 from repro.core.ft_dense import ft_bmm, ft_dense
-from repro.core.injection import (ABFT_ACC, DMR_STREAM_1, DMR_STREAM_2)
+from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, DMR_STREAM_1,
+                                  DMR_STREAM_2)
 
 DTYPES: Dict[str, jnp.dtype] = {"f32": jnp.float32, "bf16": jnp.bfloat16}
 
@@ -54,6 +55,8 @@ POLICIES: Dict[str, PolicyCase] = {
         PolicyCase("off", FTPolicy(mode="off")),
         PolicyCase("hybrid-fused", FTPolicy(mode="hybrid", fused=True)),
         PolicyCase("hybrid-unfused", FTPolicy(mode="hybrid", fused=False)),
+        PolicyCase("hybrid-sepilogue",
+                   FTPolicy(mode="hybrid", fused=True, fuse_epilogue=False)),
         PolicyCase("dmr-unfused", FTPolicy(mode="dmr", fused=False)),
         PolicyCase("dmr-fused", FTPolicy(mode="dmr", fused=True)),
         PolicyCase("abft-unfused", FTPolicy(mode="abft", fused=False)),
@@ -65,7 +68,8 @@ POLICIES: Dict[str, PolicyCase] = {
     )
 }
 
-SMOKE_POLICIES = ("off", "hybrid-fused", "hybrid-unfused", "dmr-unfused")
+SMOKE_POLICIES = ("off", "hybrid-fused", "hybrid-unfused",
+                  "hybrid-sepilogue", "dmr-unfused")
 FULL_POLICIES = tuple(POLICIES)
 
 
@@ -77,8 +81,20 @@ class StreamSpec:
     domain: int                  # flat-index positions the stream can hit
     pin_pos: Optional[int] = None  # fixed position (location-sensitive dets)
     positive_delta: bool = False   # magnitude-comparison detection (iamax)
+    label: Optional[str] = None    # cell-id suffix (defaults to ``kind``)
+    epilogue: bool = False         # stream lives in the SEPARATE alpha/beta
+    # combine pass: under an ABFT policy with fuse_epilogue the epilogue is
+    # folded into the checksummed kernel, so this stream's hardware path
+    # does not exist and no cell (not even a control) is generated.
+
+    def exists_under(self, policy: FTPolicy) -> bool:
+        if self.epilogue:
+            return not (policy.abft_on and policy.fuse_epilogue)
+        return True
 
     def protected_under(self, policy: FTPolicy) -> bool:
+        if not self.exists_under(policy):
+            return False
         if self.kind == "dmr":
             return policy.dmr_on
         return policy.abft_on
@@ -269,7 +285,12 @@ def _routines() -> Dict[str, Routine]:
         streams=lambda ops: (StreamSpec("dmr", DMR_STREAM_1, 8),),
         base_scale=4.0, ref_scale=3.0))
 
-    # ---- Level 3 (ABFT matmul core + DMR epilogue) ----
+    # ---- Level 3 (ABFT matmul + fused epilogue; DMR epilogue = ablation) --
+    # The alpha/beta epilogue is folded into the ABFT interval under the
+    # default policies, so the old DMR epilogue streams exist only under
+    # ``fuse_epilogue=False`` (policy "hybrid-sepilogue" and the dmr-*
+    # modes); epilogue faults elsewhere are ABFT_ACC_2 "abft-epi" cells
+    # landing on the epilogue-scaled accumulator.
     def _gemm_make(key, dt):
         k1, k2, k3 = jax.random.split(key, 3)
         return (_normal(k1, (GEMM_M, GEMM_K), dt),
@@ -286,8 +307,10 @@ def _routines() -> Dict[str, Routine]:
                                             policy=pol, injection=inj),
         oracle=lambda ops: ref.gemm(1.0, _f(ops[0]), _f(ops[1]), 0.5,
                                     _f(ops[2])).ravel(),
-        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, mn),
-                             StreamSpec("dmr", DMR_STREAM_1, mn)),
+        streams=lambda ops: (
+            StreamSpec("abft", ABFT_ACC, mn),
+            StreamSpec("dmr", DMR_STREAM_1, mn, epilogue=True),
+            StreamSpec("abft", ABFT_ACC_2, mn, label="abft-epi")),
         base_scale=4 * sK, ref_scale=4 * sK))
 
     def _symm_make(key, dt):
@@ -303,8 +326,9 @@ def _routines() -> Dict[str, Routine]:
                                             policy=pol, injection=inj),
         oracle=lambda ops: ref.symm(1.0, _f(ops[0]), _f(ops[1]), 0.5,
                                     _f(ops[2])).ravel(),
-        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, mn),
-                             StreamSpec("dmr", DMR_STREAM_2, mn)),
+        streams=lambda ops: (
+            StreamSpec("abft", ABFT_ACC, mn),
+            StreamSpec("dmr", DMR_STREAM_2, mn, epilogue=True)),
         base_scale=float(4 * np.sqrt(GEMM_M)),
         ref_scale=float(4 * np.sqrt(GEMM_M))))
 
@@ -316,8 +340,9 @@ def _routines() -> Dict[str, Routine]:
         run=lambda ops, pol, inj: blas.trmm(2.0, ops[0], ops[1], policy=pol,
                                             injection=inj),
         oracle=lambda ops: ref.trmm(2.0, _f(ops[0]), _f(ops[1])).ravel(),
-        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, mn),
-                             StreamSpec("dmr", DMR_STREAM_1, mn)),
+        streams=lambda ops: (
+            StreamSpec("abft", ABFT_ACC, mn),
+            StreamSpec("dmr", DMR_STREAM_1, mn, epilogue=True)),
         base_scale=float(8 * np.sqrt(GEMM_M)),
         ref_scale=float(8 * np.sqrt(GEMM_M))))
 
@@ -330,9 +355,11 @@ def _routines() -> Dict[str, Routine]:
                                             policy=pol, injection=inj),
         oracle=lambda ops: ref.syrk(1.0, _f(ops[0]), 0.5,
                                     _f(ops[1])).ravel(),
-        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, GEMM_M * GEMM_M),
-                             StreamSpec("dmr", DMR_STREAM_2,
-                                        GEMM_M * GEMM_M)),
+        streams=lambda ops: (
+            StreamSpec("abft", ABFT_ACC, GEMM_M * GEMM_M),
+            StreamSpec("dmr", DMR_STREAM_2, GEMM_M * GEMM_M, epilogue=True),
+            StreamSpec("abft", ABFT_ACC_2, GEMM_M * GEMM_M,
+                       label="abft-epi")),
         base_scale=4 * sK, ref_scale=4 * sK))
 
     def _trsm_make(key, dt):
@@ -380,7 +407,7 @@ def _routines() -> Dict[str, Routine]:
                 _normal(k2, (BMM_B, BMM_K, BMM_N), dt))
 
     def _bmm_run(ops, pol, inj):
-        y, rep = ft_bmm_with_injection(ops[0], ops[1], pol, inj)
+        y, rep = ft_bmm(ops[0], ops[1], policy=pol, injection=inj)
         return y.ravel(), rep
 
     add(Routine(
@@ -389,19 +416,19 @@ def _routines() -> Dict[str, Routine]:
         run=_bmm_run,
         oracle=lambda ops: np.einsum(
             "bmk,bkn->bmn", _f(ops[0]), _f(ops[1])).ravel(),
-        # batched ABFT targets slice 0; pos domain is one slice.
-        streams=lambda ops: (StreamSpec("abft", ABFT_ACC, BMM_M * BMM_N),),
+        # Injection positions index the flattened (nb*M*N) output, so the
+        # PRNG-chosen cell can land in any batch slice; the "abft-slice"
+        # cell pins the LAST slice to prove nonzero-slice targeting on the
+        # native batch grid.
+        streams=lambda ops: (
+            StreamSpec("abft", ABFT_ACC, BMM_B * BMM_M * BMM_N),
+            StreamSpec("abft", ABFT_ACC_2, BMM_B * BMM_M * BMM_N,
+                       pin_pos=(BMM_B - 1) * BMM_M * BMM_N + 7,
+                       label="abft-slice")),
         base_scale=float(4 * np.sqrt(BMM_K)),
         ref_scale=float(4 * np.sqrt(BMM_K))))
 
     return r
-
-
-def ft_bmm_with_injection(a, b, policy, injection):
-    """ft_bmm's public surface takes no injection; campaigns reach one level
-    down to the batched matmul so the per-slice seam is exercised."""
-    from repro.core.abft import ft_matmul_batched
-    return ft_matmul_batched(a, b, policy=policy, injection=injection)
 
 
 ROUTINES: Dict[str, Routine] = _routines()
@@ -439,8 +466,9 @@ def _expectation(kind: str, policy: FTPolicy, protected: bool) -> str:
 def _mk_cell(rt: Routine, pc: PolicyCase, dtype: str, model: str,
              spec: StreamSpec) -> Cell:
     protected = spec.protected_under(pc.policy)
+    suffix = spec.label or spec.kind
     return Cell(
-        cell_id=f"{rt.name}/{pc.name}/{dtype}/{model}-{spec.kind}",
+        cell_id=f"{rt.name}/{pc.name}/{dtype}/{model}-{suffix}",
         routine=rt.name, level=rt.level, policy=pc.name, dtype=dtype,
         model=model, stream_kind=spec.kind, stream=spec.stream,
         protected=protected,
@@ -455,10 +483,15 @@ def build_cells(*, smoke: bool = True,
     """Enumerate campaign cells.
 
     Smoke grid: every routine x {off, hybrid-fused, hybrid-unfused,
-    dmr-unfused} x {f32, bf16} x single-error on every protected stream,
-    one control cell per routine (policy off, f32), plus an L3 burst row
-    under the recompute policy.  The full grid adds the remaining policies
-    (abft-unfused, dmr-fused, hybrid-novote) and bf16 controls.
+    hybrid-sepilogue, dmr-unfused} x {f32, bf16} x single-error on every
+    protected stream - including the epilogue-injection "abft-epi" cells
+    (faults on the epilogue-scaled accumulator) and the batched
+    nonzero-slice "abft-slice" cell - one control cell per routine
+    (policy off, f32), plus an L3 burst row under the recompute policy.
+    The full grid adds the remaining policies (abft-unfused, dmr-fused,
+    hybrid-novote) and bf16 controls.  Streams whose hardware path is
+    folded away by a policy (the separate DMR epilogue under fused-epilogue
+    ABFT) generate no cells under it.
     """
     def _check(sel, known, what):
         bad = sorted(set(sel) - set(known))
@@ -488,9 +521,17 @@ def build_cells(*, smoke: bool = True,
         specs = rt.streams(probe_ops[name])
         for pname in sel_policies:
             pc = POLICIES[pname]
+            # hybrid-sepilogue exists to exercise the separate-epilogue
+            # ablation; only routines that HAVE an epilogue stream differ
+            # from hybrid-fused under it, so skip the rest (combo budget).
+            if (pname == "hybrid-sepilogue"
+                    and not any(s.epilogue for s in specs)):
+                continue
             for dtype in sel_dtypes:
                 if "single" in sel_models:
                     for spec in specs:
+                        if not spec.exists_under(pc.policy):
+                            continue  # hardware path folded away
                         if not spec.protected_under(pc.policy):
                             # keep ONE control per routine: off/f32 on the
                             # routine's primary stream.

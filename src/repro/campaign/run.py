@@ -93,8 +93,10 @@ def run_campaign(args) -> dict:
 def run_drill(args) -> bool:
     """Poisson-rate drill: (1) a jitted scan loop hammers ft_dense with a
     configured errors-per-minute schedule and checks every injected error
-    is detected with oracle-matching outputs; (2) one real train step via
-    launch/steps.py machinery proves the FT counters flow into metrics."""
+    is detected with oracle-matching outputs; (2) WHOLE train steps via the
+    ``make_train_step(..., injection_seam=True)`` seam run under the same
+    rate model - every step samples a fresh Injection, detections surface
+    in step metrics, and the trained params match a clean run."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -140,36 +142,78 @@ def run_drill(args) -> bool:
     print(f"  max |step output - clean| = {max_err:.3e}")
     ok = detected >= injected and max_err < 1e-2
 
-    # (2) step-level metrics flow through the launch/steps.py train path.
+    # (2) WHOLE train steps under rate-model injection: the launch/steps.py
+    # injection seam samples a fresh Poisson Injection per step; detections
+    # surface in step metrics and the DMR vote keeps params on the clean
+    # trajectory.
     from jax.sharding import PartitionSpec as P
 
+    from repro.campaign.errors import PoissonSchedule as PS
     from repro.configs import get_config
+    from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
     from repro.launch.mesh import smoke_mesh
-    from repro.launch.steps import make_ctx
+    from repro.launch.steps import make_ctx, make_train_step
     from repro.models import build_model, param_specs
     from repro.models.specs import batch_specs
+    from repro.optim import adamw
 
     cfg = get_config("llama3_8b").smoke()
     model = build_model(cfg)
     mesh = smoke_mesh()
-    ctx = make_ctx(multi_pod=False, data_size=1, model_size=1, policy=policy)
+    # Model forward under "off" (the DMR barrier has no AD rule on this
+    # jax floor); the optimizer update runs the DMR-protected chain.
+    ctx = make_ctx(multi_pod=False, data_size=1, model_size=1)
     params = model.init(jax.random.PRNGKey(0), 1)
+    opt_cfg = adamw.AdamWConfig(warmup=1, total_steps=100)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
                                           cfg.vocab),
              "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
                                           cfg.vocab)}
-    mspec = {"nll": P(), "aux": P(),
+    pspecs = param_specs(params)
+    ospecs = {"m": jax.tree.map(lambda _: P(), params),
+              "v": jax.tree.map(lambda _: P(), params),
+              "step": P()}
+    mspec = {"nll": P(), "aux": P(), "loss": P(),
              "report": {k: P() for k in ftreport.FIELDS}}
+    ispec = jax.tree.map(lambda _: P(), Injection.none())
+    body = make_train_step(model, ctx, opt_cfg, zero=False,
+                           injection_seam=True,
+                           opt_policy=FTPolicy(mode="hybrid", fused=False))
     fn = jax.jit(jax.shard_map(
-        lambda p, b: model.train_loss(p, b, ctx), mesh=mesh,
-        in_specs=(param_specs(params), batch_specs(batch, multi_pod=False)),
-        out_specs=(P(), mspec), check_vma=False))
-    loss, metrics = fn(params, batch)
+        body, mesh=mesh,
+        in_specs=(pspecs, ospecs, batch_specs(batch, multi_pod=False),
+                  ispec),
+        out_specs=(pspecs, ospecs, mspec), check_vma=False))
+
+    # DMR-stream schedule: positions index the stacked per-leaf update.
+    step_sched = PS(rate_per_min=args.drill_rate, step_time_s=0.05,
+                    out_size=64,
+                    stream_choices=(DMR_STREAM_1, DMR_STREAM_2),
+                    base_scale=1.0)
+    n_steps = 8
+    keys = jax.random.split(jax.random.PRNGKey(args.seed + 1), n_steps)
+    p_inj, o_inj = params, adamw.init_state(params)
+    p_cln, o_cln = params, adamw.init_state(params)
+    step_injected = step_detected = faulty_steps = 0
+    for k in keys:
+        inj = step_sched.sample(k)
+        n_act = int(inj.n_active())
+        step_injected += n_act
+        faulty_steps += int(n_act > 0)
+        p_inj, o_inj, metrics = fn(p_inj, o_inj, batch, inj)
+        step_detected += int(metrics["report"]["dmr_detected"] > 0)
+        p_cln, o_cln, _ = fn(p_cln, o_cln, batch, Injection.none())
+    drift = max((float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                       - b.astype(jnp.float32))))
+                 for a, b in zip(jax.tree.leaves(p_inj),
+                                 jax.tree.leaves(p_cln))), default=0.0)
     have = set(metrics["report"]) == set(ftreport.FIELDS)
-    print(f"  train step: loss={float(loss):.4f}, ft/abft_corrected="
-          f"{int(metrics['report']['abft_corrected'])}, metrics keys "
+    print(f"  train-step seam: {n_steps} steps, {step_injected} errors in "
+          f"{faulty_steps} steps -> {step_detected} faulty steps detected, "
+          f"max param drift vs clean = {drift:.3e}, metrics keys "
           f"{'OK' if have else 'MISSING'}")
-    return ok and have
+    step_ok = step_detected >= faulty_steps and drift == 0.0
+    return ok and have and step_ok
 
 
 def main(argv=None) -> int:

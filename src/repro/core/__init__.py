@@ -10,7 +10,8 @@ Public surface:
   report               - FT telemetry counters
 """
 from repro.core.ft_config import (FTPolicy, OFF, HYBRID, HYBRID_UNFUSED,
-                                  DMR_ONLY, ABFT_ONLY, default_policy)
+                                  HYBRID_SEP_EPILOGUE, DMR_ONLY, ABFT_ONLY,
+                                  default_policy)
 from repro.core.injection import Injection
 from repro.core.abft import (ft_matmul, ft_matmul_batched, ft_matmul_diff,
                              matmul_fused, matmul_unfused)

@@ -1,6 +1,15 @@
 """Online-ABFT protected matmul - the paper's Level-3 scheme as a JAX op.
 
-Two implementations, mirroring the paper's Sec. 5.1 vs 5.2 comparison:
+``ft_matmul`` carries the FULL level-3 BLAS contract
+
+    C = alpha * A @ B + beta * C0
+
+inside one ABFT verification interval: the reference checksums are
+beta-adjusted (``rowsum_ref = alpha*A(Be) + beta*rowsum(C0)``, same for the
+column and |.|-tolerance refs) and the actual row/col sums are taken from
+the epilogue-scaled result, so a fault in the scaling/accumulate arithmetic
+is detected and corrected exactly like a fault in the product.  Two
+implementations, mirroring the paper's Sec. 5.1 vs 5.2 comparison:
 
   matmul_unfused : ABFT layered *on top of* a black-box GEMM.  The reference
     checksums and the row/col sums of C are separate GEMV/reduction passes -
@@ -8,10 +17,22 @@ Two implementations, mirroring the paper's Sec. 5.1 vs 5.2 comparison:
     is the 9-15%-overhead configuration the paper measures against MKL.
 
   matmul_fused : delegates to the Pallas kernel (kernels/abft_gemm.py) that
-    accumulates all checksum terms while tiles are VMEM-resident, so the FT
-    overhead is purely computational (paper: 2.9%).
+    accumulates all checksum terms while tiles are VMEM-resident and applies
+    the alpha/beta epilogue to the still-resident accumulator, so the FT
+    overhead is purely computational (paper: 2.9%) and ``gemm`` with
+    beta != 0 lowers to exactly ONE pallas_call.
 
-Both return ``(C, FTReport)`` and share the verification epilogue in
+``policy.fuse_epilogue = False`` restores the pre-fusion design - the ABFT
+interval covers only A@B and a separate DMR-protected O(MN) combine pass
+applies the epilogue afterwards - kept as the A/B ablation baseline
+(campaign policy "hybrid-sepilogue").
+
+Batched contractions run on the kernel's native leading batch grid
+dimension: ``ft_matmul_batched`` issues ONE pallas_call for all slices with
+per-slice checksum partials, and injection positions index the flattened
+(nb*M*N) output so faults can target any batch slice.
+
+All paths return ``(C, FTReport)`` and share the verification epilogue in
 ``core.checksum``.  ``ft_matmul`` dispatches on FTPolicy; ``ft_matmul_diff``
 wraps it in a custom_vjp so backward matmuls are protected too.
 """
@@ -26,34 +47,67 @@ from jax import lax
 
 from repro.core import checksum as cks
 from repro.core import report as ftreport
-from repro.core.dmr import _fence
+from repro.core.dmr import _fence, dmr_compute, dmr_report
 from repro.core.ft_config import FTPolicy, default_policy
-from repro.core.injection import ABFT_ACC, ABFT_ACC_2, Injection
+from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, DMR_STREAM_1,
+                                  DMR_STREAM_2, Injection)
 
 ABFT_STREAMS = (ABFT_ACC, ABFT_ACC_2)
+DMR_STREAMS = (DMR_STREAM_1, DMR_STREAM_2)
 
 
-def _plain(A, B, out_dtype):
-    acc = cks.acc_dtype_for(A.dtype)
-    C = jnp.matmul(A, B, preferred_element_type=acc)
-    return C.astype(out_dtype)
+def _epilogue(A, B, alpha, beta, C0, acc):
+    """The full contract in accumulation dtype (recompute / plain path)."""
+    C = jnp.asarray(alpha, acc) * jnp.matmul(A, B,
+                                             preferred_element_type=acc)
+    if C0 is not None:
+        C = C + jnp.asarray(beta, acc) * C0.astype(acc)
+    return C
+
+
+def _epilogue_sep(alpha, P, beta, C0, policy, injection=None):
+    """Separate alpha*P + beta*C0 pass - the pre-fusion design, kept for
+    ``fuse_epilogue=False`` ablations and for DMR-only policies (a
+    memory-bound pass, so DMR protects it when the policy has no ABFT)."""
+    alpha = jnp.asarray(alpha, P.dtype)
+    beta = jnp.asarray(beta, P.dtype)
+    if C0 is None:
+        def f(p):
+            return alpha * p
+        args = (P,)
+    else:
+        def f(p, c):
+            return alpha * p + beta * c.astype(P.dtype)
+        args = (P, C0)
+    if not policy.dmr_on:
+        y = f(*args)
+        if injection is not None:  # lands unprotected, either DMR stream
+            y = injection.perturb(y, stream=DMR_STREAMS)
+        return y, ftreport.empty_report()
+    v = dmr_compute(f, *args, injection=injection, vote=policy.dmr_vote)
+    return v.y, dmr_report(v)
 
 
 def matmul_unfused(A: jax.Array, B: jax.Array, *,
                    policy: FTPolicy,
+                   alpha=1.0, beta=0.0, C0: Optional[jax.Array] = None,
                    injection: Optional[Injection] = None,
                    out_dtype=None) -> Tuple[jax.Array, dict]:
-    """ABFT on a third-party GEMM (paper Sec. 5.1 baseline)."""
+    """ABFT on a third-party GEMM (paper Sec. 5.1 baseline), full contract.
+
+    The epilogue is ordinary XLA dataflow here (separate passes over C are
+    exactly the traffic fusion removes) but it sits INSIDE the verified
+    interval: actual sums are taken after scaling, refs are beta-adjusted.
+    """
     out_dtype = out_dtype or A.dtype
     inj = injection if injection is not None else Injection.none()
     acc = cks.acc_dtype_for(A.dtype)
     k_dim = A.shape[1]
 
-    C = jnp.matmul(A, B, preferred_element_type=acc)
+    C = _epilogue(A, B, alpha, beta, C0, acc)
     C = inj.perturb(C, stream=ABFT_STREAMS)
 
-    refs = cks.encode_refs(A, B)
-    # Separate passes over C: this is exactly the traffic fusion removes.
+    refs = cks.encode_refs(A, B, alpha=alpha, beta=beta, C0=C0)
     rowsum_act = C.sum(axis=1)
     colsum_act = C.sum(axis=0)
     verdict = cks.verify_and_correct(
@@ -61,28 +115,32 @@ def matmul_unfused(A: jax.Array, B: jax.Array, *,
         tol_factor=policy.tol_factor,
         max_corrections=policy.max_corrections)
 
-    C_out = _maybe_recompute(verdict, A, B, policy)
+    C_out = _maybe_recompute(verdict, A, B, alpha, beta, C0, policy)
     return C_out.astype(out_dtype), cks.verdict_report(verdict)
 
 
 def matmul_fused(A: jax.Array, B: jax.Array, *,
                  policy: FTPolicy,
+                 alpha=1.0, beta=0.0, C0: Optional[jax.Array] = None,
                  injection: Optional[Injection] = None,
                  out_dtype=None) -> Tuple[jax.Array, dict]:
-    """Fused-checksum ABFT GEMM via the Pallas kernel (paper Sec. 5.2)."""
+    """Fused-epilogue ABFT GEMM via the Pallas kernel (paper Sec. 5.2):
+    product, epilogue and all checksum terms in one pallas_call."""
     from repro.kernels import ops as kops  # lazy: kernels import core
     out_dtype = out_dtype or A.dtype
     C, rowsum_act, colsum_act, refs = kops.abft_gemm(
-        A, B, injection=injection, interpret=policy.interpret)
+        A, B, alpha=alpha, beta=beta, C0=C0, injection=injection,
+        interpret=policy.interpret)
     verdict = cks.verify_and_correct(
         C, rowsum_act, colsum_act, refs, k_dim=A.shape[1],
         tol_factor=policy.tol_factor,
         max_corrections=policy.max_corrections)
-    C_out = _maybe_recompute(verdict, A, B, policy)
+    C_out = _maybe_recompute(verdict, A, B, alpha, beta, C0, policy)
     return C_out.astype(out_dtype), cks.verdict_report(verdict)
 
 
-def _maybe_recompute(verdict: cks.AbftVerdict, A, B, policy: FTPolicy):
+def _maybe_recompute(verdict: cks.AbftVerdict, A, B, alpha, beta, C0,
+                     policy: FTPolicy):
     """Paper's recovery escalation: if checksum correction could not resolve
     the interval, recompute it once ("third calculation")."""
     if not policy.recompute_fallback:
@@ -90,66 +148,157 @@ def _maybe_recompute(verdict: cks.AbftVerdict, A, B, policy: FTPolicy):
     acc = cks.acc_dtype_for(A.dtype)
 
     def redo(ops):
-        a, b = _fence(*ops)
-        return jnp.matmul(a, b, preferred_element_type=acc
-                          ).astype(verdict.C.dtype)
+        a, b = _fence(ops[0], ops[1])
+        c0 = ops[2] if len(ops) > 2 else None
+        return _epilogue(a, b, alpha, beta, c0,
+                         acc).astype(verdict.C.dtype)
 
+    ops = (A, B) if C0 is None else (A, B, C0)
     return lax.cond(verdict.unrecoverable, redo,
-                    lambda ops: verdict.C, (A, B))
+                    lambda ops: verdict.C, ops)
 
 
 def ft_matmul(A: jax.Array, B: jax.Array, *,
+              alpha=1.0, beta=0.0, C0: Optional[jax.Array] = None,
               policy: Optional[FTPolicy] = None,
               injection: Optional[Injection] = None,
               out_dtype=None) -> Tuple[jax.Array, dict]:
-    """Policy-dispatched fault-tolerant 2-D matmul.
+    """Policy-dispatched fault-tolerant 2-D matmul, full BLAS contract.
 
-    (M,K) @ (K,N) -> (N,); leading batch dims are NOT handled here - see
+    (M, K) @ (K, N) -> (M, N), optionally scaled and accumulated into an
+    (M, N) ``C0``; leading batch dims are NOT handled here - see
     ft_einsum / batched helpers.
     """
     policy = policy or default_policy()
     out_dtype = out_dtype or A.dtype
     if not policy.abft_on:
-        C = _plain(A, B, out_dtype)
+        acc = cks.acc_dtype_for(A.dtype)
+        P = jnp.matmul(A, B, preferred_element_type=acc)
         if injection is not None:  # errors pass through unprotected
-            C = injection.perturb(C, stream=ABFT_STREAMS)
-        return C, ftreport.empty_report()
+            P = injection.perturb(P, stream=ABFT_STREAMS)
+        out, rep = _epilogue_sep(alpha, P, beta, C0, policy, injection)
+        return out.astype(out_dtype), rep
     fn = matmul_fused if policy.fused else matmul_unfused
-    return fn(A, B, policy=policy, injection=injection, out_dtype=out_dtype)
+    if policy.fuse_epilogue:
+        return fn(A, B, alpha=alpha, beta=beta, C0=C0, policy=policy,
+                  injection=injection, out_dtype=out_dtype)
+    # A/B ablation: ABFT interval covers only the product; the epilogue is
+    # the pre-fusion separate (DMR-protected) O(MN) pass.
+    P, rep_mm = fn(A, B, policy=policy, injection=injection)
+    out, rep_ep = _epilogue_sep(alpha, P, beta, C0, policy, injection)
+    return out.astype(out_dtype), ftreport.merge(rep_mm, rep_ep)
+
+
+def _slice_injections(injection: Optional[Injection], nb: int,
+                      slice_size: int) -> Injection:
+    """Split a global-position spec into per-slice specs (vmapped paths).
+
+    Positions index the flattened (nb, M, N) output; slot s belongs to
+    slice ``pos // (M*N)`` with local position ``pos % (M*N)``.
+    """
+    inj = injection if injection is not None else Injection.none()
+    sz = max(slice_size, 1)
+
+    def per_slice(b):
+        return Injection(inj.active & ((inj.pos // sz) == b),
+                         inj.stream, inj.pos % sz, inj.delta)
+
+    return jax.vmap(per_slice)(jnp.arange(nb, dtype=jnp.int32))
 
 
 def ft_matmul_batched(A: jax.Array, B: jax.Array, *,
+                      alpha=1.0, beta=0.0, C0: Optional[jax.Array] = None,
                       policy: Optional[FTPolicy] = None,
                       injection: Optional[Injection] = None,
                       out_dtype=None) -> Tuple[jax.Array, dict]:
     """Batched (..., M, K) @ (..., K, N) with per-slice ABFT.
 
     Each batch slice is an independent verification interval; reports are
-    summed.  Injection (if any) targets batch slice 0.
+    summed.  Under a fused policy all slices run in ONE pallas_call on the
+    kernel's native leading batch grid dimension.  Injection positions
+    index the flattened (nb*M*N) output, so a fault can target any slice.
     """
     policy = policy or default_policy()
+    out_dtype = out_dtype or A.dtype
     if A.ndim == 2 and B.ndim == 2:
-        return ft_matmul(A, B, policy=policy, injection=injection,
-                         out_dtype=out_dtype)
-    batch_shape = jnp.broadcast_shapes(A.shape[:-2], B.shape[:-2])
+        return ft_matmul(A, B, alpha=alpha, beta=beta, C0=C0, policy=policy,
+                         injection=injection, out_dtype=out_dtype)
+    batch_shape = jnp.broadcast_shapes(A.shape[:-2], B.shape[:-2],
+                                       *(() if C0 is None
+                                         else (C0.shape[:-2],)))
     A = jnp.broadcast_to(A, batch_shape + A.shape[-2:])
     B = jnp.broadcast_to(B, batch_shape + B.shape[-2:])
     Af = A.reshape((-1,) + A.shape[-2:])
     Bf = B.reshape((-1,) + B.shape[-2:])
-    nb = Af.shape[0]
-    inj = injection if injection is not None else Injection.none()
-    inj_batch = jax.tree.map(
-        lambda x: jnp.concatenate(
-            [x[None], jnp.zeros((nb - 1,) + x.shape, x.dtype)]),
-        inj)
+    C0f = None
+    if C0 is not None:
+        C0 = jnp.broadcast_to(C0, batch_shape + C0.shape[-2:])
+        C0f = C0.reshape((-1,) + C0.shape[-2:])
+    nb, M, K = Af.shape
+    N = Bf.shape[-1]
 
-    def one(a, b, inj_i):
-        return ft_matmul(a, b, policy=policy, injection=inj_i,
-                         out_dtype=out_dtype)
+    if policy.abft_on and policy.fused:
+        C, report = _batched_fused(Af, Bf, alpha, beta, C0f, policy,
+                                   injection)
+        return (C.astype(out_dtype).reshape(batch_shape + (M, N)), report)
 
-    C, reports = jax.vmap(one)(Af, Bf, inj_batch)
+    inj_batch = _slice_injections(injection, nb, M * N)
+
+    def one(a, b, c0, inj_i):
+        return ft_matmul(a, b, alpha=alpha, beta=beta, C0=c0, policy=policy,
+                         injection=inj_i, out_dtype=out_dtype)
+
+    if C0f is None:
+        C, reports = jax.vmap(
+            lambda a, b, i: one(a, b, None, i))(Af, Bf, inj_batch)
+    else:
+        C, reports = jax.vmap(one)(Af, Bf, C0f, inj_batch)
     report = {k: v.sum().astype(jnp.int32) for k, v in reports.items()}
     return C.reshape(batch_shape + C.shape[-2:]), report
+
+
+def _batched_fused(Af, Bf, alpha, beta, C0f, policy, injection):
+    """One pallas_call over the native batch grid + vmapped verification."""
+    from repro.kernels import ops as kops  # lazy: kernels import core
+    nb, M, K = Af.shape
+    N = Bf.shape[-1]
+    if policy.fuse_epilogue:
+        kern_alpha, kern_beta, kern_C0 = alpha, beta, C0f
+    else:
+        kern_alpha, kern_beta, kern_C0 = 1.0, 0.0, None
+    C, rowsum_act, colsum_act, refs = kops.abft_gemm_batched(
+        Af, Bf, alpha=kern_alpha, beta=kern_beta, C0=kern_C0,
+        injection=injection, interpret=policy.interpret)
+    verify = functools.partial(
+        cks.verify_and_correct, k_dim=K, tol_factor=policy.tol_factor,
+        max_corrections=policy.max_corrections)
+    verdict = jax.vmap(verify)(C, rowsum_act, colsum_act, refs)
+    Cv = verdict.C
+    if policy.recompute_fallback:
+        acc = cks.acc_dtype_for(Af.dtype)
+
+        def redo(ops):
+            a, b = _fence(ops[0], ops[1])
+            r = jnp.einsum("bmk,bkn->bmn", a, b,
+                           preferred_element_type=acc)
+            if policy.fuse_epilogue:
+                r = jnp.asarray(alpha, acc) * r
+                if C0f is not None:
+                    r = r + jnp.asarray(beta, acc) * ops[2].astype(acc)
+            return jnp.where(verdict.unrecoverable[:, None, None],
+                             r.astype(Cv.dtype), Cv)
+
+        ops = (Af, Bf) if C0f is None else (Af, Bf, C0f)
+        Cv = lax.cond(verdict.unrecoverable.any(), redo,
+                      lambda ops: Cv, ops)
+    report = ftreport.make_report(
+        abft_detected=verdict.detected.sum(),
+        abft_corrected=verdict.corrected.sum(),
+        abft_unrecoverable=verdict.unrecoverable.sum())
+    if not policy.fuse_epilogue:
+        out, rep_ep = _epilogue_sep(alpha, Cv, beta, C0f, policy, injection)
+        return out, ftreport.merge(report, rep_ep)
+    return Cv, report
 
 
 # -- differentiable wrapper ---------------------------------------------------

@@ -45,21 +45,44 @@ def acc_dtype_for(dtype) -> jnp.dtype:
     return jnp.float32
 
 
-def encode_refs(A: jax.Array, B: jax.Array) -> ChecksumRefs:
+def encode_refs(A: jax.Array, B: jax.Array, *, alpha=1.0, beta=0.0,
+                C0: Optional[jax.Array] = None) -> ChecksumRefs:
     """Unfused reference-checksum encoding: two GEMV-shaped passes.
 
     This is the paper's Sec. 5.1 baseline cost model: O(n^2) DGEMV-speed work
     that is *not* hidden inside the GEMM data movement.  The fused kernel
     computes the same four vectors without re-touching A or B (Sec. 5.2).
+
+    With the epilogue folded into the verified interval the references are
+    *beta-adjusted* for the full contract ``C = alpha*A@B + beta*C0``:
+
+        rowsum_ref = alpha * A (B e) + beta * rowsum(C0)
+        colsum_ref = alpha * (e^T A) B + beta * colsum(C0)
+
+    and the |.|-magnitude refs (round-off tolerance scale) use
+    |alpha|, |beta| and |C0|.  beta/C0 default to the plain-product case.
     """
     acc = acc_dtype_for(A.dtype)
+    al = jnp.asarray(alpha, acc)
     A32, B32 = A.astype(acc), B.astype(acc)
     Aab, Bab = jnp.abs(A32), jnp.abs(B32)
+    rowsum_ref = al * (A32 @ B32.sum(axis=1))
+    colsum_ref = al * (A32.sum(axis=0) @ B32)
+    abs_rowsum_ref = jnp.abs(al) * (Aab @ Bab.sum(axis=1))
+    abs_colsum_ref = jnp.abs(al) * (Aab.sum(axis=0) @ Bab)
+    if C0 is not None:
+        be = jnp.asarray(beta, acc)
+        C032 = C0.astype(acc)
+        C0ab = jnp.abs(C032)
+        rowsum_ref = rowsum_ref + be * C032.sum(axis=1)
+        colsum_ref = colsum_ref + be * C032.sum(axis=0)
+        abs_rowsum_ref = abs_rowsum_ref + jnp.abs(be) * C0ab.sum(axis=1)
+        abs_colsum_ref = abs_colsum_ref + jnp.abs(be) * C0ab.sum(axis=0)
     return ChecksumRefs(
-        rowsum_ref=A32 @ B32.sum(axis=1),
-        colsum_ref=A32.sum(axis=0) @ B32,
-        abs_rowsum_ref=Aab @ Bab.sum(axis=1),
-        abs_colsum_ref=Aab.sum(axis=0) @ Bab,
+        rowsum_ref=rowsum_ref,
+        colsum_ref=colsum_ref,
+        abs_rowsum_ref=abs_rowsum_ref,
+        abs_colsum_ref=abs_colsum_ref,
     )
 
 

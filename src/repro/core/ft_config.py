@@ -29,6 +29,12 @@ class FTPolicy:
       mode: one of MODES.
       fused: use the fused Pallas kernels (paper Sec. 5.2) instead of the
         unfused pure-jnp ABFT baseline (paper Sec. 5.1, "third-party" path).
+      fuse_epilogue: fold the BLAS alpha/beta epilogue into the ABFT
+        verification interval (beta-adjusted checksums; epilogue faults
+        land under ABFT coverage, and the fused kernel applies the scaled
+        accumulate while the tile is still resident).  False restores the
+        pre-fusion design - a separate DMR-protected O(MN) combine pass
+        after the verified product - kept as the A/B ablation baseline.
       tol_factor: multiplier on the deterministic round-off bound used for
         checksum verification.  1.0 = worst-case bound; larger is laxer.
       max_corrections: how many distinct (row, col) errors the ABFT epilogue
@@ -50,6 +56,7 @@ class FTPolicy:
 
     mode: str = "hybrid"
     fused: bool = True
+    fuse_epilogue: bool = True
     tol_factor: float = 4.0
     max_corrections: int = 4
     recompute_fallback: bool = False
@@ -79,6 +86,7 @@ class FTPolicy:
 OFF = FTPolicy(mode="off")
 HYBRID = FTPolicy(mode="hybrid")
 HYBRID_UNFUSED = FTPolicy(mode="hybrid", fused=False)
+HYBRID_SEP_EPILOGUE = FTPolicy(mode="hybrid", fuse_epilogue=False)
 DMR_ONLY = FTPolicy(mode="dmr")
 ABFT_ONLY = FTPolicy(mode="abft")
 

@@ -56,10 +56,17 @@ def ft_dense_fused_gate(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, *,
 
 def ft_bmm(a: jax.Array, b: jax.Array, *,
            policy: Optional[FTPolicy] = None,
+           injection: Optional[Injection] = None,
            out_dtype=None) -> Tuple[jax.Array, dict]:
-    """Batched matmul (attention scores / context) with per-slice ABFT."""
+    """Batched matmul (attention scores / context) with per-slice ABFT.
+
+    Under a fused policy every slice runs in ONE pallas_call on the
+    kernel's native batch grid dimension.  ``injection`` positions index
+    the flattened (nb*M*N) output, so drills can target any batch slice.
+    """
     policy = policy or default_policy()
-    return ft_matmul_batched(a, b, policy=policy, out_dtype=out_dtype)
+    return ft_matmul_batched(a, b, policy=policy, injection=injection,
+                             out_dtype=out_dtype)
 
 
 def ft_dense_report_only(x, w, *, policy=None, **kw):

@@ -1,4 +1,4 @@
-"""Fused-checksum ABFT GEMM - Pallas TPU kernel (paper Sec. 5.2).
+"""Fused-epilogue ABFT GEMM - Pallas TPU kernel (paper Sec. 5.2).
 
 The paper's key measurement: on wide-SIMD hardware, ABFT layered on a
 black-box GEMM costs ~15% because every checksum term is an extra
@@ -16,13 +16,34 @@ TPU translation of the fusion (DESIGN.md Sec. 2):
   C^r_ref/C^c_ref updated from C in    row/col sums of the finished C tile
   registers inside the micro-kernel    taken from the f32 accumulator before
                                        it is ever written to HBM
+  beta*C folded into the micro-kernel  the full BLAS contract
+  epilogue while C is in registers     C = alpha*A@B + beta*C0 is applied to
+                                       the still-resident accumulator, and
+                                       the reference checksums are
+                                       beta-adjusted from the SAME C0 tile
 
-Grid: (M/bm, N/bn, K/bk), k innermost ("arbitrary"); i,j parallel.
-The C output block doubles as the f32 accumulator (revisited across k), so
-no scratch is required and the kernel stays portable across interpret mode
-and Mosaic.  All checksum outputs are per-tile partials (O(MN/bn + MN/bm)
-bytes); the O(M+N) reductions + verification epilogue run outside (ops.py)
-where XLA fuses them with the surrounding graph.
+The epilogue fold (FT-GEMM, arXiv:2305.02444) is what moves alpha/beta
+faults under ABFT coverage: the actual row/col sums are taken from the
+accumulator AFTER the epilogue, while the references accumulate
+
+    rowsum_ref = alpha * A (B e) + beta * rowsum(C0)
+    colsum_ref = alpha * (e^T A) B + beta * colsum(C0)
+
+(|.|-magnitude refs use |alpha|, |beta|, |C0| for the round-off tolerance).
+Any corruption of the scaled/accumulated product - including one introduced
+by the epilogue arithmetic itself - breaks the identity and is located the
+usual way.  No separate DMR combine pass remains.
+
+Grid: (nb, M/bm, N/bn, K/bk), k innermost ("arbitrary"); batch and i,j
+parallel.  A single pallas_call serves batched GEMMs: every batch slice is
+an independent verification interval with its own checksum partials, and
+the injection table addresses (slice, row, col) so faults can target any
+slice.  The C output block doubles as the f32 accumulator (revisited
+across k), so no scratch is required and the kernel stays portable across
+interpret mode and Mosaic.  All checksum outputs are per-tile partials
+(O(MN/bn + MN/bm) bytes per slice); the O(M+N) reductions + verification
+epilogue run outside (ops.py) where XLA fuses them with the surrounding
+graph.
 
 Extra FLOPs: 2MNK*(1/bm + 1/bn) = matmul/64 at 128x128 tiles; extra HBM
 bytes: only the tiny partial-checksum outputs.  This is the roofline
@@ -30,13 +51,14 @@ argument the paper makes, restated in TPU terms.
 
 Soft-error injection (paper Sec. 6.3) is compiled in: a (N_SLOTS, 4) table
 [active, stream, flat_pos, delta] perturbs the accumulator at the final
-k-step - errors land *after* the MXU accumulate and *before* the actual
-row/col sums are taken, exactly where a faulty FMA would corrupt C.
+k-step - errors land *after* the epilogue is applied and *before* the
+actual row/col sums are taken, exactly where a faulty FMA (product or
+epilogue) would corrupt C.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,121 +74,164 @@ def _acc_dtype(dtype):
     return jnp.float64 if dtype == jnp.float64 else jnp.float32
 
 
-def abft_gemm_kernel(inj_ref, a_ref, b_ref, c_ref,
-                     trow_ref, tcol_ref,
-                     rref_ref, cref_ref,
-                     arref_ref, acref_ref,
-                     *, n_total: int, bm: int, bn: int, nsteps_k: int,
-                     with_abs: bool):
-    """One (i, j, k) grid step of the fused ABFT matmul."""
-    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+def abft_gemm_kernel(inj_ref, ab_ref, a_ref, b_ref, *refs,
+                     m_total: int, n_total: int, bm: int, bn: int,
+                     nsteps_k: int, with_abs: bool, has_c0: bool):
+    """One (b, i, j, k) grid step of the fused-epilogue ABFT matmul."""
+    if has_c0:
+        c0_ref, refs = refs[0], refs[1:]
+    (c_ref, trow_ref, tcol_ref, rref_ref, cref_ref,
+     arref_ref, acref_ref) = refs
+    bidx, i, j, k = (pl.program_id(0), pl.program_id(1),
+                     pl.program_id(2), pl.program_id(3))
     acc_t = c_ref.dtype
 
-    a = a_ref[...].astype(acc_t)
-    b = b_ref[...].astype(acc_t)
+    a = a_ref[0].astype(acc_t)
+    b = b_ref[0].astype(acc_t)
 
     @pl.when(k == 0)
     def _init():
-        c_ref[...] = jnp.zeros_like(c_ref)
-        rref_ref[...] = jnp.zeros_like(rref_ref)
-        cref_ref[...] = jnp.zeros_like(cref_ref)
-        trow_ref[...] = jnp.zeros_like(trow_ref)
-        tcol_ref[...] = jnp.zeros_like(tcol_ref)
-        arref_ref[...] = jnp.zeros_like(arref_ref)
-        acref_ref[...] = jnp.zeros_like(acref_ref)
+        c_ref[0] = jnp.zeros_like(c_ref[0])
+        rref_ref[0] = jnp.zeros_like(rref_ref[0])
+        cref_ref[0] = jnp.zeros_like(cref_ref[0])
+        trow_ref[0] = jnp.zeros_like(trow_ref[0])
+        tcol_ref[0] = jnp.zeros_like(tcol_ref[0])
+        arref_ref[0] = jnp.zeros_like(arref_ref[0])
+        acref_ref[0] = jnp.zeros_like(acref_ref[0])
 
     # ---- MXU: the product itself -------------------------------------------
-    c_ref[...] += jnp.dot(a, b, preferred_element_type=acc_t)
+    c_ref[0] += jnp.dot(a, b, preferred_element_type=acc_t)
 
     # ---- VPU: fused reference checksums (paper's packing-fusion analogue) --
     # rowsum_ref partial: A_tile @ (B_tile e)   -> sums over (j, k) = A (B e)
     # colsum_ref partial: (e^T A_tile) @ B_tile -> sums over (i, k) = (e^T A) B
     be = jnp.sum(b, axis=1, keepdims=True)           # (bk, 1)
     ea = jnp.sum(a, axis=0, keepdims=True)           # (1, bk)
-    rref_ref[...] += jnp.dot(a, be, preferred_element_type=acc_t)
-    cref_ref[...] += jnp.dot(ea, b, preferred_element_type=acc_t)
+    rref_ref[0] += jnp.dot(a, be, preferred_element_type=acc_t)
+    cref_ref[0] += jnp.dot(ea, b, preferred_element_type=acc_t)
     if with_abs:  # |A| |B| magnitudes drive the round-off tolerance
         aa, ab = jnp.abs(a), jnp.abs(b)
-        arref_ref[...] += jnp.dot(aa, jnp.sum(ab, axis=1, keepdims=True),
-                                  preferred_element_type=acc_t)
-        acref_ref[...] += jnp.dot(jnp.sum(aa, axis=0, keepdims=True), ab,
-                                  preferred_element_type=acc_t)
+        arref_ref[0] += jnp.dot(aa, jnp.sum(ab, axis=1, keepdims=True),
+                                preferred_element_type=acc_t)
+        acref_ref[0] += jnp.dot(jnp.sum(aa, axis=0, keepdims=True), ab,
+                                preferred_element_type=acc_t)
 
-    # ---- final k-step: inject, then take actual row/col sums of C tile -----
+    # ---- final k-step: epilogue, inject, then actual row/col sums ----------
     @pl.when(k == nsteps_k - 1)
     def _finalize():
-        acc = c_ref[...]
+        alpha = ab_ref[0, 0].astype(acc_t)
+        beta = ab_ref[0, 1].astype(acc_t)
+        acc = alpha * c_ref[0]
+        rref = alpha * rref_ref[0]
+        cref = alpha * cref_ref[0]
+        if with_abs:
+            a_mag = jnp.abs(alpha)
+            arref = a_mag * arref_ref[0]
+            acref = a_mag * acref_ref[0]
+        if has_c0:
+            c0 = c0_ref[0].astype(acc_t)
+            acc = acc + beta * c0
+            rref = rref + beta * jnp.sum(c0, axis=1, keepdims=True)
+            cref = cref + beta * jnp.sum(c0, axis=0, keepdims=True)
+            if with_abs:
+                b_mag, c0a = jnp.abs(beta), jnp.abs(c0)
+                arref = arref + b_mag * jnp.sum(c0a, axis=1, keepdims=True)
+                acref = acref + b_mag * jnp.sum(c0a, axis=0, keepdims=True)
+        rref_ref[0] = rref
+        cref_ref[0] = cref
+        if with_abs:
+            arref_ref[0] = arref
+            acref_ref[0] = acref
+
+        # Injection lands on the epilogue-scaled accumulator: epilogue
+        # faults sit under the same checksum coverage as MXU faults.
         rows = lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
         cols = lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+        slice_sz = m_total * n_total
         for s in range(N_SLOTS):
             active = inj_ref[s, 0] > 0.5
             stream = inj_ref[s, 1].astype(jnp.int32)
             pos = inj_ref[s, 2].astype(jnp.int32)
             delta = inj_ref[s, 3].astype(acc_t)
             is_abft = (stream == ABFT_ACC) | (stream == ABFT_ACC_2)
-            hit = (rows == pos // n_total) & (cols == pos % n_total)
+            pb = pos // slice_sz
+            rem = pos - pb * slice_sz
+            hit = ((pb == bidx)
+                   & (rows == rem // n_total) & (cols == rem % n_total))
             fire = active & is_abft
             acc = acc + jnp.where(
                 fire, delta, jnp.zeros((), acc_t)) * hit.astype(acc_t)
-        c_ref[...] = acc
+        c_ref[0] = acc
         # Actual checksums from the still-resident accumulator: the fusion.
-        trow_ref[...] = jnp.sum(acc, axis=1, keepdims=True)
-        tcol_ref[...] = jnp.sum(acc, axis=0, keepdims=True)
+        trow_ref[0] = jnp.sum(acc, axis=1, keepdims=True)
+        tcol_ref[0] = jnp.sum(acc, axis=0, keepdims=True)
 
 
-def abft_gemm_call(A: jax.Array, B: jax.Array, inj_rows: jax.Array, *,
+def abft_gemm_call(A: jax.Array, B: jax.Array, inj_rows: jax.Array,
+                   ab: jax.Array, C0: Optional[jax.Array] = None, *,
                    bm: int = 128, bn: int = 128, bk: int = 128,
                    with_abs: bool = True,
                    interpret: bool = True):
-    """pallas_call wrapper on padded inputs (M,K)x(K,N), blocks (bm,bn,bk).
+    """pallas_call wrapper on padded batched inputs.
 
-    Returns f32/f64 C plus per-tile checksum partials; see ops.abft_gemm for
-    the padded->logical epilogue.
+    A: (nb, M, K), B: (nb, K, N), optional C0: (nb, M, N), ab: (1, 2)
+    [alpha, beta] in accumulation dtype.  Blocks (bm, bn, bk) must divide
+    the padded dims.
+    Returns f32/f64 C plus per-slice per-tile checksum partials; see
+    ops.abft_gemm_batched for the padded->logical epilogue.
     """
-    M, K = A.shape
-    K2, N = B.shape
-    assert K == K2, (A.shape, B.shape)
+    nb, M, K = A.shape
+    nb2, K2, N = B.shape
+    assert (nb, K) == (nb2, K2), (A.shape, B.shape)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0
     gm, gn, gk = M // bm, N // bn, K // bk
     acc_t = _acc_dtype(A.dtype)
+    has_c0 = C0 is not None
 
     kernel = functools.partial(
-        abft_gemm_kernel, n_total=N, bm=bm, bn=bn, nsteps_k=gk,
-        with_abs=with_abs)
+        abft_gemm_kernel, m_total=M, n_total=N, bm=bm, bn=bn, nsteps_k=gk,
+        with_abs=with_abs, has_c0=has_c0)
 
     out_shape = [
-        jax.ShapeDtypeStruct((M, N), acc_t),        # C (accumulator)
-        jax.ShapeDtypeStruct((M, gn), acc_t),       # tile rowsums of C
-        jax.ShapeDtypeStruct((gm, N), acc_t),       # tile colsums of C
-        jax.ShapeDtypeStruct((M, gn), acc_t),       # rowsum_ref partials
-        jax.ShapeDtypeStruct((gm, N), acc_t),       # colsum_ref partials
-        jax.ShapeDtypeStruct((M, gn), acc_t),       # abs rowsum_ref partials
-        jax.ShapeDtypeStruct((gm, N), acc_t),       # abs colsum_ref partials
+        jax.ShapeDtypeStruct((nb, M, N), acc_t),    # C (accumulator)
+        jax.ShapeDtypeStruct((nb, M, gn), acc_t),   # tile rowsums of C
+        jax.ShapeDtypeStruct((nb, gm, N), acc_t),   # tile colsums of C
+        jax.ShapeDtypeStruct((nb, M, gn), acc_t),   # rowsum_ref partials
+        jax.ShapeDtypeStruct((nb, gm, N), acc_t),   # colsum_ref partials
+        jax.ShapeDtypeStruct((nb, M, gn), acc_t),   # abs rowsum_ref partials
+        jax.ShapeDtypeStruct((nb, gm, N), acc_t),   # abs colsum_ref partials
     ]
-    row_spec = pl.BlockSpec((bm, 1), lambda i, j, k: (i, j))
-    col_spec = pl.BlockSpec((1, bn), lambda i, j, k: (i, j))
+    row_spec = pl.BlockSpec((1, bm, 1), lambda b, i, j, k: (b, i, j))
+    col_spec = pl.BlockSpec((1, 1, bn), lambda b, i, j, k: (b, i, j))
     out_specs = [
-        pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
         row_spec, col_spec, row_spec, col_spec, row_spec, col_spec,
     ]
     in_specs = [
-        pl.BlockSpec((N_SLOTS, 4), lambda i, j, k: (0, 0)),  # injection table
-        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((N_SLOTS, 4), lambda b, i, j, k: (0, 0)),  # injection
+        pl.BlockSpec((1, 2), lambda b, i, j, k: (0, 0)),        # alpha, beta
+        pl.BlockSpec((1, bm, bk), lambda b, i, j, k: (b, i, k)),
+        pl.BlockSpec((1, bk, bn), lambda b, i, j, k: (b, k, j)),
     ]
+    operands = [inj_rows, ab, A, B]
+    if has_c0:
+        in_specs.append(
+            pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)))
+        operands.append(C0)
 
     call_kw = {}
     if not interpret:
         from jax.experimental.pallas import tpu as pltpu
         call_kw["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
 
     return pl.pallas_call(
         kernel,
-        grid=(gm, gn, gk),
+        grid=(nb, gm, gn, gk),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
         **call_kw,
-    )(inj_rows, A, B)
+    )(*operands)

@@ -1,7 +1,8 @@
 """Jit'd wrappers over the Pallas FT kernels.
 
 Handles logical->padded shape plumbing (pad with zeros: checksum algebra is
-invariant to zero rows/cols), injection-position remapping into padded
+invariant to zero rows/cols, and a zero-padded C0 contributes nothing to
+the beta-adjusted references), injection-position remapping into padded
 coordinates, and kernel-counter -> FTReport conversion.  Every wrapper has a
 pure-jnp oracle in kernels/ref.py.
 """
@@ -39,46 +40,96 @@ def _inj_rows(injection: Optional[Injection]) -> jax.Array:
     return inj.as_rows()
 
 
-def _remap_matrix_pos(rows: jax.Array, n_logical: int,
-                      n_padded: int) -> jax.Array:
-    """Injection pos is logical (row*N + col); kernel decodes on padded N."""
+def _remap_matrix_pos(rows: jax.Array, m_logical: int, n_logical: int,
+                      n_padded: int, m_padded: int) -> jax.Array:
+    """Injection pos is logical (slice*M*N + row*N + col); the kernel decodes
+    it on the PADDED (Mp, Np) slice geometry, so remap here.
+
+    The ``max(x, 1)`` clamps guard degenerate empty operands (M or N == 0):
+    the integer divisions below must stay well-defined during tracing, and
+    since an injection into an empty output can never land, the clamped
+    remap is inert rather than wrong.
+    """
     pos = rows[:, 2].astype(jnp.int32)
-    r, c = pos // n_logical, pos % n_logical
-    return rows.at[:, 2].set((r * n_padded + c).astype(rows.dtype))
+    mn = max(m_logical * n_logical, 1)
+    b = pos // mn
+    rem = pos % mn
+    r = rem // max(n_logical, 1)
+    c = rem % max(n_logical, 1)
+    return rows.at[:, 2].set(
+        (b * (m_padded * n_padded) + r * n_padded + c).astype(rows.dtype))
 
 
-# -- fused ABFT GEMM ----------------------------------------------------------
+# -- fused-epilogue ABFT GEMM -------------------------------------------------
+@functools.partial(jax.jit, static_argnames=(
+    "bm", "bn", "bk", "with_abs", "interpret"))
+def abft_gemm_batched(A: jax.Array, B: jax.Array, *,
+                      alpha=1.0, beta=0.0,
+                      C0: Optional[jax.Array] = None,
+                      injection: Optional[Injection] = None,
+                      bm: int = 128, bn: int = 128, bk: int = 128,
+                      with_abs: bool = True, interpret: bool = True
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                 ChecksumRefs]:
+    """Fused-epilogue checksum matmul over a native batch grid.
+
+    A: (nb, M, K), B: (nb, K, N), optional C0: (nb, M, N).  One pallas_call
+    computes ``C[b] = alpha * A[b] @ B[b] + beta * C0[b]`` for every slice
+    with per-slice beta-adjusted checksums.  Returns
+    ``(C, rowsum_act, colsum_act, refs)`` in accumulation dtype with
+    logical (unpadded) shapes: C (nb, M, N), sums/refs (nb, M) / (nb, N).
+    Injection positions index the logical flattened (nb*M*N) output, so a
+    fault can target any batch slice.
+    """
+    nb, M, K = A.shape
+    _, _, N = B.shape
+    bm, bn, bk = min(bm, _ceil_to(M, 8)), min(bn, _ceil_to(N, LANE)), \
+        min(bk, _ceil_to(K, LANE))
+    Mp, Np, Kp = _ceil_to(M, bm), _ceil_to(N, bn), _ceil_to(K, bk)
+    Ap = jnp.pad(A, ((0, 0), (0, Mp - M), (0, Kp - K)))
+    Bp = jnp.pad(B, ((0, 0), (0, Kp - K), (0, Np - N)))
+    C0p = None if C0 is None else jnp.pad(
+        C0, ((0, 0), (0, Mp - M), (0, Np - N)))
+    rows = _remap_matrix_pos(_inj_rows(injection), M, N, Np, Mp)
+    # alpha/beta travel in the accumulation dtype so the f64 path keeps
+    # full-precision scalars (the kernel re-casts to its acc dtype anyway).
+    ab_t = _ag._acc_dtype(A.dtype)
+    ab = jnp.stack([jnp.asarray(alpha, ab_t).reshape(()),
+                    jnp.asarray(beta, ab_t).reshape(())]
+                   ).reshape(1, 2)
+
+    C, trow, tcol, rref, cref, arref, acref = _ag.abft_gemm_call(
+        Ap, Bp, rows, ab, C0p, bm=bm, bn=bn, bk=bk, with_abs=with_abs,
+        interpret=interpret)
+
+    rowsum_act = trow.sum(axis=2)[:, :M]
+    colsum_act = tcol.sum(axis=1)[:, :N]
+    refs = ChecksumRefs(
+        rowsum_ref=rref.sum(axis=2)[:, :M],
+        colsum_ref=cref.sum(axis=1)[:, :N],
+        abs_rowsum_ref=arref.sum(axis=2)[:, :M],
+        abs_colsum_ref=acref.sum(axis=1)[:, :N],
+    )
+    return C[:, :M, :N], rowsum_act, colsum_act, refs
+
+
 @functools.partial(jax.jit, static_argnames=(
     "bm", "bn", "bk", "with_abs", "interpret"))
 def abft_gemm(A: jax.Array, B: jax.Array, *,
+              alpha=1.0, beta=0.0, C0: Optional[jax.Array] = None,
               injection: Optional[Injection] = None,
               bm: int = 128, bn: int = 128, bk: int = 128,
               with_abs: bool = True, interpret: bool = True
               ) -> Tuple[jax.Array, jax.Array, jax.Array, ChecksumRefs]:
-    """Fused-checksum matmul.  Returns (C_acc, rowsum_act, colsum_act, refs)
-    in accumulation dtype with logical (unpadded) shapes."""
-    M, K = A.shape
-    _, N = B.shape
-    bm, bn, bk = min(bm, _ceil_to(M, 8)), min(bn, _ceil_to(N, LANE)), \
-        min(bk, _ceil_to(K, LANE))
-    Mp, Np, Kp = _ceil_to(M, bm), _ceil_to(N, bn), _ceil_to(K, bk)
-    Ap = jnp.pad(A, ((0, Mp - M), (0, Kp - K)))
-    Bp = jnp.pad(B, ((0, Kp - K), (0, Np - N)))
-    rows = _remap_matrix_pos(_inj_rows(injection), max(N, 1), Np)
-
-    C, trow, tcol, rref, cref, arref, acref = _ag.abft_gemm_call(
-        Ap, Bp, rows, bm=bm, bn=bn, bk=bk, with_abs=with_abs,
-        interpret=interpret)
-
-    rowsum_act = trow.sum(axis=1)[:M]
-    colsum_act = tcol.sum(axis=0)[:N]
-    refs = ChecksumRefs(
-        rowsum_ref=rref.sum(axis=1)[:M],
-        colsum_ref=cref.sum(axis=0)[:N],
-        abs_rowsum_ref=arref.sum(axis=1)[:M],
-        abs_colsum_ref=acref.sum(axis=0)[:N],
-    )
-    return C[:M, :N], rowsum_act, colsum_act, refs
+    """2-D fused-epilogue checksum matmul: the nb == 1 case of the batched
+    grid.  Returns (C, rowsum_act, colsum_act, refs) in accumulation dtype
+    with logical (unpadded) (M, N) / (M,) / (N,) shapes."""
+    C, rowsum_act, colsum_act, refs = abft_gemm_batched(
+        A[None], B[None], alpha=alpha, beta=beta,
+        C0=None if C0 is None else C0[None], injection=injection,
+        bm=bm, bn=bn, bk=bk, with_abs=with_abs, interpret=interpret)
+    return (C[0], rowsum_act[0], colsum_act[0],
+            ChecksumRefs(*(x[0] for x in refs)))
 
 
 # -- DMR Level-1 --------------------------------------------------------------

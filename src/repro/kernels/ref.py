@@ -5,27 +5,39 @@ kernel tests sweep shapes/dtypes and assert kernel(x) ~= ref(x).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.checksum import ChecksumRefs, acc_dtype_for
+from repro.core.checksum import ChecksumRefs, acc_dtype_for, encode_refs
 
 
-def abft_gemm_ref(A: jax.Array, B: jax.Array
+def abft_gemm_ref(A: jax.Array, B: jax.Array, *,
+                  alpha=1.0, beta=0.0, C0: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, jax.Array, jax.Array, ChecksumRefs]:
+    """Oracle for the fused-epilogue contract C = alpha*A@B + beta*C0:
+    the epilogue-scaled product, its actual row/col sums, and the
+    beta-adjusted reference checksums."""
     acc = acc_dtype_for(A.dtype)
     A32, B32 = A.astype(acc), B.astype(acc)
-    C = A32 @ B32
-    Aab, Bab = jnp.abs(A32), jnp.abs(B32)
-    refs = ChecksumRefs(
-        rowsum_ref=A32 @ B32.sum(axis=1),
-        colsum_ref=A32.sum(axis=0) @ B32,
-        abs_rowsum_ref=Aab @ Bab.sum(axis=1),
-        abs_colsum_ref=Aab.sum(axis=0) @ Bab,
-    )
+    C = jnp.asarray(alpha, acc) * (A32 @ B32)
+    if C0 is not None:
+        C = C + jnp.asarray(beta, acc) * C0.astype(acc)
+    refs = encode_refs(A, B, alpha=alpha, beta=beta, C0=C0)
     return C, C.sum(axis=1), C.sum(axis=0), refs
+
+
+def abft_gemm_batched_ref(A: jax.Array, B: jax.Array, *,
+                          alpha=1.0, beta=0.0,
+                          C0: Optional[jax.Array] = None):
+    """Per-slice oracle for the batched (nb, M, K) x (nb, K, N) grid."""
+    if C0 is None:
+        return jax.vmap(
+            lambda a, b: abft_gemm_ref(a, b, alpha=alpha, beta=beta))(A, B)
+    return jax.vmap(
+        lambda a, b, c: abft_gemm_ref(a, b, alpha=alpha, beta=beta, C0=c)
+    )(A, B, C0)
 
 
 def scal_ref(alpha, x):

@@ -68,19 +68,35 @@ def _reduce_replicated_grads(grads, pspecs, ctx: ShardCtx):
 
 def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
                     *, n_micro: int = 1, zero: bool = True,
-                    pspecs=None):
+                    pspecs=None, injection_seam: bool = False,
+                    opt_policy: Optional[FTPolicy] = None):
     """Returns the *inside-shard_map* train body (callers shard_map it).
 
     Optimizer modes: ZeRO-1 (zero=True, default), FSDP/ZeRO-3 when the
     arch config sets param_shard="fsdp" (optimizer state lives on the
     dp-sharded param slices; no optimizer collectives at all), or plain
     replicated-state AdamW.
+
+    ``injection_seam=True`` adds a fourth traced argument to the returned
+    step - ``train_step(params, opt_state, batch, injection)`` - so a
+    campaign rate model (e.g. ``campaign.errors.PoissonSchedule``) can
+    drive WHOLE train steps with a fresh Injection spec per step instead
+    of drilling one isolated ft_dense call.  The spec is threaded into the
+    DMR-protected optimizer update; detections surface in
+    ``metrics["report"]`` like any other step-level SDC counter.
+
+    ``opt_policy`` overrides the FT policy for the optimizer update only
+    (default: ``ctx.policy``).  The update is the paper's Level-1 DMR
+    chain, which the current jax floor cannot differentiate through
+    (optimization_barrier has no AD rule), so drills that need gradients
+    run the model under "off" while still DMR-protecting the update.
     """
     fsdp = model.cfg.param_shard == "fsdp"
     if fsdp:
         zero = False
+    opt_policy = opt_policy if opt_policy is not None else ctx.policy
 
-    def train_step(params, opt_state, batch):
+    def _train_step(params, opt_state, batch, injection):
         def loss_fn(p, mb):
             loss, metrics = model.train_loss(p, mb, ctx)
             return loss, metrics
@@ -129,8 +145,8 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
                 else jnp.float32
             params2, opt2, rep = adamw.zero_apply(
                 params, grads, opt_state, opt_cfg, ctx,
-                policy=ctx.policy, dp_size=ctx.data_size,
-                collective_dtype=cdt)
+                policy=opt_policy, dp_size=ctx.data_size,
+                collective_dtype=cdt, injection=injection)
         elif fsdp:
             # FSDP leaves arrive dp-summed via the all_gather transpose;
             # replicated leaves still need the explicit dp psum.
@@ -155,16 +171,23 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
                 + lax.psum(jnp.asarray(ss_rp), ctx.model_axis))
             params2, opt2, rep = adamw.apply_updates(
                 params, grads, opt_state, opt_cfg,
-                policy=ctx.policy, ctx=None, grad_norm=gn)
+                policy=opt_policy, ctx=None, grad_norm=gn,
+                injection=injection)
         else:
             grads = lax.psum(grads, ctx.data_axis)  # partials carry 1/dp
             params2, opt2, rep = adamw.apply_updates(
                 params, grads, opt_state, opt_cfg,
-                policy=ctx.policy, ctx=ctx)
+                policy=opt_policy, ctx=ctx, injection=injection)
         metrics = dict(metrics)
         metrics["loss"] = loss
         metrics["report"] = ftreport.merge(metrics.get("report"), rep)
         return params2, opt2, metrics
+
+    if injection_seam:
+        return _train_step
+
+    def train_step(params, opt_state, batch):
+        return _train_step(params, opt_state, batch, None)
 
     return train_step
 

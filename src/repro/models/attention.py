@@ -14,7 +14,8 @@ the dry-run memory analysis certifies.
 
 FT: the four projections route through ft_dense (ABFT).  Score/context
 inner products are GEMM-shaped and protectable via policy
-``protect_attention`` (vmapped unfused ABFT); the default protects
+``protect_attention`` (per-slice ABFT on the kernel's native batch grid
+under a fused policy); the default protects
 projections only - at trainable sequence lengths they carry most FLOPs, and
 each chunk epilogue adds O(S) overhead (paper's verification-interval
 trade-off, Sec. 2.1).
@@ -148,8 +149,11 @@ def _scores_ctx(q, k, v, mask, policy, protect):
     if protect:
         qb = jnp.moveaxis(q, 2, 1).astype(jnp.float32)      # (B,H,qc,dh)
         kb = jnp.moveaxis(k, 2, 1).astype(jnp.float32)
+        # Batched contractions hit the kernel's native batch grid: one
+        # pallas_call per chunk pair, every (batch, head) slice its own
+        # verification interval.
         s, rep1 = ft_matmul_batched(qb, jnp.swapaxes(kb, -1, -2),
-                                    policy=policy.replace(fused=False))
+                                    policy=policy)
         rep = ftreport.merge(rep, rep1)
     else:
         s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
@@ -162,8 +166,7 @@ def _scores_ctx(q, k, v, mask, policy, protect):
     l = jnp.sum(e, axis=-1)                                  # (B,H,qc)
     if protect:
         vb = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
-        acc, rep2 = ft_matmul_batched(e, vb,
-                                      policy=policy.replace(fused=False))
+        acc, rep2 = ft_matmul_batched(e, vb, policy=policy)
         rep = ftreport.merge(rep, rep2)
     else:
         acc = jnp.einsum("bhqk,bkhd->bhqd", e, v.astype(jnp.float32))

@@ -25,6 +25,7 @@ from jax import lax
 from repro.core import report as ftreport
 from repro.core.dmr import dmr_compute, dmr_report
 from repro.core.ft_config import FTPolicy, OFF
+from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,9 +76,16 @@ def global_norm(grads, ctx=None) -> jax.Array:
 
 
 def apply_updates(params, grads, state, cfg: AdamWConfig, *,
-                  policy: FTPolicy = OFF, ctx=None, grad_norm=None
+                  policy: FTPolicy = OFF, ctx=None, grad_norm=None,
+                  injection: Optional[Injection] = None
                   ) -> Tuple[Any, Dict, Dict]:
-    """Replicated-state AdamW.  Returns (params, state, FTReport)."""
+    """Replicated-state AdamW.  Returns (params, state, FTReport).
+
+    ``injection`` is the train-step fault seam: DMR-stream errors land in
+    the duplicated update arithmetic (every leaf is one DMR interval, so a
+    spec whose position fits a leaf's stacked (3, n) update fires there)
+    and are detected / voted out when the policy runs DMR.
+    """
     step = state["step"] + 1
     lr = schedule(cfg, step)
     gn = grad_norm if grad_norm is not None else global_norm(grads, ctx)
@@ -93,11 +101,14 @@ def apply_updates(params, grads, state, cfg: AdamWConfig, *,
             vd = dmr_compute(
                 lambda pp, gg, mm, vv: jnp.stack(
                     _adamw_math(pp, gg, mm, vv, lr, cfg, bc1, bc2)),
-                p32, g32, m, v, vote=policy.dmr_vote)
+                p32, g32, m, v, vote=policy.dmr_vote, injection=injection)
             out = vd.y
             r = dmr_report(vd)
         else:
             out = jnp.stack(_adamw_math(p32, g32, m, v, lr, cfg, bc1, bc2))
+            if injection is not None:  # lands unprotected
+                out = injection.perturb(out, stream=(DMR_STREAM_1,
+                                                     DMR_STREAM_2))
             r = ftreport.empty_report()
         return out[0].astype(p.dtype), out[1], out[2], r
 
@@ -151,12 +162,15 @@ def zero_state_specs(params, dp_axes):
 
 def zero_apply(params, grads, state, cfg: AdamWConfig, ctx, *,
                policy: FTPolicy = OFF, dp_size: int = 1,
-               collective_dtype=jnp.float32) -> Tuple[Any, Dict, Dict]:
+               collective_dtype=jnp.float32,
+               injection: Optional[Injection] = None
+               ) -> Tuple[Any, Dict, Dict]:
     """ZeRO-1 update inside shard_map.
 
     params/grads: local TP shards (identical across dp); state m/v: this dp
     shard's (n_pad/dp,) slices.  psum_scatter sums gradients across dp while
     handing each shard its slice; all_gather rebuilds updated params.
+    ``injection``: see ``apply_updates`` - the per-step DMR fault seam.
     """
     axes = ctx.data_axis
     step = state["step"] + 1
@@ -191,11 +205,15 @@ def zero_apply(params, grads, state, cfg: AdamWConfig, ctx, *,
             vd = dmr_compute(
                 lambda pp, gg, mm, vv: jnp.stack(
                     _adamw_math(pp, gg, mm, vv, lr, cfg, bc1, bc2)),
-                p_loc, g_loc, m_loc, v_loc, vote=policy.dmr_vote)
+                p_loc, g_loc, m_loc, v_loc, vote=policy.dmr_vote,
+                injection=injection)
             out, r = vd.y, dmr_report(vd)
         else:
             out = jnp.stack(_adamw_math(p_loc, g_loc, m_loc, v_loc,
                                         lr, cfg, bc1, bc2))
+            if injection is not None:  # lands unprotected
+                out = injection.perturb(out, stream=(DMR_STREAM_1,
+                                                     DMR_STREAM_2))
             r = ftreport.empty_report()
         p_new = lax.all_gather(out[0].astype(
             collective_dtype if p.dtype != jnp.float32 else jnp.float32),

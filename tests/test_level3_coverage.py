@@ -1,6 +1,7 @@
 """Level-3 path coverage: upper-triangular TRSM, non-divisible TRSM
-padding, and SYMM/TRMM under injection on both the ABFT (matmul) and DMR
-(epilogue) streams - the paths the seed test suite never exercised."""
+padding, and SYMM/TRMM under injection on both the ABFT (matmul +
+fused epilogue) stream and the DMR stream of the separate-epilogue
+ablation - the paths the seed test suite never exercised."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +12,13 @@ from repro.core import FTPolicy, Injection
 from repro.core.injection import ABFT_ACC, DMR_STREAM_1
 
 HYBRID = FTPolicy(mode="hybrid", fused=False)
+# The separate DMR epilogue only exists when the epilogue is NOT folded
+# into the ABFT interval (the pre-fusion ablation).
+HYBRID_SEP = FTPolicy(mode="hybrid", fused=False, fuse_epilogue=False)
+
+
+def _policy_for(stream):
+    return HYBRID_SEP if stream == DMR_STREAM_1 else HYBRID
 
 
 def _tri(key, n, *, lower, dtype=jnp.float32):
@@ -81,7 +89,8 @@ def test_symm_injection_both_streams(stream, det_key, corr_key):
     B = jax.random.normal(jax.random.PRNGKey(1), (32, 24), jnp.float32)
     C = jax.random.normal(jax.random.PRNGKey(2), (32, 24), jnp.float32)
     inj = Injection.at(stream=stream, pos=100, delta=48.0)
-    out, rep = level3.symm(1.0, A, B, 0.5, C, policy=HYBRID, injection=inj)
+    out, rep = level3.symm(1.0, A, B, 0.5, C, policy=_policy_for(stream),
+                           injection=inj)
     want = ref.symm(1.0, _np(A), _np(B), 0.5, _np(C))
     assert int(rep[det_key]) >= 1, rep
     assert int(rep[corr_key]) >= 1, rep
@@ -97,8 +106,8 @@ def test_trmm_injection_both_streams(stream, det_key, corr_key, lower):
     A = jax.random.normal(jax.random.PRNGKey(3), (32, 32), jnp.float32)
     B = jax.random.normal(jax.random.PRNGKey(4), (32, 24), jnp.float32)
     inj = Injection.at(stream=stream, pos=50, delta=32.0)
-    out, rep = level3.trmm(2.0, A, B, lower=lower, policy=HYBRID,
-                           injection=inj)
+    out, rep = level3.trmm(2.0, A, B, lower=lower,
+                           policy=_policy_for(stream), injection=inj)
     want = ref.trmm(2.0, _np(A), _np(B), lower=lower)
     assert int(rep[det_key]) >= 1, rep
     assert int(rep[corr_key]) >= 1, rep
@@ -106,13 +115,29 @@ def test_trmm_injection_both_streams(stream, det_key, corr_key, lower):
 
 
 def test_syrk_epilogue_dmr_stream_corrected():
+    """Separate-epilogue ablation: the DMR combine pass still defends."""
     A = jax.random.normal(jax.random.PRNGKey(5), (32, 24), jnp.float32)
     C = jax.random.normal(jax.random.PRNGKey(6), (32, 32), jnp.float32)
     inj = Injection.at(stream=DMR_STREAM_1, pos=9, delta=16.0)
-    out, rep = level3.syrk(1.0, A, 0.5, C, policy=HYBRID, injection=inj)
+    out, rep = level3.syrk(1.0, A, 0.5, C, policy=HYBRID_SEP, injection=inj)
     want = ref.syrk(1.0, _np(A), 0.5, _np(C))
     assert int(rep["dmr_detected"]) >= 1
     assert int(rep["dmr_corrected"]) >= 1
+    np.testing.assert_allclose(_np(out), want, rtol=2e-4, atol=2e-3)
+
+
+def test_syrk_epilogue_fault_under_fused_epilogue_abft():
+    """With the epilogue folded in, a fault on the epilogue-scaled
+    accumulator is caught by the beta-adjusted checksums (DMR->ABFT
+    coverage shift)."""
+    from repro.core.injection import ABFT_ACC_2
+    A = jax.random.normal(jax.random.PRNGKey(5), (32, 24), jnp.float32)
+    C = jax.random.normal(jax.random.PRNGKey(6), (32, 32), jnp.float32)
+    inj = Injection.at(stream=ABFT_ACC_2, pos=9, delta=16.0)
+    out, rep = level3.syrk(1.0, A, 0.5, C, policy=HYBRID, injection=inj)
+    want = ref.syrk(1.0, _np(A), 0.5, _np(C))
+    assert int(rep["abft_detected"]) >= 1
+    assert int(rep["abft_corrected"]) >= 1
     np.testing.assert_allclose(_np(out), want, rtol=2e-4, atol=2e-3)
 
 
