@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test campaign-smoke campaign-full drill bench-smoke ci
+.PHONY: test campaign-smoke campaign-full drill bench-smoke docs-check ci
 
 test:            ## tier-1 test suite (ROADMAP contract)
 	$(PY) -m pytest -x -q
@@ -21,4 +21,7 @@ drill:           ## Poisson errors-per-minute train-loop drill
 bench-smoke:     ## per-routine FT overhead timings via the campaign engine
 	$(PY) benchmarks/campaign_overhead.py
 
-ci: test campaign-smoke bench-smoke
+docs-check:      ## docs/*.md cross-links + architecture.md module names
+	$(PY) tools/check_docs.py
+
+ci: test campaign-smoke bench-smoke docs-check

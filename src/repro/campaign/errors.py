@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, DMR_STREAM_1,
-                                  Injection)
+                                  SEAM_FWD, Injection)
 
 ERROR_MODELS = ("single", "burst", "poisson")
 
@@ -62,13 +62,16 @@ def _empty_arrays() -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
 def single_error(key: jax.Array, *, stream: int, out_size: int,
                  base_scale: float = 1.0, pos: int | None = None,
                  min_exp: int = 0, max_exp: int = 8,
-                 force_positive: bool = False) -> Injection:
+                 force_positive: bool = False,
+                 seam: int = SEAM_FWD) -> Injection:
     """One exponent-scaled error on ``stream``; position PRNG-chosen unless
     pinned by ``pos`` (routines with location-sensitive detection, e.g.
     iamax, pin the position so the error is architecturally visible).
     ``force_positive`` drops the random sign - needed when detection rides
     on a magnitude comparison (argmax over |x|) that a large negative delta
-    cannot win."""
+    cannot win.  ``seam`` targets the forward interval (default) or one of
+    the backward cotangent GEMMs (SEAM_BWD_DA / SEAM_BWD_DB), in which
+    case ``out_size`` is the flat dA / dB domain."""
     k_pos, k_mag = jax.random.split(key)
     active, streams, poss, deltas = _empty_arrays()
     p = (jnp.asarray(pos, jnp.int32) if pos is not None
@@ -76,11 +79,13 @@ def single_error(key: jax.Array, *, stream: int, out_size: int,
     d = exponent_delta(k_mag, base_scale=base_scale,
                        min_exp=min_exp, max_exp=max_exp)
     d = jnp.abs(d) if force_positive else d
+    seams = jnp.zeros((Injection.N_SLOTS,), jnp.int32)
     return Injection.from_arrays(
         active.at[0].set(True),
         streams.at[0].set(stream),
         poss.at[0].set(p),
         deltas.at[0].set(d),
+        seams.at[0].set(seam),
     )
 
 
@@ -126,7 +131,9 @@ class PoissonSchedule:
     to ``Injection.N_SLOTS`` (the per-interval slot budget; the truncation
     count is visible via ``expected_per_step`` for calibration).  Streams
     cycle through ``stream_choices`` so a hybrid policy sees both DMR- and
-    ABFT-bound errors.
+    ABFT-bound errors; ``seam_choices`` likewise cycles the target seam so
+    a drill can spray forward intervals, backward cotangent GEMMs
+    (SEAM_BWD_*), or a mix.
     """
 
     rate_per_min: float
@@ -136,6 +143,7 @@ class PoissonSchedule:
     base_scale: float = 1.0
     min_exp: int = 0
     max_exp: int = 6
+    seam_choices: Tuple[int, ...] = (SEAM_FWD,)
 
     @property
     def lam(self) -> float:
@@ -146,7 +154,7 @@ class PoissonSchedule:
         return self.lam
 
     def sample(self, key: jax.Array) -> Injection:
-        k_n, k_pos, k_mag, k_st = jax.random.split(key, 4)
+        k_n, k_pos, k_mag, k_st, k_sm = jax.random.split(key, 5)
         n_slots = Injection.N_SLOTS
         n_err = jnp.minimum(
             jax.random.poisson(k_n, self.lam).astype(jnp.int32), n_slots)
@@ -156,13 +164,15 @@ class PoissonSchedule:
                                  max(self.out_size, 1), jnp.int32)
         choices = jnp.asarray(self.stream_choices, jnp.int32)
         st = choices[jax.random.randint(k_st, (n_slots,), 0, len(choices))]
+        seams = jnp.asarray(self.seam_choices, jnp.int32)[
+            jax.random.randint(k_sm, (n_slots,), 0, len(self.seam_choices))]
         deltas = jax.vmap(
             lambda k: exponent_delta(k, base_scale=self.base_scale,
                                      min_exp=self.min_exp,
                                      max_exp=self.max_exp)
         )(jax.random.split(k_mag, n_slots))
         return Injection.from_arrays(
-            active, st, pos, jnp.where(active, deltas, 0.0))
+            active, st, pos, jnp.where(active, deltas, 0.0), seams)
 
     def n_active(self, inj: Injection) -> jax.Array:
         return inj.active.sum().astype(jnp.int32)

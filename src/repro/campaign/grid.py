@@ -15,9 +15,23 @@ four-method surface:
 
 Stream protection is a *joint* property of routine and policy: a DMR stream
 is protected iff the policy runs DMR on that routine's compute class, an
-ABFT stream iff the policy checksums its matmuls.  Cells where the injected
+ABFT stream iff the policy checksums its matmuls (backward-seam streams
+additionally require ``policy.protect_grads``).  Cells where the injected
 stream is NOT protected are kept as controls - they demonstrate the error
 actually corrupts the output when nothing defends it.
+
+Policy axis (see POLICIES; smoke = first five):
+
+  off               no FT - the control / baseline column
+  hybrid-fused      paper scheme, fused Pallas ABFT kernel
+  hybrid-unfused    paper scheme, ABFT layered on a black-box GEMM
+  hybrid-sepilogue  fused kernel, but the alpha/beta epilogue is a
+                    SEPARATE DMR-protected pass (pre-fusion ablation)
+  dmr-unfused       DMR everywhere, pure-jnp
+  dmr-fused         DMR everywhere, Pallas DMR kernels
+  abft-unfused      ABFT on matmuls only, no DMR
+  hybrid-novote     DMR detect-only (no third-stream vote)
+  hybrid-recompute  hybrid + recompute-fallback escalation (burst rows)
 """
 from __future__ import annotations
 
@@ -30,10 +44,14 @@ import numpy as np
 
 from repro import blas
 from repro.blas import ref
+from repro.core import abft as abftmod
+from repro.core import report as ftreport
+from repro.core.dmr import dmr_compute, dmr_report
 from repro.core.ft_config import FTPolicy
 from repro.core.ft_dense import ft_bmm, ft_dense
 from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, DMR_STREAM_1,
-                                  DMR_STREAM_2)
+                                  DMR_STREAM_2, SEAM_BWD_DA, SEAM_BWD_DB,
+                                  SEAM_FWD)
 
 DTYPES: Dict[str, jnp.dtype] = {"f32": jnp.float32, "bf16": jnp.bfloat16}
 
@@ -86,6 +104,9 @@ class StreamSpec:
     # combine pass: under an ABFT policy with fuse_epilogue the epilogue is
     # folded into the checksummed kernel, so this stream's hardware path
     # does not exist and no cell (not even a control) is generated.
+    seam: int = SEAM_FWD           # SEAM_BWD_* = the error strikes a
+    # cotangent GEMM of the differentiated routine (``domain`` then indexes
+    # flat dA / dB); protection additionally requires policy.protect_grads.
 
     def exists_under(self, policy: FTPolicy) -> bool:
         if self.epilogue:
@@ -94,6 +115,8 @@ class StreamSpec:
 
     def protected_under(self, policy: FTPolicy) -> bool:
         if not self.exists_under(policy):
+            return False
+        if self.seam != SEAM_FWD and not policy.protect_grads:
             return False
         if self.kind == "dmr":
             return policy.dmr_on
@@ -427,6 +450,95 @@ def _routines() -> Dict[str, Routine]:
                        label="abft-slice")),
         base_scale=float(4 * np.sqrt(BMM_K)),
         ref_scale=float(4 * np.sqrt(BMM_K))))
+
+    # ---- gradient seams (the AD surface; docs/architecture.md) ----
+    # ``ft_dense_grad`` differentiates a protected dense layer and injects
+    # into the BACKWARD cotangent GEMMs (seam SEAM_BWD_DA / SEAM_BWD_DB):
+    # under an ABFT policy the custom_vjp backward rule must locate and
+    # correct the fault so the returned gradients still match the float64
+    # oracle, and the detection counters surface through the grad probe's
+    # cotangent (core.abft.probe_report) - reports cannot otherwise escape
+    # a custom_vjp.  Under "off" the same fault visibly corrupts the
+    # gradients (control).
+    # numpy on purpose: ROUTINES is built at import time and a jnp array
+    # here would initialize the JAX backend as an import side effect.
+    gseed = ((np.arange(DENSE_B * DENSE_S * DENSE_N, dtype=np.float32)
+              % 7 - 3) / 3.0).reshape(DENSE_B, DENSE_S, DENSE_N)
+
+    def _dense_grad_run(ops, pol, inj):
+        x, w = ops
+
+        def loss(x_, w_, probe):
+            y, rep = ft_dense(x_, w_, policy=pol, injection=inj,
+                              grad_probe=probe)
+            return jnp.sum(y.astype(jnp.float32)
+                           * jnp.asarray(gseed)), rep
+
+        (_, rep_fwd), (dx, dw, dprobe) = jax.value_and_grad(
+            loss, argnums=(0, 1, 2), has_aux=True)(
+                x, w, abftmod.new_grad_probe())
+        rep = ftreport.merge(rep_fwd, abftmod.probe_report(dprobe))
+        return jnp.concatenate([dx.astype(jnp.float32).ravel(),
+                                dw.astype(jnp.float32).ravel()]), rep
+
+    def _dense_grad_oracle(ops):
+        g = _np64(np.asarray(gseed)).reshape(-1, DENSE_N)
+        x2 = _f(ops[0]).reshape(-1, DENSE_K)
+        w = _f(ops[1])
+        return np.concatenate([(g @ w.T).ravel(), (x2.T @ g).ravel()])
+
+    add(Routine(
+        "ft_dense_grad", "model",
+        make=_dense_make,
+        run=_dense_grad_run,
+        oracle=_dense_grad_oracle,
+        streams=lambda ops: (
+            StreamSpec("abft", ABFT_ACC, DENSE_B * DENSE_S * DENSE_K,
+                       seam=SEAM_BWD_DA, label="abft-bwd"),
+            StreamSpec("abft", ABFT_ACC, DENSE_K * DENSE_N,
+                       seam=SEAM_BWD_DB, label="abft-bwd-db")),
+        base_scale=float(4 * np.sqrt(DENSE_N)),
+        ref_scale=float(4 * np.sqrt(DENSE_N))))
+
+    # ``dmr_grad`` gates the optimization_barrier JVP/transpose shim
+    # (repro.compat): jax.grad THROUGH the DMR combinator must run - no
+    # missing-AD-rule error - and a forward DMR-stream fault must be voted
+    # out so the gradients (which are functions of the corrected output)
+    # still match the oracle.
+    def _dmr_grad_run(ops, pol, inj):
+        x, y0 = ops
+
+        def protected(x_, y_):
+            if pol.dmr_on:
+                v = dmr_compute(lambda a, b: 1.5 * a + b, x_, y_,
+                                injection=inj, vote=pol.dmr_vote)
+                return v.y, dmr_report(v)
+            z = 1.5 * x_ + y_
+            z = inj.perturb(z, stream=(DMR_STREAM_1, DMR_STREAM_2))
+            return z, ftreport.empty_report()
+
+        def loss(x_, y_):
+            z, rep = protected(x_, y_)
+            return 0.5 * jnp.sum(z.astype(jnp.float32) ** 2), rep
+
+        (_, rep), (dx, dy) = jax.value_and_grad(
+            loss, argnums=(0, 1), has_aux=True)(x, y0)
+        return jnp.concatenate([dx.astype(jnp.float32).ravel(),
+                                dy.astype(jnp.float32).ravel()]), rep
+
+    def _dmr_grad_oracle(ops):
+        z = 1.5 * _f(ops[0]) + _f(ops[1])
+        return np.concatenate([1.5 * z.ravel(), z.ravel()])
+
+    add(Routine(
+        "dmr_grad", "L1",
+        make=lambda key, dt: tuple(
+            _normal(k, (N1,), dt) for k in jax.random.split(key, 2)),
+        run=_dmr_grad_run,
+        oracle=_dmr_grad_oracle,
+        streams=lambda ops: (
+            StreamSpec("dmr", DMR_STREAM_1, N1, label="dmr-grad"),),
+        base_scale=4.0, ref_scale=8.0))
 
     return r
 

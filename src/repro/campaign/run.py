@@ -5,13 +5,17 @@
 Runs the sweep grid (routine x policy x dtype x error model), writes
 ``campaign.json`` + ``campaign.md`` verdict reports, and exits nonzero if
 the campaign gate fails (any clean false positive, any missed detection on
-a protected cell, any violated expectation).
+a protected cell, any violated expectation).  Cell naming, the policy
+axis, and the verdict-report schema are documented in docs/campaign.md.
 
 ``--drill`` additionally runs the train-loop rate drill: a jitted
 ``lax.scan`` over steps with a Poisson errors-per-minute schedule feeding
 the FT seams, reproducing the paper's "hundreds of errors per minute"
-regime, then a real model train step via ``launch/steps.py`` to assert the
-step-level SDC metrics (``ft/abft_corrected`` etc.) flow through.
+regime, then real model train steps via ``launch/steps.py`` - the model
+under a differentiable hybrid policy - asserting (1) optimizer-seam DMR
+faults are voted out with params bit-equal to a clean run and (2)
+backward-seam faults striking the cotangent GEMMs are detected through
+the grad-probe counters with the trajectory held at rounding level.
 """
 from __future__ import annotations
 
@@ -27,7 +31,8 @@ def build_argparser() -> argparse.ArgumentParser:
         prog="python -m repro.campaign.run",
         description="FT-BLAS fault-injection campaign")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI sub-grid (4 policies; bursts f32-only)")
+                    help="CI sub-grid (5 policies incl. the "
+                         "separate-epilogue ablation; bursts f32-only)")
     ap.add_argument("--out", default="/tmp/ftblas_campaign",
                     help="output directory for campaign.json / campaign.md")
     ap.add_argument("--seed", type=int, default=0)
@@ -96,7 +101,11 @@ def run_drill(args) -> bool:
     is detected with oracle-matching outputs; (2) WHOLE train steps via the
     ``make_train_step(..., injection_seam=True)`` seam run under the same
     rate model - every step samples a fresh Injection, detections surface
-    in step metrics, and the trained params match a clean run."""
+    in step metrics, and the trained params match a clean run; (3) the
+    same steps under a BACKWARD-seam schedule - faults strike the
+    cotangent GEMMs of the model's custom_vjp backward rules, detections
+    surface via the grad-probe counters in ``metrics["report"]``, and the
+    ABFT correction holds the parameter trajectory at rounding level."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -146,74 +155,109 @@ def run_drill(args) -> bool:
     # injection seam samples a fresh Poisson Injection per step; detections
     # surface in step metrics and the DMR vote keeps params on the clean
     # trajectory.
-    from jax.sharding import PartitionSpec as P
-
     from repro.campaign.errors import PoissonSchedule as PS
     from repro.configs import get_config
-    from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
-    from repro.launch.mesh import smoke_mesh
-    from repro.launch.steps import make_ctx, make_train_step
-    from repro.models import build_model, param_specs
-    from repro.models.specs import batch_specs
+    from repro.core.injection import (DMR_STREAM_1, DMR_STREAM_2,
+                                      Injection)
+    from repro.launch.steps import make_ctx, make_smoke_train_fn
+    from repro.models import build_model
     from repro.optim import adamw
 
     cfg = get_config("llama3_8b").smoke()
     model = build_model(cfg)
-    mesh = smoke_mesh()
-    # Model forward under "off" (the DMR barrier has no AD rule on this
-    # jax floor); the optimizer update runs the DMR-protected chain.
-    ctx = make_ctx(multi_pod=False, data_size=1, model_size=1)
+    # Model under the differentiable hybrid policy (the compat shim gives
+    # the DMR barrier its AD rule; protected matmuls carry custom_vjp
+    # backward coverage); the optimizer update runs the DMR chain.
+    model_policy = FTPolicy(mode="hybrid", fused=False)
+    ctx = make_ctx(multi_pod=False, data_size=1, model_size=1,
+                   policy=model_policy)
     params = model.init(jax.random.PRNGKey(0), 1)
     opt_cfg = adamw.AdamWConfig(warmup=1, total_steps=100)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
                                           cfg.vocab),
              "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
                                           cfg.vocab)}
-    pspecs = param_specs(params)
-    ospecs = {"m": jax.tree.map(lambda _: P(), params),
-              "v": jax.tree.map(lambda _: P(), params),
-              "step": P()}
-    mspec = {"nll": P(), "aux": P(), "loss": P(),
-             "report": {k: P() for k in ftreport.FIELDS}}
-    ispec = jax.tree.map(lambda _: P(), Injection.none())
-    body = make_train_step(model, ctx, opt_cfg, zero=False,
-                           injection_seam=True,
-                           opt_policy=FTPolicy(mode="hybrid", fused=False))
-    fn = jax.jit(jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(pspecs, ospecs, batch_specs(batch, multi_pod=False),
-                  ispec),
-        out_specs=(pspecs, ospecs, mspec), check_vma=False))
+    fn = make_smoke_train_fn(model, ctx, opt_cfg, params, batch,
+                             opt_policy=model_policy)
+
+    n_steps = 8
+    last_report = {}
+
+    def drive_steps(sched, seed, detect_key):
+        """Run injected-vs-clean step pairs under a rate schedule; count
+        per-step detections / clean false positives and the final
+        injected-vs-clean parameter drift (shared by the optimizer-seam
+        and backward-seam drills - only schedule, report key, and the
+        caller's drift bound differ)."""
+        keys = jax.random.split(jax.random.PRNGKey(seed), n_steps)
+        p_inj, o_inj = params, adamw.init_state(params)
+        p_cln, o_cln = params, adamw.init_state(params)
+        injected = detected = faulty = fp = 0
+        for k in keys:
+            inj = sched.sample(k)
+            n_act = int(inj.n_active())
+            injected += n_act
+            faulty += int(n_act > 0)
+            p_inj, o_inj, metrics = fn(p_inj, o_inj, batch, inj)
+            det = int(metrics["report"][detect_key] > 0)
+            detected += det if n_act > 0 else 0
+            fp += det if n_act == 0 else 0
+            p_cln, o_cln, _ = fn(p_cln, o_cln, batch, Injection.none())
+            last_report.update(metrics["report"])
+        drift = max((float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32))))
+                     for a, b in zip(jax.tree.leaves(p_inj),
+                                     jax.tree.leaves(p_cln))), default=0.0)
+        return injected, detected, faulty, fp, drift
 
     # DMR-stream schedule: positions index the stacked per-leaf update.
-    step_sched = PS(rate_per_min=args.drill_rate, step_time_s=0.05,
+    # step_time 0.25s -> lam = rate/min * 0.25/60 ~ 1.25 errors/step at
+    # the default rate: the 8-step drill draws faults with near
+    # certainty (P(none) ~ e^-10), and the faulty_steps > 0 term keeps
+    # the gate honest if a schedule/seed change ever empties it.
+    step_sched = PS(rate_per_min=args.drill_rate, step_time_s=0.25,
                     out_size=64,
                     stream_choices=(DMR_STREAM_1, DMR_STREAM_2),
                     base_scale=1.0)
-    n_steps = 8
-    keys = jax.random.split(jax.random.PRNGKey(args.seed + 1), n_steps)
-    p_inj, o_inj = params, adamw.init_state(params)
-    p_cln, o_cln = params, adamw.init_state(params)
-    step_injected = step_detected = faulty_steps = 0
-    for k in keys:
-        inj = step_sched.sample(k)
-        n_act = int(inj.n_active())
-        step_injected += n_act
-        faulty_steps += int(n_act > 0)
-        p_inj, o_inj, metrics = fn(p_inj, o_inj, batch, inj)
-        step_detected += int(metrics["report"]["dmr_detected"] > 0)
-        p_cln, o_cln, _ = fn(p_cln, o_cln, batch, Injection.none())
-    drift = max((float(jnp.max(jnp.abs(a.astype(jnp.float32)
-                                       - b.astype(jnp.float32))))
-                 for a, b in zip(jax.tree.leaves(p_inj),
-                                 jax.tree.leaves(p_cln))), default=0.0)
-    have = set(metrics["report"]) == set(ftreport.FIELDS)
+    step_injected, step_detected, faulty_steps, step_fp, drift = \
+        drive_steps(step_sched, args.seed + 1, "dmr_detected")
+    have = set(last_report) == set(ftreport.FIELDS)
     print(f"  train-step seam: {n_steps} steps, {step_injected} errors in "
           f"{faulty_steps} steps -> {step_detected} faulty steps detected, "
-          f"max param drift vs clean = {drift:.3e}, metrics keys "
-          f"{'OK' if have else 'MISSING'}")
-    step_ok = step_detected >= faulty_steps and drift == 0.0
-    return ok and have and step_ok
+          f"{step_fp} clean false positives, max param drift vs clean = "
+          f"{drift:.3e}, metrics keys {'OK' if have else 'MISSING'}")
+    step_ok = (faulty_steps > 0 and step_detected >= faulty_steps
+               and step_fp == 0 and drift == 0.0)
+
+    # (3) Backward-seam rate drill: faults strike the cotangent GEMMs
+    # (dA / dB of the model's protected matmuls).  The custom_vjp backward
+    # rule locates and corrects them - the probe-counter report in the
+    # step metrics proves detection, and the corrected gradients keep the
+    # trajectory at checksum-rounding distance from the clean run.
+    from repro.core.injection import SEAM_BWD_DA, SEAM_BWD_DB
+
+    bwd_sched = PS(rate_per_min=args.drill_rate, step_time_s=0.25,
+                   out_size=1024,
+                   stream_choices=(ABFT_ACC, ABFT_ACC_2),
+                   base_scale=float(8 * np.sqrt(cfg.d_model)),
+                   seam_choices=(SEAM_BWD_DA, SEAM_BWD_DB))
+    bwd_injected, bwd_detected, bwd_faulty, clean_fp, bwd_drift = \
+        drive_steps(bwd_sched, args.seed + 2, "abft_detected")
+    # Drift bound: an ABFT-corrected gradient differs from clean by
+    # checksum round-off, which AdamW's m/sqrt(v) normalization can
+    # amplify up to ~lr (3e-4) per element-step - so the bound is a
+    # couple of worst-case steps, NOT float eps.  Real escapes are
+    # caught by the detection/false-positive terms (Adam also clips a
+    # huge corrupted gradient to an ~lr-sized step, so drift alone
+    # could never flag them reliably).
+    drift_bound = 3 * n_steps * 3e-4
+    print(f"  bwd-seam drill: {n_steps} steps, {bwd_injected} errors in "
+          f"{bwd_faulty} steps -> {bwd_detected} faulty steps detected, "
+          f"{clean_fp} clean false positives, max param drift vs clean = "
+          f"{bwd_drift:.3e} (bound {drift_bound:.1e})")
+    bwd_ok = (bwd_faulty > 0 and bwd_detected >= bwd_faulty
+              and clean_fp == 0 and bwd_drift < drift_bound)
+    return ok and have and step_ok and bwd_ok
 
 
 def main(argv=None) -> int:

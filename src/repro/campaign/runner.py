@@ -143,7 +143,8 @@ def _build_injection(cell: Cell, spec: StreamSpec, rt: Routine,
                                out_size=spec.domain,
                                base_scale=rt.base_scale,
                                pos=spec.pin_pos,
-                               force_positive=spec.positive_delta)
+                               force_positive=spec.positive_delta,
+                               seam=spec.seam)
 
 
 def _time_us(fn, ops, inj, reps: int = 5) -> float:

@@ -98,6 +98,38 @@ def _install_optimization_barrier_vmap() -> None:
     batching.primitive_batchers[optimization_barrier_p] = rule
 
 
+def _install_optimization_barrier_ad() -> None:
+    # The pinned jax floor has no differentiation rule for
+    # optimization_barrier, which makes every DMR-protected op (the fence
+    # between redundant streams, core/dmr.py) forward-only: jax.grad of a
+    # train_loss under a dmr_on policy raises NotImplementedError.  The
+    # barrier is semantically the identity, so its JVP pushes tangents
+    # through their OWN barrier (the duplicated tangent streams stay
+    # CSE-fenced, preserving the DMR redundancy in forward-mode AD) and its
+    # transpose pushes cotangents through a barrier likewise (reverse-mode:
+    # the gradient arithmetic of a fenced op is itself fenced).
+    from jax.interpreters import ad
+
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+    except ImportError:  # pragma: no cover - layout changed; newer jax
+        return
+    if optimization_barrier_p in ad.primitive_jvps:
+        return
+
+    def jvp_rule(primals, tangents):
+        tans = [ad.instantiate_zeros(t) for t in tangents]
+        return (optimization_barrier_p.bind(*primals),
+                optimization_barrier_p.bind(*tans))
+
+    def transpose_rule(cts, *primals):
+        cts = [ad.instantiate_zeros(ct) for ct in cts]
+        return optimization_barrier_p.bind(*cts)
+
+    ad.primitive_jvps[optimization_barrier_p] = jvp_rule
+    ad.primitive_transposes[optimization_barrier_p] = transpose_rule
+
+
 def _install_cost_analysis() -> None:
     # Old jax returns a one-element list of per-device dicts from
     # Compiled.cost_analysis(); new jax returns the dict directly.  Wrap to
@@ -127,6 +159,7 @@ def install() -> None:
     _install_axis_size()
     _install_cost_analysis()
     _install_optimization_barrier_vmap()
+    _install_optimization_barrier_ad()
 
 
 install()

@@ -12,9 +12,11 @@ Public surface:
 from repro.core.ft_config import (FTPolicy, OFF, HYBRID, HYBRID_UNFUSED,
                                   HYBRID_SEP_EPILOGUE, DMR_ONLY, ABFT_ONLY,
                                   default_policy)
-from repro.core.injection import Injection
+from repro.core.injection import (Injection, SEAM_BWD_DA, SEAM_BWD_DB,
+                                  SEAM_FWD)
 from repro.core.abft import (ft_matmul, ft_matmul_batched, ft_matmul_diff,
-                             matmul_fused, matmul_unfused)
+                             ft_matmul_bwd_gemms, matmul_fused,
+                             matmul_unfused, new_grad_probe, probe_report)
 from repro.core.dmr import dmr_compute, dmr_reduce_sum, DmrVerdict, dmr_report
 from repro.core.ft_dense import ft_dense, ft_dense_fused_gate, ft_bmm
 from repro.core.ft_collectives import ft_psum, ft_pmean

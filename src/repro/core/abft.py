@@ -34,7 +34,12 @@ per-slice checksum partials, and injection positions index the flattened
 
 All paths return ``(C, FTReport)`` and share the verification epilogue in
 ``core.checksum``.  ``ft_matmul`` dispatches on FTPolicy; ``ft_matmul_diff``
-wraps it in a custom_vjp so backward matmuls are protected too.
+wraps it in a custom_vjp whose backward rule routes BOTH cotangent GEMMs
+(``dA = alpha * g @ B^T``, ``dB = alpha * A^T @ g``) through the same
+fused-epilogue ABFT machinery, with a gradient-seam injection address
+space (``Injection.seam``) and a cotangent "grad probe" that carries the
+backward-pass FT counters out of the custom_vjp (see the differentiable
+section below and docs/abft-math.md for the backward checksum relations).
 """
 from __future__ import annotations
 
@@ -50,7 +55,8 @@ from repro.core import report as ftreport
 from repro.core.dmr import _fence, dmr_compute, dmr_report
 from repro.core.ft_config import FTPolicy, default_policy
 from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, DMR_STREAM_1,
-                                  DMR_STREAM_2, Injection)
+                                  DMR_STREAM_2, SEAM_BWD_DA, SEAM_BWD_DB,
+                                  SEAM_FWD, Injection)
 
 ABFT_STREAMS = (ABFT_ACC, ABFT_ACC_2)
 DMR_STREAMS = (DMR_STREAM_1, DMR_STREAM_2)
@@ -148,8 +154,12 @@ def _maybe_recompute(verdict: cks.AbftVerdict, A, B, alpha, beta, C0,
     acc = cks.acc_dtype_for(A.dtype)
 
     def redo(ops):
-        a, b = _fence(ops[0], ops[1])
-        c0 = ops[2] if len(ops) > 2 else None
+        # Fence EVERY operand: an unfenced C0 would let XLA CSE the
+        # beta*C0 accumulate with the first (fault-afflicted) epilogue,
+        # and the "third calculation" must be an independent computation.
+        fenced = _fence(*ops)
+        a, b = fenced[0], fenced[1]
+        c0 = fenced[2] if len(ops) > 2 else None
         return _epilogue(a, b, alpha, beta, c0,
                          acc).astype(verdict.C.dtype)
 
@@ -168,14 +178,33 @@ def ft_matmul(A: jax.Array, B: jax.Array, *,
     (M, K) @ (K, N) -> (M, N), optionally scaled and accumulated into an
     (M, N) ``C0``; leading batch dims are NOT handled here - see
     ft_einsum / batched helpers.
+
+    Seam-blind entry point: only forward-seam injection slots apply here
+    (``ft_matmul_diff`` is the layer that interprets SEAM_BWD_* slots).
     """
     policy = policy or default_policy()
     out_dtype = out_dtype or A.dtype
+    if injection is not None:
+        injection = injection.for_seam(SEAM_FWD)
     if not policy.abft_on:
         acc = cks.acc_dtype_for(A.dtype)
         P = jnp.matmul(A, B, preferred_element_type=acc)
         if injection is not None:  # errors pass through unprotected
             P = injection.perturb(P, stream=ABFT_STREAMS)
+        trivial = (isinstance(alpha, (int, float)) and alpha == 1.0
+                   and C0 is None)
+        if trivial and (injection is None or not policy.dmr_on):
+            # Trivial contract: there is no epilogue arithmetic, so no
+            # pass to DMR-protect - running the identity through
+            # dmr_compute would add 2-3 fenced O(MN) sweeps to every
+            # dmr-mode matmul for nothing.  Injection semantics are
+            # preserved exactly: without DMR the slots still land
+            # unprotected (control cells), and an armed spec under a
+            # dmr_on policy takes the full pass below so DMR-stream
+            # faults stay detectable.
+            if injection is not None:
+                P = injection.perturb(P, stream=DMR_STREAMS)
+            return P.astype(out_dtype), ftreport.empty_report()
         out, rep = _epilogue_sep(alpha, P, beta, C0, policy, injection)
         return out.astype(out_dtype), rep
     fn = matmul_fused if policy.fused else matmul_unfused
@@ -201,7 +230,7 @@ def _slice_injections(injection: Optional[Injection], nb: int,
 
     def per_slice(b):
         return Injection(inj.active & ((inj.pos // sz) == b),
-                         inj.stream, inj.pos % sz, inj.delta)
+                         inj.stream, inj.pos % sz, inj.delta, inj.seam)
 
     return jax.vmap(per_slice)(jnp.arange(nb, dtype=jnp.int32))
 
@@ -220,6 +249,8 @@ def ft_matmul_batched(A: jax.Array, B: jax.Array, *,
     """
     policy = policy or default_policy()
     out_dtype = out_dtype or A.dtype
+    if injection is not None:
+        injection = injection.for_seam(SEAM_FWD)
     if A.ndim == 2 and B.ndim == 2:
         return ft_matmul(A, B, alpha=alpha, beta=beta, C0=C0, policy=policy,
                          injection=injection, out_dtype=out_dtype)
@@ -278,13 +309,14 @@ def _batched_fused(Af, Bf, alpha, beta, C0f, policy, injection):
         acc = cks.acc_dtype_for(Af.dtype)
 
         def redo(ops):
-            a, b = _fence(ops[0], ops[1])
+            fenced = _fence(*ops)      # incl. C0: the recompute epilogue
+            a, b = fenced[0], fenced[1]  # must not CSE with the first one
             r = jnp.einsum("bmk,bkn->bmn", a, b,
                            preferred_element_type=acc)
             if policy.fuse_epilogue:
                 r = jnp.asarray(alpha, acc) * r
                 if C0f is not None:
-                    r = r + jnp.asarray(beta, acc) * ops[2].astype(acc)
+                    r = r + jnp.asarray(beta, acc) * fenced[2].astype(acc)
             return jnp.where(verdict.unrecoverable[:, None, None],
                              r.astype(Cv.dtype), Cv)
 
@@ -301,28 +333,175 @@ def _batched_fused(Af, Bf, alpha, beta, C0f, policy, injection):
     return Cv, report
 
 
-# -- differentiable wrapper ---------------------------------------------------
-# fwd and bwd matmuls are both ABFT-protected.  The fwd FTReport is a primal
-# output; bwd reports cannot escape a custom_vjp, so backward errors are
-# *corrected* silently (telemetry counts fwd only - documented in DESIGN.md).
+# -- differentiable fault tolerance -------------------------------------------
+# JAX cannot differentiate through a pallas_call (no transpose rule), so
+# without a custom rule any ABFT-protected matmul is forward-only.
+# ``ft_matmul_diff`` closes the gap: its custom_vjp backward routes both
+# cotangent GEMMs
+#
+#     dA = alpha * g @ B^T        dB = alpha * A^T @ g
+#
+# through ``ft_matmul_batched`` - the same fused-epilogue Pallas kernel,
+# beta-adjusted checksum refs, per-interval verify/correct, and native
+# batch grid as the forward pass - so gradient corruption is located and
+# corrected exactly like forward corruption (derivation: docs/abft-math.md).
+#
+# Telemetry: the forward FTReport is an ordinary primal output, but a
+# custom_vjp backward rule cannot add outputs.  Backward counters escape
+# as a COTANGENT instead: the wrapper takes a zeros "grad probe" array and
+# the backward rule returns the (f32-encoded) backward FT counters as the
+# probe's cotangent.  Because cotangents accumulate across uses, threading
+# ONE probe through every protected matmul of a train step yields the
+# step's total backward report in d(loss)/d(probe) - see
+# ``launch/steps.py``, which surfaces it in step metrics.
+#
+# Injection: slots with seam SEAM_BWD_DA / SEAM_BWD_DB address the flat
+# dA / dB outputs of the backward GEMMs; SEAM_FWD slots apply to the
+# forward interval as usual.
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def ft_matmul_diff(A, B, policy: FTPolicy):
-    C, _ = ft_matmul(A, B, policy=policy)
-    return C
+# Everything the backward rule can raise: ABFT counters from the two
+# cotangent GEMMs plus DMR counters from the (dmr_on) dC0 = beta*g pass.
+GRAD_PROBE_FIELDS = ("abft_detected", "abft_corrected", "abft_unrecoverable",
+                     "dmr_detected", "dmr_corrected", "dmr_unrecoverable")
 
 
-def _ft_mm_fwd(A, B, policy):
-    C, _ = ft_matmul(A, B, policy=policy)
-    return C, (A, B)
+def new_grad_probe() -> jax.Array:
+    """Zeros array whose gradient carries the backward-pass FT counters."""
+    return jnp.zeros((len(GRAD_PROBE_FIELDS),), jnp.float32)
 
 
-def _ft_mm_bwd(policy, res, g):
-    A, B = res
-    bwd_policy = policy if policy.protect_grads else policy.replace(mode="off")
-    dA, _ = ft_matmul(g, B.T, policy=bwd_policy, out_dtype=A.dtype)
-    dB, _ = ft_matmul(A.T, g, policy=bwd_policy, out_dtype=B.dtype)
-    return dA, dB
+def probe_report(probe_grad: jax.Array) -> dict:
+    """Decode a grad-probe cotangent into an FTReport pytree."""
+    return ftreport.make_report(**{
+        f: probe_grad[i].astype(jnp.int32)
+        for i, f in enumerate(GRAD_PROBE_FIELDS)})
 
 
-ft_matmul_diff.defvjp(_ft_mm_fwd, _ft_mm_bwd)
+def _probe_cotangent(rep: dict) -> jax.Array:
+    return jnp.stack([rep[f].astype(jnp.float32)
+                      for f in GRAD_PROBE_FIELDS])
+
+
+def _mT(x: jax.Array) -> jax.Array:
+    return jnp.swapaxes(x, -1, -2)
+
+
+def _unbroadcast(x: jax.Array, shape) -> jax.Array:
+    """Sum a cotangent down to ``shape`` (transpose of broadcasting)."""
+    shape = tuple(shape)
+    if x.shape == shape:
+        return x
+    x = x.sum(axis=tuple(range(x.ndim - len(shape))))
+    keep = tuple(i for i, (a, b) in enumerate(zip(x.shape, shape))
+                 if a != b)
+    return x.sum(axis=keep, keepdims=True)
+
+
+def ft_matmul_bwd_gemms(g: jax.Array, A: jax.Array, B: jax.Array, *,
+                        alpha=1.0, policy: FTPolicy,
+                        injection: Optional[Injection] = None
+                        ) -> Tuple[jax.Array, jax.Array, dict]:
+    """The two cotangent GEMMs of ``C = alpha*A@B + beta*C0`` under FT.
+
+    The shared implementation of ``ft_matmul_diff``'s backward rule,
+    exposed as public API for drills that want the backward report
+    DIRECTLY (the custom_vjp boundary swallows it; in-graph consumers
+    read it through the grad probe instead - that is how the campaign's
+    ``abft-bwd`` cells assert detection).
+    SEAM_BWD_DA slots land in flat dA, SEAM_BWD_DB slots in flat dB; with
+    ``policy.protect_grads`` both GEMMs are full verification intervals,
+    otherwise the faults pass through unprotected (control behaviour).
+    Returns ``(dA, dB, report)`` with dA/dB in A/B's dtype and possibly
+    broadcasted batch shape (callers unbroadcast).
+    """
+    inj = injection if injection is not None else Injection.none()
+    bwd_policy = (policy if policy.protect_grads
+                  else policy.replace(mode="off"))
+    dA, rep_a = ft_matmul_batched(
+        g, _mT(B), alpha=alpha, policy=bwd_policy,
+        injection=inj.for_seam(SEAM_BWD_DA), out_dtype=A.dtype)
+    dB, rep_b = ft_matmul_batched(
+        _mT(A), g, alpha=alpha, policy=bwd_policy,
+        injection=inj.for_seam(SEAM_BWD_DB), out_dtype=B.dtype)
+    return dA, dB, ftreport.merge(rep_a, rep_b)
+
+
+# cfg = (policy, alpha, beta, c0_shape|None, c0_dtype|None, out_dtype):
+# all hashable statics, so one custom_vjp serves every call site.
+# The report crosses the custom_vjp boundary as FLOAT32: int32 outputs of a
+# custom_vjp take float0 cotangents, which lax.scan's transpose cannot
+# accumulate when reports are merged across a scanned layer stack.  The
+# public wrapper casts back to the i32 FTReport contract.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ft_mm_diff(cfg, A, B, C0, inj_rows, grad_probe):
+    policy, alpha, beta, _, _, out_dtype = cfg
+    inj = Injection.from_seam_rows(inj_rows)
+    C, rep = ft_matmul_batched(A, B, alpha=alpha, beta=beta, C0=C0,
+                               policy=policy, injection=inj,
+                               out_dtype=out_dtype)
+    return C, {k: v.astype(jnp.float32) for k, v in rep.items()}
+
+
+def _ft_mm_diff_fwd(cfg, A, B, C0, inj_rows, grad_probe):
+    out = _ft_mm_diff(cfg, A, B, C0, inj_rows, grad_probe)
+    return out, (A, B, inj_rows)
+
+
+def _ft_mm_diff_bwd(cfg, res, ct):
+    policy, alpha, beta, c0_shape, c0_dtype, _ = cfg
+    A, B, inj_rows = res
+    g = ct[0]          # ct[1] is the report's (zero) cotangent
+    inj = Injection.from_seam_rows(inj_rows)
+    dA, dB, rep = ft_matmul_bwd_gemms(g, A, B, alpha=alpha, policy=policy,
+                                      injection=inj)
+    dA = _unbroadcast(dA, A.shape).astype(A.dtype)
+    dB = _unbroadcast(dB, B.shape).astype(B.dtype)
+    if c0_shape is None:
+        dC0 = None
+    else:
+        # dC0 = beta * g is a memory-bound scal: DMR per the hybrid rule.
+        if policy.dmr_on and policy.protect_grads:
+            v = dmr_compute(lambda gg: jnp.asarray(beta, g.dtype) * gg, g,
+                            vote=policy.dmr_vote)
+            dC0, rep = v.y, ftreport.merge(rep, dmr_report(v))
+        else:
+            dC0 = jnp.asarray(beta, g.dtype) * g
+        dC0 = _unbroadcast(dC0, c0_shape).astype(c0_dtype)
+    return dA, dB, dC0, jnp.zeros_like(inj_rows), _probe_cotangent(rep)
+
+
+_ft_mm_diff.defvjp(_ft_mm_diff_fwd, _ft_mm_diff_bwd)
+
+
+def ft_matmul_diff(A: jax.Array, B: jax.Array, *,
+                   alpha=1.0, beta=0.0, C0: Optional[jax.Array] = None,
+                   policy: Optional[FTPolicy] = None,
+                   injection: Optional[Injection] = None,
+                   grad_probe: Optional[jax.Array] = None,
+                   out_dtype=None) -> Tuple[jax.Array, dict]:
+    """Differentiable ``ft_matmul_batched``: FT coverage on fwd AND bwd.
+
+    Same contract as ``ft_matmul_batched`` (2-D or leading batch dims),
+    plus:
+      - under ``jax.grad`` the cotangent GEMMs run through the fused ABFT
+        kernel (policy-gated by ``protect_grads``);
+      - ``injection`` may carry SEAM_BWD_* slots addressing the backward
+        GEMMs;
+      - ``grad_probe``: pass a ``new_grad_probe()`` zeros array that you
+        also differentiate with respect to; its gradient decodes (via
+        ``probe_report``) to the backward-pass FT counters.
+
+    ``alpha``/``beta`` must be python scalars on this path (they are baked
+    into the custom_vjp's static config).
+    """
+    policy = policy or default_policy()
+    out_dtype = out_dtype or A.dtype
+    inj = injection if injection is not None else Injection.none()
+    probe = grad_probe if grad_probe is not None else new_grad_probe()
+    cfg = (policy, float(alpha), float(beta),
+           None if C0 is None else tuple(C0.shape),
+           None if C0 is None else C0.dtype,
+           jnp.dtype(out_dtype))
+    C, rep = _ft_mm_diff(cfg, A, B, C0, inj.as_seam_rows(), probe)
+    return C, {k: lax.stop_gradient(v).astype(jnp.int32)
+               for k, v in rep.items()}

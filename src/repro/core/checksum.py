@@ -99,17 +99,32 @@ def tolerances(refs: ChecksumRefs, k_dim: int, n_dim: int, m_dim: int,
     tolerate |delta| < 9.6 at unit scale).  ``tol_factor`` (default 4)
     gives ~4 sigma of false-positive headroom; this is the paper's
     "round-off threshold", sized to stay sensitive at scale.
+
+    Two per-element terms:
+      - |.|-magnitude random walk: RMS term magnitude * sqrt(#terms),
+        i.e. abs_ref / sqrt(K*N) * sqrt(K+N).  The right model for
+        zero-mean data (measured drift at 1024^3 unit scale: ~2e-3; this
+        bound: ~1.4e-2).
+      - SIGNED-reference bias: when the summed terms share a sign
+        (post-activation channels, embedding rows - i.e. real model
+        activations), partial sums grow linearly and the error of an
+        n-term chain is ~ eps * |signed total| * sqrt(n/3).  Without this
+        term, clean hybrid TRAINING false-positives on its widest
+        column checks (found the day the backward pass first ran under
+        ABFT); with it, the bound stays ~eps-relative to the output
+        scale, far below any injectable delta.
     """
     floor = jnp.asarray(eps, refs.abs_rowsum_ref.dtype)
-    # abs_*sum_ref is a SUM of ~K*N term magnitudes; the random-walk drift
-    # scales with the RMS term magnitude * sqrt(#terms), i.e.
-    # abs_ref / sqrt(K*N) * sqrt(K+N).  (Measured drift at 1024^3 unit
-    # scale: ~2e-3; this bound: ~1.4e-2 - a safe ~7x margin that still
-    # detects |delta| >= ~0.05 where the old K*eps bound needed 14.)
-    row_tol = tol_factor * eps * jnp.sqrt(float(k_dim + n_dim)) \
+    bias_row = math_sqrt((k_dim + max(n_dim, 1)) / 3.0)
+    bias_col = math_sqrt((k_dim + max(m_dim, 1)) / 3.0)
+    row_tol = tol_factor * eps * (
+        jnp.sqrt(float(k_dim + n_dim))
         * (refs.abs_rowsum_ref / math_sqrt(k_dim * max(n_dim, 1)) + 1.0)
-    col_tol = tol_factor * eps * jnp.sqrt(float(k_dim + m_dim)) \
+        + bias_row * jnp.abs(refs.rowsum_ref))
+    col_tol = tol_factor * eps * (
+        jnp.sqrt(float(k_dim + m_dim))
         * (refs.abs_colsum_ref / math_sqrt(k_dim * max(m_dim, 1)) + 1.0)
+        + bias_col * jnp.abs(refs.colsum_ref))
     return jnp.maximum(row_tol, floor), jnp.maximum(col_tol, floor)
 
 
@@ -171,6 +186,17 @@ def verify_and_correct_with_tol(
     lower floor for degenerate/small cases.  2*tol_factor sigma ~ 8 sigma
     keeps the false-positive rate negligible out to 10^5-row checks while
     detecting O(10 ulp)-scale corruptions.
+
+    The robust scale is measured on residuals NORMALIZED by their own
+    per-element analytic bound (z = res / tol), not on the raw residuals:
+    checks are heteroscedastic - a handful of rows/columns with outsized
+    |.|-magnitude sums (structured activations: embedding rows, gated
+    channels) carry proportionally larger legitimate round-off, and a raw
+    global MAD calibrated on the typical entries flags them as errors.
+    In z-units every entry is O(1)-comparable, so the calibration floats
+    the whole threshold surface instead of a single scalar floor (the
+    clean-train false positives this fixes were found the day hybrid
+    training first ran end to end).
     """
     r_res = rowsum_act - rowsum_ref          # (M,)
     c_res = colsum_act - colsum_ref          # (N,)
@@ -178,11 +204,11 @@ def verify_and_correct_with_tol(
     # 2-row check is 50% contamination): below 16 entries the analytic
     # floor stands alone.
     if r_res.shape[0] >= 16:
-        row_tol = jnp.maximum(2 * tol_factor * _robust_scale(r_res),
-                              row_tol)
+        row_tol = row_tol * jnp.maximum(
+            2 * tol_factor * _robust_scale(r_res / row_tol), 1.0)
     if c_res.shape[0] >= 16:
-        col_tol = jnp.maximum(2 * tol_factor * _robust_scale(c_res),
-                              col_tol)
+        col_tol = col_tol * jnp.maximum(
+            2 * tol_factor * _robust_scale(c_res / col_tol), 1.0)
 
     def residual_masks(r, c):
         return jnp.abs(r) > row_tol, jnp.abs(c) > col_tol
@@ -199,8 +225,6 @@ def verify_and_correct_with_tol(
         score = jnp.where(row_bad, jnp.abs(r), -jnp.inf)
         i_star = jnp.argmax(score)
         delta = r[i_star]
-        col_score = jnp.where(col_bad, jnp.abs(c - delta), jnp.inf)
-        j_star = jnp.argmin(col_score)
         # The two residual measurements of one physical error differ by the
         # round-off of sums *containing* that error, which scales with
         # |delta| itself - large injected magnitudes need the relative term
@@ -208,10 +232,18 @@ def verify_and_correct_with_tol(
         eps_val = jnp.finfo(r.dtype).eps
         rel = tol_factor * eps_val * (r.shape[0] + c.shape[0]) \
             * jnp.abs(delta)
-        match_tol = row_tol[i_star] + col_tol[j_star] + rel
-        ok = (row_bad[i_star]
-              & col_bad[j_star]
-              & (jnp.abs(c[j_star] - delta) <= match_tol))
+        cand = col_bad & (jnp.abs(c - delta)
+                          <= row_tol[i_star] + col_tol + rel)
+        j_star = jnp.argmax(jnp.where(cand, jnp.abs(c), -jnp.inf))
+        # Ambiguity guard: if MORE than one flagged column matches this
+        # row's delta, the pairing is underdetermined - two equal-delta
+        # errors at (i1,j1),(i2,j2) produce row/col signatures identical
+        # to the cross pairing (i1,j2),(i2,j1), and "correcting" the wrong
+        # one silently doubles the corruption (found by the rate drill the
+        # first time the exponent ladder drew the same rung twice).  Leave
+        # the residuals standing so the interval escalates to the paper's
+        # recompute ("third calculation") instead of guessing.
+        ok = row_bad[i_star] & (cand.sum() == 1)
         d_applied = jnp.where(ok, delta, jnp.zeros((), delta.dtype))
         Cc = Cc.at[i_star, j_star].add(-d_applied.astype(Cc.dtype))
         r = r.at[i_star].add(-d_applied)

@@ -17,6 +17,18 @@ x86 mechanics -> TPU dataflow (see DESIGN.md Sec. 2):
 
 Exact equality is sound: identical float ops on identical inputs are
 bitwise-deterministic on both x86 and TPU, so any mismatch is an error.
+
+Autodiff: the fence is ``lax.optimization_barrier``, which has no
+differentiation rule on the pinned jax floor - ``repro.compat`` registers
+an identity JVP/transpose shim (tangents and cotangents pass through
+their own barrier, so the duplicated arithmetic stays CSE-fenced in the
+differentiated graph too).  With the shim installed, ``dmr_compute`` and
+everything built on it (norm reductions, the separate-epilogue pass, the
+optimizer chain) differentiate end to end: gradients flow through the
+voted output ``y`` - i.e. through corrected values when the vote repaired
+a fault - and the detect/vote bookkeeping itself (integer counters,
+equality masks) is gradient-transparent.  The campaign's ``dmr-grad``
+cells gate exactly this path.
 """
 from __future__ import annotations
 

@@ -48,7 +48,10 @@ class FTPolicy:
       dmr_vote: if True, DMR mismatches are resolved by a third compute and
         2-of-3 majority vote; if False, detection only.
       collect_stats: return FTReport counters from every op.
-      protect_grads: apply the same policy to backward-pass matmuls.
+      protect_grads: apply the same policy to the backward-pass matmuls -
+        the cotangent GEMMs of ``ft_matmul_diff``'s custom_vjp run as
+        full ABFT verification intervals (False = paper-style
+        forward-only protection; gradients compute unverified).
       verify_collectives: checksum-verify cross-chip reductions
         (beyond-paper extension, Sec. 3.3 of DESIGN.md).
       interpret: run Pallas kernels in interpret mode (CPU container).

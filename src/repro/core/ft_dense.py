@@ -5,6 +5,14 @@ enters the model zoo: every projection in every architecture routes through
 ``ft_dense``; attention/MoE contractions route through ``ft_einsum_qk``-style
 helpers.  With policy.mode == "off" they lower to bare jnp ops (zero
 overhead - the "FT-BLAS: Ori" configuration).
+
+Both seams are DIFFERENTIABLE end to end: they dispatch through
+``core.abft.ft_matmul_diff``, whose custom_vjp runs the two cotangent
+GEMMs of each call through the same fused-epilogue ABFT kernel as the
+forward product (gated by ``policy.protect_grads``).  ``injection`` may
+therefore carry SEAM_BWD_* slots striking the backward GEMMs, and
+``grad_probe`` (see ``core.abft.new_grad_probe``) recovers the backward
+FT counters as its gradient.
 """
 from __future__ import annotations
 
@@ -14,27 +22,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import report as ftreport
-from repro.core.abft import ft_matmul, ft_matmul_batched
+from repro.core.abft import ft_matmul_diff
 from repro.core.ft_config import FTPolicy, default_policy
 from repro.core.injection import Injection
 
 
+def _from_ctx(ctx, policy, injection, grad_probe):
+    """Fill unset FT kwargs from a ShardCtx-like object (``.policy``,
+    ``.injection``, ``.grad_probe``).  Model code passes ``ctx=ctx`` and
+    the whole fault/telemetry surface rides along - no call site can
+    forget one of the three kwargs and silently drop a matmul out of
+    injection coverage."""
+    if ctx is not None:
+        policy = policy if policy is not None else ctx.policy
+        injection = injection if injection is not None else ctx.injection
+        grad_probe = (grad_probe if grad_probe is not None
+                      else ctx.grad_probe)
+    return policy or default_policy(), injection, grad_probe
+
+
 def ft_dense(x: jax.Array, w: jax.Array, *,
+             ctx=None,
              policy: Optional[FTPolicy] = None,
              injection: Optional[Injection] = None,
+             grad_probe: Optional[jax.Array] = None,
              out_dtype=None) -> Tuple[jax.Array, dict]:
     """y = x @ w for x: (..., K), w: (K, N) - one ABFT interval per call.
 
     Leading dims of x are flattened into the GEMM M dimension, so a whole
     (batch, seq) block is verified by a single checksum pair - the fused
     kernel sees one big 2-D matmul, which is also the fastest MXU shape.
+    Differentiable: under ``jax.grad`` the dX / dW cotangent GEMMs are
+    ABFT intervals too (``policy.protect_grads``).  ``ctx`` supplies
+    policy/injection/grad_probe wholesale (explicit kwargs win).
     """
-    policy = policy or default_policy()
+    policy, injection, grad_probe = _from_ctx(ctx, policy, injection,
+                                              grad_probe)
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y2, rep = ft_matmul(x2, w, policy=policy, injection=injection,
-                        out_dtype=out_dtype)
+    y2, rep = ft_matmul_diff(x2, w, policy=policy, injection=injection,
+                             grad_probe=grad_probe, out_dtype=out_dtype)
     return y2.reshape(lead + (w.shape[-1],)), rep
 
 
@@ -55,18 +83,23 @@ def ft_dense_fused_gate(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, *,
 
 
 def ft_bmm(a: jax.Array, b: jax.Array, *,
+           ctx=None,
            policy: Optional[FTPolicy] = None,
            injection: Optional[Injection] = None,
+           grad_probe: Optional[jax.Array] = None,
            out_dtype=None) -> Tuple[jax.Array, dict]:
     """Batched matmul (attention scores / context) with per-slice ABFT.
 
     Under a fused policy every slice runs in ONE pallas_call on the
     kernel's native batch grid dimension.  ``injection`` positions index
     the flattened (nb*M*N) output, so drills can target any batch slice.
+    Differentiable: the batched cotangent GEMMs ride the same native
+    batch grid under ``jax.grad``.  ``ctx``: see ``ft_dense``.
     """
-    policy = policy or default_policy()
-    return ft_matmul_batched(a, b, policy=policy, injection=injection,
-                             out_dtype=out_dtype)
+    policy, injection, grad_probe = _from_ctx(ctx, policy, injection,
+                                              grad_probe)
+    return ft_matmul_diff(a, b, policy=policy, injection=injection,
+                          grad_probe=grad_probe, out_dtype=out_dtype)
 
 
 def ft_dense_report_only(x, w, *, policy=None, **kw):

@@ -15,6 +15,20 @@ kernel.  ``stream`` selects where the corruption lands:
   3 : ABFT accumulator, second error           - multi-error scenarios
 
 Flat position indexing is used so one spec works for any operand shape.
+
+``seam`` selects WHICH computation of a differentiated op the slot
+addresses (the gradient-seam address space; docs/architecture.md):
+
+  0 : SEAM_FWD    - the primal/forward computation (default; every
+                    pre-existing spec is a forward spec)
+  1 : SEAM_BWD_DA - the dA = alpha * g @ B^T cotangent GEMM of the
+                    custom_vjp backward rule; pos indexes flat dA
+  2 : SEAM_BWD_DB - the dB = alpha * A^T @ g cotangent GEMM; pos
+                    indexes flat dB
+
+Ops that are not differentiated simply never evaluate the bwd seams; FT
+entry points filter with ``for_seam`` so a mixed spec can drive a whole
+train step (forward matmuls, backward matmuls, optimizer update) at once.
 """
 from __future__ import annotations
 
@@ -30,6 +44,11 @@ DMR_STREAM_2 = 1
 ABFT_ACC = 2
 ABFT_ACC_2 = 3
 
+# Seams (which computation of a differentiated op a slot addresses)
+SEAM_FWD = 0
+SEAM_BWD_DA = 1
+SEAM_BWD_DB = 2
+
 
 @jax.tree_util.register_pytree_node_class
 class Injection:
@@ -40,45 +59,79 @@ class Injection:
       stream: (n_err,) int32  - target stream, see module docstring
       pos:    (n_err,) int32  - flat element index within the target op output
       delta:  (n_err,) float32- additive error magnitude ("1+1=3")
+      seam:   (n_err,) int32  - target seam (SEAM_FWD / SEAM_BWD_*); see
+                                module docstring.  Defaults to SEAM_FWD.
     """
 
     N_SLOTS = 4
 
-    def __init__(self, active, stream, pos, delta):
+    def __init__(self, active, stream, pos, delta, seam=None):
         self.active = active
         self.stream = stream
         self.pos = pos
         self.delta = delta
+        self.seam = (seam if seam is not None
+                     else jnp.zeros(jnp.shape(stream), jnp.int32))
 
     # -- constructors -------------------------------------------------------
     @classmethod
     def none(cls) -> "Injection":
         z = jnp.zeros((cls.N_SLOTS,), jnp.int32)
         return cls(jnp.zeros((cls.N_SLOTS,), jnp.bool_), z, z,
-                   jnp.zeros((cls.N_SLOTS,), jnp.float32))
+                   jnp.zeros((cls.N_SLOTS,), jnp.float32), z)
 
     @classmethod
-    def from_arrays(cls, active, stream, pos, delta) -> "Injection":
+    def from_arrays(cls, active, stream, pos, delta,
+                    seam=None) -> "Injection":
         """Coercing constructor for traced/batched specs (campaign engine)."""
         return cls(jnp.asarray(active, jnp.bool_),
                    jnp.asarray(stream, jnp.int32),
                    jnp.asarray(pos, jnp.int32),
-                   jnp.asarray(delta, jnp.float32))
+                   jnp.asarray(delta, jnp.float32),
+                   None if seam is None else jnp.asarray(seam, jnp.int32))
 
     @classmethod
     def at(cls, *, stream: int, pos: int, delta: float,
-           slot: int = 0) -> "Injection":
+           slot: int = 0, seam: int = SEAM_FWD) -> "Injection":
         inj = cls.none()
-        return inj.add(stream=stream, pos=pos, delta=delta, slot=slot)
+        return inj.add(stream=stream, pos=pos, delta=delta, slot=slot,
+                       seam=seam)
 
     def add(self, *, stream: int, pos: int, delta: float,
-            slot: int) -> "Injection":
+            slot: int, seam: int = SEAM_FWD) -> "Injection":
         return Injection(
             self.active.at[slot].set(True),
             self.stream.at[slot].set(stream),
             self.pos.at[slot].set(pos),
             self.delta.at[slot].set(delta),
+            self.seam.at[slot].set(seam),
         )
+
+    # -- seam routing --------------------------------------------------------
+    def for_seam(self, seam: int) -> "Injection":
+        """Project the spec onto one seam's address space.
+
+        Slots targeting other seams are disarmed and the result is a plain
+        forward-space spec (seam column zeroed), so downstream ops and
+        Pallas kernels - which know nothing about seams - apply it as
+        usual.  ``for_seam(SEAM_FWD)`` is the identity on pre-existing
+        (seam-less) specs.
+        """
+        return Injection(self.active & (self.seam == seam),
+                         self.stream, self.pos, self.delta,
+                         jnp.zeros_like(self.seam))
+
+    def keep_seams(self, *seams: int) -> "Injection":
+        """Disarm every slot whose seam is not in ``seams``; seams are kept
+        (unlike ``for_seam``, which also projects into forward space).
+        Used by the train-step seam to hand the model only the
+        backward-GEMM slots while the forward-seam slots go to the
+        optimizer update."""
+        hit = jnp.zeros(self.active.shape, jnp.bool_)
+        for s in seams:
+            hit = hit | (self.seam == s)
+        return Injection(self.active & hit, self.stream, self.pos,
+                         self.delta, self.seam)
 
     # -- application helpers ------------------------------------------------
     def perturb(self, x: jax.Array, *, stream, offset: int = 0) -> jax.Array:
@@ -107,7 +160,11 @@ class Injection:
         return flat.reshape(x.shape)
 
     def as_rows(self) -> jax.Array:
-        """(N_SLOTS, 4) f32 table for passing into Pallas kernels."""
+        """(N_SLOTS, 4) f32 table for passing into Pallas kernels.
+
+        Kernels are seam-blind: callers must ``for_seam`` first when the
+        spec may carry non-forward slots.
+        """
         return jnp.stack([
             self.active.astype(jnp.float32),
             self.stream.astype(jnp.float32),
@@ -120,13 +177,31 @@ class Injection:
         return cls(rows[:, 0] > 0.5, rows[:, 1].astype(jnp.int32),
                    rows[:, 2].astype(jnp.int32), rows[:, 3])
 
+    def as_seam_rows(self) -> jax.Array:
+        """(N_SLOTS, 5) f32 table INCLUDING the seam column.
+
+        The all-float encoding is what crosses the ``custom_vjp`` boundary
+        in ``core.abft``: custom_vjp demands a cotangent for every traced
+        input, and a float table takes an ordinary zeros cotangent where
+        the bool/int pytree would need float0 bookkeeping.
+        """
+        return jnp.concatenate(
+            [self.as_rows(), self.seam.astype(jnp.float32)[:, None]], axis=1)
+
+    @classmethod
+    def from_seam_rows(cls, rows: jax.Array) -> "Injection":
+        inj = cls.from_rows(rows[:, :4])
+        inj.seam = rows[:, 4].astype(jnp.int32)
+        return inj
+
     def n_active(self) -> jax.Array:
         """Number of armed error slots (i32 scalar; traced-safe)."""
         return self.active.sum().astype(jnp.int32)
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        return (self.active, self.stream, self.pos, self.delta), None
+        return (self.active, self.stream, self.pos, self.delta,
+                self.seam), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -134,7 +209,7 @@ class Injection:
 
     def __repr__(self):
         return (f"Injection(active={self.active}, stream={self.stream}, "
-                f"pos={self.pos}, delta={self.delta})")
+                f"pos={self.pos}, delta={self.delta}, seam={self.seam})")
 
 
 def random_injections(key: jax.Array, *, n: int, out_size: int,

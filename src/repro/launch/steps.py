@@ -25,7 +25,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.core import report as ftreport
+from repro.core.abft import new_grad_probe, probe_report
 from repro.core.ft_config import FTPolicy, OFF
+from repro.core.injection import SEAM_BWD_DA, SEAM_BWD_DB
 from repro.models import build_model
 from repro.models.common import ShardCtx, logits_local
 from repro.models.lm import Model
@@ -81,15 +83,21 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
     step - ``train_step(params, opt_state, batch, injection)`` - so a
     campaign rate model (e.g. ``campaign.errors.PoissonSchedule``) can
     drive WHOLE train steps with a fresh Injection spec per step instead
-    of drilling one isolated ft_dense call.  The spec is threaded into the
-    DMR-protected optimizer update; detections surface in
-    ``metrics["report"]`` like any other step-level SDC counter.
+    of drilling one isolated ft_dense call.  Slot routing is by seam
+    (``core.injection``): SEAM_FWD slots go to the DMR-protected optimizer
+    update, SEAM_BWD_DA / SEAM_BWD_DB slots are threaded into the model
+    (via ``ShardCtx.injection``) where they strike the cotangent GEMMs of
+    every protected matmul's custom_vjp backward rule.  Detections from
+    both directions surface in ``metrics["report"]``: forward/optimizer
+    counters ride the ordinary report plumbing, backward counters come
+    out of the grad probe's cotangent (``core.abft.probe_report``).
 
     ``opt_policy`` overrides the FT policy for the optimizer update only
     (default: ``ctx.policy``).  The update is the paper's Level-1 DMR
-    chain, which the current jax floor cannot differentiate through
-    (optimization_barrier has no AD rule), so drills that need gradients
-    run the model under "off" while still DMR-protecting the update.
+    chain; since the optimization_barrier JVP/transpose shim
+    (``repro.compat``) the whole step - hybrid model policy included -
+    differentiates end to end, so drills are free to protect the model
+    and the update simultaneously.
     """
     fsdp = model.cfg.param_shard == "fsdp"
     if fsdp:
@@ -97,14 +105,26 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
     opt_policy = opt_policy if opt_policy is not None else ctx.policy
 
     def _train_step(params, opt_state, batch, injection):
-        def loss_fn(p, mb):
-            loss, metrics = model.train_loss(p, mb, ctx)
+        # Backward-GEMM slots ride into the model through ShardCtx; the
+        # forward-seam slots stay with the optimizer update below (the
+        # pre-existing step-seam contract).  The grad probe is a
+        # differentiated argument whose cotangent accumulates the
+        # backward FT counters of EVERY protected matmul in the model.
+        model_inj = (None if injection is None
+                     else injection.keep_seams(SEAM_BWD_DA, SEAM_BWD_DB))
+        probe = new_grad_probe()
+
+        def loss_fn(p, mb, probe_):
+            ctx_step = dataclasses.replace(ctx, injection=model_inj,
+                                           grad_probe=probe_)
+            loss, metrics = model.train_loss(p, mb, ctx_step)
             return loss, metrics
 
-        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 2), has_aux=True)
 
         if n_micro == 1:
-            (loss, metrics), grads = grad_fn(params, batch)
+            (loss, metrics), (grads, probe_g) = grad_fn(params, batch,
+                                                        probe)
         else:
             def resh(x):
                 b = x.shape[0]
@@ -116,27 +136,31 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
             def body(carry, mb):
-                g_acc, loss_acc, met_acc = carry
-                (loss, metrics), g = grad_fn(params, mb)
+                g_acc, pg_acc, loss_acc, met_acc = carry
+                (loss, metrics), (g, pg) = grad_fn(params, mb, probe)
                 g_acc = jax.tree.map(
                     lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
                 met_acc = jax.tree.map(lambda a, b_: a + b_, met_acc,
                                        metrics)
-                return (g_acc, loss_acc + loss, met_acc), None
+                return (g_acc, pg_acc + pg, loss_acc + loss, met_acc), None
 
             # build a zero metrics tree by tracing one microbatch shape
             sample_metrics = jax.eval_shape(
-                lambda p, mb: loss_fn(p, mb)[1], params,
+                lambda p, mb: loss_fn(p, mb, probe)[1], params,
                 jax.tree.map(lambda x: jax.ShapeDtypeStruct(
                     x.shape[1:], x.dtype), micro))
             met0 = jax.tree.map(
                 lambda s: jnp.zeros(s.shape, s.dtype), sample_metrics)
-            (grads, loss, metrics), _ = lax.scan(
-                body, (zero_g, jnp.zeros(()), met0), micro)
+            (grads, probe_g, loss, metrics), _ = lax.scan(
+                body, (zero_g, new_grad_probe(), jnp.zeros(()), met0),
+                micro)
             grads = jax.tree.map(lambda g: g / n_micro, grads)
             loss = loss / n_micro
             metrics = jax.tree.map(lambda m: m / n_micro
                                    if m.dtype.kind == "f" else m, metrics)
+        # Backward-pass FT counters (probe cotangents are per-shard sums).
+        bwd_report = probe_report(
+            lax.psum(probe_g, ctx.data_axis + (ctx.model_axis,)))
 
         if pspecs is not None:
             grads = _reduce_replicated_grads(grads, pspecs, ctx)
@@ -180,7 +204,8 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
                 policy=opt_policy, ctx=ctx, injection=injection)
         metrics = dict(metrics)
         metrics["loss"] = loss
-        metrics["report"] = ftreport.merge(metrics.get("report"), rep)
+        metrics["report"] = ftreport.merge(metrics.get("report"), rep,
+                                           bwd_report)
         return params2, opt2, metrics
 
     if injection_seam:
@@ -190,6 +215,37 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
         return _train_step(params, opt_state, batch, None)
 
     return train_step
+
+
+def make_smoke_train_fn(model: Model, ctx: ShardCtx,
+                        opt_cfg: adamw.AdamWConfig, params, batch, *,
+                        opt_policy: Optional[FTPolicy] = None):
+    """jit(shard_map(train_step)) on the 1-device smoke mesh.
+
+    The injection-seam harness shared by the campaign rate drill and the
+    train-step tests: replicated param/opt/metric specs, the Injection
+    pytree as a fourth traced argument, plain (non-ZeRO) AdamW.  Returns
+    ``fn(params, opt_state, batch, injection)``; keeping the spec wiring
+    here means a new metrics key or Injection field is added in exactly
+    one place.
+    """
+    from repro.core.injection import Injection
+    from repro.launch.mesh import smoke_mesh
+
+    pspecs = param_specs(params)
+    ospecs = {"m": jax.tree.map(lambda _: P(), params),
+              "v": jax.tree.map(lambda _: P(), params),
+              "step": P()}
+    mspec = {"nll": P(), "aux": P(), "loss": P(),
+             "report": {k: P() for k in ftreport.FIELDS}}
+    ispec = jax.tree.map(lambda _: P(), Injection.none())
+    body = make_train_step(model, ctx, opt_cfg, zero=False,
+                           injection_seam=True, opt_policy=opt_policy)
+    return jax.jit(jax.shard_map(
+        body, mesh=smoke_mesh(),
+        in_specs=(pspecs, ospecs, batch_specs(batch, multi_pod=False),
+                  ispec),
+        out_specs=(pspecs, ospecs, mspec), check_vma=False))
 
 
 # -- serve --------------------------------------------------------------------

@@ -35,8 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import report as ftreport
-from repro.core.abft import ft_matmul_batched
-from repro.core.ft_dense import ft_dense
+from repro.core.ft_dense import ft_bmm, ft_dense
 from repro.models.common import (ShardCtx, apply_rope, dense_init, rms_norm,
                                  split_keys)
 
@@ -137,7 +136,7 @@ def _qk_normalize(q, k, p, ctx):
     return q, k, reps
 
 
-def _scores_ctx(q, k, v, mask, policy, protect):
+def _scores_ctx(q, k, v, mask, ctx, protect):
     """One chunk pair: softmax(q k^T / sqrt(dh) + mask) v with running stats.
 
     q: (B, qc, H, dh) k/v: (B, kc, H, dh) mask: (qc, kc) or None.
@@ -151,9 +150,12 @@ def _scores_ctx(q, k, v, mask, policy, protect):
         kb = jnp.moveaxis(k, 2, 1).astype(jnp.float32)
         # Batched contractions hit the kernel's native batch grid: one
         # pallas_call per chunk pair, every (batch, head) slice its own
-        # verification interval.
-        s, rep1 = ft_matmul_batched(qb, jnp.swapaxes(kb, -1, -2),
-                                    policy=policy)
+        # verification interval.  The _diff wrapper keeps the score /
+        # context products differentiable (cotangent GEMMs are ABFT
+        # intervals too) so protect_attention composes with training;
+        # the step's injection / grad probe ride along like every other
+        # protected matmul (backward counters reach metrics["report"]).
+        s, rep1 = ft_bmm(qb, jnp.swapaxes(kb, -1, -2), ctx=ctx)
         rep = ftreport.merge(rep, rep1)
     else:
         s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
@@ -166,7 +168,7 @@ def _scores_ctx(q, k, v, mask, policy, protect):
     l = jnp.sum(e, axis=-1)                                  # (B,H,qc)
     if protect:
         vb = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
-        acc, rep2 = ft_matmul_batched(e, vb, policy=policy)
+        acc, rep2 = ft_bmm(e, vb, ctx=ctx)
         rep = ftreport.merge(rep, rep2)
     else:
         acc = jnp.einsum("bhqk,bkhd->bhqd", e, v.astype(jnp.float32))
@@ -205,7 +207,7 @@ def chunked_attention(q, k, v, cfg: AttnCfg, ctx: ShardCtx, *,
                 mask = None
             skip = cfg.causal and False  # masks handle it; keep full scan
             a2, m2, l2, rep2 = _scores_ctx(qblk, kblk, vblk, mask,
-                                           ctx.policy, protect)
+                                           ctx, protect)
             m_new = jnp.maximum(m, m2)
             c1 = jnp.exp(m - m_new)
             c2 = jnp.exp(m2 - m_new)
@@ -242,9 +244,9 @@ def mha(p: Dict[str, Any], x: jax.Array, positions: jax.Array,
     dh = cfg.head_dim
     src = memory if memory is not None else x
 
-    q, r1 = ft_dense(x, p["wq"], policy=ctx.policy)
-    k, r2 = ft_dense(src, p["wk"], policy=ctx.policy)
-    v, r3 = ft_dense(src, p["wv"], policy=ctx.policy)
+    q, r1 = ft_dense(x, p["wq"], ctx=ctx)
+    k, r2 = ft_dense(src, p["wk"], ctx=ctx)
+    v, r3 = ft_dense(src, p["wv"], ctx=ctx)
     q = _heads(q, H_loc, dh)
     k = _heads(k, nkv_loc, dh)
     v = _heads(v, nkv_loc, dh)
@@ -262,7 +264,7 @@ def mha(p: Dict[str, Any], x: jax.Array, positions: jax.Array,
                                                   and cfg.causal),
                               ctx, protect=protect_attention)
     o = o.reshape(B, S, H_loc * dh)
-    y, r5 = ft_dense(o, p["wo"], policy=ctx.policy)
+    y, r5 = ft_dense(o, p["wo"], ctx=ctx)
     y = lax.psum(y, ctx.model_axis)                          # row-parallel
     return y, ftreport.merge(r1, r2, r3, r4, r5, *qk_reps)
 
@@ -295,9 +297,9 @@ def mha_decode(p: Dict[str, Any], x: jax.Array, pos: jax.Array,
     nkv_loc = kv_expanded(cfg, ctx.model_size) // ctx.model_size
     dh = cfg.head_dim
 
-    q, r1 = ft_dense(x, p["wq"], policy=ctx.policy)
-    k, r2 = ft_dense(x, p["wk"], policy=ctx.policy)
-    v, r3 = ft_dense(x, p["wv"], policy=ctx.policy)
+    q, r1 = ft_dense(x, p["wq"], ctx=ctx)
+    k, r2 = ft_dense(x, p["wk"], ctx=ctx)
+    v, r3 = ft_dense(x, p["wv"], ctx=ctx)
     q = _heads(q, H_loc, dh)
     k = _heads(k, nkv_loc, dh)
     v = _heads(v, nkv_loc, dh)
@@ -367,6 +369,6 @@ def mha_decode(p: Dict[str, Any], x: jax.Array, pos: jax.Array,
         l = lax.psum(l * c, ctx.data_axis)
     o = acc / jnp.maximum(l[..., None], 1e-30)
     o = jnp.moveaxis(o, 1, 2).reshape(B, 1, H_loc * dh).astype(x.dtype)
-    y, r4 = ft_dense(o, p["wo"], policy=ctx.policy)
+    y, r4 = ft_dense(o, p["wo"], ctx=ctx)
     y = lax.psum(y, ctx.model_axis)
     return y, new_cache, ftreport.merge(r1, r2, r3, r4, *qk_reps)

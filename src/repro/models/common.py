@@ -45,6 +45,13 @@ class ShardCtx:
     # parameter layout this program was sharded with (None = follow cfg):
     # "tp" | "fsdp" | "expert_tp"
     param_mode: str = None
+    # per-step fault seam: the train-step builder rebinds these two fields
+    # (dataclasses.replace inside the traced step) so every ft_dense/ft_bmm
+    # in the model sees the step's Injection spec (backward-GEMM slots) and
+    # the shared grad probe whose cotangent accumulates the backward FT
+    # counters.  None (the default) = clean, probe-less execution.
+    injection: Optional[Any] = None
+    grad_probe: Optional[Any] = None
 
     @property
     def axis_index(self):

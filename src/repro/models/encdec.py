@@ -153,8 +153,8 @@ def build_encdec(cfg: ArchConfig) -> Model:
             // ctx.model_size
 
         def cross_kv(lp):
-            k, _ = ft_dense(memory, lp["cross"]["wk"], policy=ctx.policy)
-            v, _ = ft_dense(memory, lp["cross"]["wv"], policy=ctx.policy)
+            k, _ = ft_dense(memory, lp["cross"]["wk"], ctx=ctx)
+            v, _ = ft_dense(memory, lp["cross"]["wv"], ctx=ctx)
             S_src = memory.shape[1]
             return {"k": k.reshape(batch_loc, S_src, nkv_loc, cfg.dh),
                     "v": v.reshape(batch_loc, S_src, nkv_loc, cfg.dh)}
@@ -171,7 +171,7 @@ def build_encdec(cfg: ArchConfig) -> Model:
         H_loc = cfg.n_heads // ctx.model_size
         nkv_loc = cross_kv["k"].shape[2]
         dh = cfg.dh
-        q, r1 = ft_dense(x, lp["wq"], policy=ctx.policy)
+        q, r1 = ft_dense(x, lp["wq"], ctx=ctx)
         q = q.reshape(B, 1, H_loc, dh)
         group = H_loc // nkv_loc
         kk = jnp.repeat(cross_kv["k"], group, axis=2)
@@ -181,7 +181,7 @@ def build_encdec(cfg: ArchConfig) -> Model:
         w = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhqk,bkhd->bqhd", w, vv.astype(jnp.float32))
         o = o.reshape(B, 1, H_loc * dh).astype(x.dtype)
-        y, r2 = ft_dense(o, lp["wo"], policy=ctx.policy)
+        y, r2 = ft_dense(o, lp["wo"], ctx=ctx)
         return lax.psum(y, ctx.model_axis), ftreport.merge(r1, r2)
 
     def decode_step(params, cache, tokens, pos, ctx: ShardCtx):

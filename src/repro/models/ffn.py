@@ -34,12 +34,12 @@ def ffn(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx, *,
     if "w_gate" in p:
         # One fused GEMM interval for gate|up: x streamed once.
         w_cat = jnp.concatenate([p["w_gate"], p["w_up"]], axis=1)
-        gu, r1 = ft_dense(x, w_cat, policy=ctx.policy)
+        gu, r1 = ft_dense(x, w_cat, ctx=ctx)
         f_loc = p["w_gate"].shape[1]
         h = f(gu[..., :f_loc]) * gu[..., f_loc:]
     else:
-        h, r1 = ft_dense(x, p["w_up"], policy=ctx.policy)
+        h, r1 = ft_dense(x, p["w_up"], ctx=ctx)
         h = f(h)
-    y, r2 = ft_dense(h, p["w_down"], policy=ctx.policy)
+    y, r2 = ft_dense(h, p["w_down"], ctx=ctx)
     y = lax.psum(y, ctx.model_axis)
     return y, ftreport.merge(r1, r2)

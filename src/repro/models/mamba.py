@@ -124,16 +124,16 @@ def mamba_block(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx,
     ds, dtr = cfg.d_state, cfg.dtr
 
     w_in = jnp.concatenate([p["w_in_x"], p["w_in_z"]], axis=1)
-    xz, r1 = ft_dense(x, w_in, policy=ctx.policy)          # one ABFT interval
+    xz, r1 = ft_dense(x, w_in, ctx=ctx)          # one ABFT interval
     xs, z = jnp.split(xz, 2, axis=-1)                      # (B,S,di_loc) each
     xs = _causal_conv(xs, p["conv_w"], p["conv_b"])
     xs = jax.nn.silu(xs)
 
     # dt/B/C from sharded channels: row-parallel + psum (small output).
-    dbc, r2 = ft_dense(xs, p["w_xdbc"], policy=ctx.policy)
+    dbc, r2 = ft_dense(xs, p["w_xdbc"], ctx=ctx)
     dbc = lax.psum(dbc, ctx.model_axis)
     dt_low, B_t, C_t = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
-    dt, r3 = ft_dense(dt_low, p["w_dt"], policy=ctx.policy)
+    dt, r3 = ft_dense(dt_low, p["w_dt"], ctx=ctx)
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + p["dt_bias"][None, None, :])    # (B,S,di_loc)
 
@@ -147,7 +147,7 @@ def mamba_block(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx,
     y = jnp.einsum("bscn,bsn->bsc", h_all, C_t.astype(jnp.float32))
     y = y + p["D"][None, None, :] * xs.astype(jnp.float32)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out, r5 = ft_dense(y, p["w_out"], policy=ctx.policy)
+    out, r5 = ft_dense(y, p["w_out"], ctx=ctx)
     out = lax.psum(out, ctx.model_axis)
     return out, ftreport.merge(r1, r2, r3, r4, r5)
 
@@ -167,7 +167,7 @@ def mamba_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
     ds, dtr = cfg.d_state, cfg.dtr
 
     w_in = jnp.concatenate([p["w_in_x"], p["w_in_z"]], axis=1)
-    xz, r1 = ft_dense(x, w_in, policy=ctx.policy)
+    xz, r1 = ft_dense(x, w_in, ctx=ctx)
     xs, z = jnp.split(xz, 2, axis=-1)                      # (B,1,di_loc)
     conv_in = jnp.concatenate([cache["conv"], xs], axis=1)  # (B,K,di_loc)
     new_conv = conv_in[:, 1:]
@@ -176,10 +176,10 @@ def mamba_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
           + p["conv_b"].astype(jnp.float32))[:, None, :]
     xs = jax.nn.silu(xs).astype(x.dtype)
 
-    dbc, r2 = ft_dense(xs, p["w_xdbc"], policy=ctx.policy)
+    dbc, r2 = ft_dense(xs, p["w_xdbc"], ctx=ctx)
     dbc = lax.psum(dbc, ctx.model_axis)
     dt_low, B_t, C_t = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
-    dt, r3 = ft_dense(dt_low, p["w_dt"], policy=ctx.policy)
+    dt, r3 = ft_dense(dt_low, p["w_dt"], ctx=ctx)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
 
     A = -jnp.exp(p["A_log"])
@@ -190,6 +190,6 @@ def mamba_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
     y = jnp.einsum("bcn,bn->bc", h, C_t[:, 0].astype(jnp.float32))
     y = y + p["D"][None] * xs[:, 0].astype(jnp.float32)
     y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None, :]
-    out, r4 = ft_dense(y.astype(x.dtype), p["w_out"], policy=ctx.policy)
+    out, r4 = ft_dense(y.astype(x.dtype), p["w_out"], ctx=ctx)
     out = lax.psum(out, ctx.model_axis)
     return out, {"conv": new_conv, "ssm": h}, ftreport.merge(r1, r2, r3, r4)

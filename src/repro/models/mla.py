@@ -62,18 +62,18 @@ def _project(p, x, positions, cfg: MLACfg, ctx: ShardCtx):
     B, S, D = x.shape
     H_loc = cfg.n_heads // ctx.model_size
 
-    q, r1 = ft_dense(x, p["w_q"], policy=ctx.policy)
+    q, r1 = ft_dense(x, p["w_q"], ctx=ctx)
     q = q.reshape(B, S, H_loc, cfg.dh_qk)
     q_nope, q_rope = jnp.split(q, [cfg.dh_nope], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    c_kv, r2 = ft_dense(x, p["w_dkv"], policy=ctx.policy)        # (B,S,lora)
-    k_rope, r3 = ft_dense(x, p["w_krope"], policy=ctx.policy)    # (B,S,dr)
+    c_kv, r2 = ft_dense(x, p["w_dkv"], ctx=ctx)        # (B,S,lora)
+    k_rope, r3 = ft_dense(x, p["w_krope"], ctx=ctx)    # (B,S,dr)
     k_rope = apply_rope(k_rope[:, :, None, :], positions,
                         cfg.rope_theta)                          # (B,S,1,dr)
 
-    k_nope, r4 = ft_dense(c_kv, p["w_uk"], policy=ctx.policy)
-    v, r5 = ft_dense(c_kv, p["w_uv"], policy=ctx.policy)
+    k_nope, r4 = ft_dense(c_kv, p["w_uk"], ctx=ctx)
+    v, r5 = ft_dense(c_kv, p["w_uv"], ctx=ctx)
     k_nope = k_nope.reshape(B, S, H_loc, cfg.dh_nope)
     v = v.reshape(B, S, H_loc, cfg.dh_v)
 
@@ -101,7 +101,7 @@ def mla(p: Dict[str, Any], x: jax.Array, positions: jax.Array,
     o, r_attn = chunked_attention(q, k, v_p, acfg, ctx,
                                   protect=protect_attention)
     o = o[..., :cfg.dh_v].reshape(B, S, H_loc * cfg.dh_v)
-    y, r_o = ft_dense(o, p["w_o"], policy=ctx.policy)
+    y, r_o = ft_dense(o, p["w_o"], ctx=ctx)
     y = lax.psum(y, ctx.model_axis)
     return y, ftreport.merge(rep, r_attn, r_o)
 
@@ -120,14 +120,14 @@ def mla_decode(p: Dict[str, Any], x: jax.Array, pos: jax.Array,
     H_loc = cfg.n_heads // ctx.model_size
     posv = jnp.full((B, 1), pos, jnp.int32)
 
-    q, r1 = ft_dense(x, p["w_q"], policy=ctx.policy)
+    q, r1 = ft_dense(x, p["w_q"], ctx=ctx)
     q = q.reshape(B, 1, H_loc, cfg.dh_qk)
     q_nope, q_rope = jnp.split(q, [cfg.dh_nope], axis=-1)
     q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
 
-    c_new, r2 = ft_dense(x, p["w_dkv"], policy=ctx.policy)
-    kr_new, r3 = ft_dense(x, p["w_krope"], policy=ctx.policy)
+    c_new, r2 = ft_dense(x, p["w_dkv"], ctx=ctx)
+    kr_new, r3 = ft_dense(x, p["w_krope"], ctx=ctx)
     kr_new = apply_rope(kr_new[:, :, None, :], posv, cfg.rope_theta
                         )[:, :, 0, :]
     ckv = lax.dynamic_update_slice(cache["ckv"],
@@ -138,8 +138,8 @@ def mla_decode(p: Dict[str, Any], x: jax.Array, pos: jax.Array,
                                      (0, pos, 0))
 
     # decompress the whole cache for this shard's heads
-    k_nope, r4 = ft_dense(ckv, p["w_uk"], policy=ctx.policy)
-    v, r5 = ft_dense(ckv, p["w_uv"], policy=ctx.policy)
+    k_nope, r4 = ft_dense(ckv, p["w_uk"], ctx=ctx)
+    v, r5 = ft_dense(ckv, p["w_uv"], ctx=ctx)
     S_max = ckv.shape[1]
     k_nope = k_nope.reshape(B, S_max, H_loc, cfg.dh_nope)
     v = v.reshape(B, S_max, H_loc, cfg.dh_v)
@@ -156,7 +156,7 @@ def mla_decode(p: Dict[str, Any], x: jax.Array, pos: jax.Array,
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
     o = o.reshape(B, 1, H_loc * cfg.dh_v).astype(x.dtype)
-    y, r6 = ft_dense(o, p["w_o"], policy=ctx.policy)
+    y, r6 = ft_dense(o, p["w_o"], ctx=ctx)
     y = lax.psum(y, ctx.model_axis)
     return y, {"ckv": ckv, "krope": krope}, ftreport.merge(
         r1, r2, r3, r4, r5, r6)

@@ -170,16 +170,16 @@ def mlstm_block(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx,
     H = cfg.n_heads
     # up proj column-sharded, then gathered: q/k/gates need the full d_inner.
     w_up = jnp.concatenate([p["w_up_x"], p["w_up_z"]], axis=1)
-    xz, r1 = ft_dense(x, w_up, policy=ctx.policy)
+    xz, r1 = ft_dense(x, w_up, ctx=ctx)
     xz = lax.all_gather(xz, ctx.model_axis, axis=-1, tiled=True)
     # gathered layout is (shard, [x_loc | z_loc]): regroup to full x | z
     ms = ctx.model_size
     xz = xz.reshape(B, S, ms, 2, -1)
     xi = xz[:, :, :, 0, :].reshape(B, S, -1)                 # (B,S,di) repl.
     z = xz[:, :, :, 1, :].reshape(B, S, -1)
-    q, r2 = ft_dense(xi, p["w_q"], policy=ctx.policy)        # replicated
-    k, r3 = ft_dense(xi, p["w_k"], policy=ctx.policy)
-    v, r4 = ft_dense(xi, p["w_v"], policy=ctx.policy)        # dv sharded
+    q, r2 = ft_dense(xi, p["w_q"], ctx=ctx)        # replicated
+    k, r3 = ft_dense(xi, p["w_k"], ctx=ctx)
+    v, r4 = ft_dense(xi, p["w_v"], ctx=ctx)        # dv sharded
     dv_loc = v.shape[-1] // H
     q = q.reshape(B, S, H, cfg.dh_qk)
     k = k.reshape(B, S, H, cfg.dh_qk)
@@ -198,7 +198,7 @@ def mlstm_block(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx,
         z.shape[-1] // ctx.model_size, axis=-1)
     h = (h * jax.nn.silu(z_loc.astype(jnp.float32))).astype(x.dtype)
     h = h * p["gamma"][None, None, :]
-    out, r5 = ft_dense(h, p["w_down"], policy=ctx.policy)    # row-parallel
+    out, r5 = ft_dense(h, p["w_down"], ctx=ctx)    # row-parallel
     out = lax.psum(out, ctx.model_axis)
     return out, ftreport.merge(r1, r2, r3, r4, r5)
 
@@ -216,16 +216,16 @@ def mlstm_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
     B = x.shape[0]
     H = cfg.n_heads
     w_up = jnp.concatenate([p["w_up_x"], p["w_up_z"]], axis=1)
-    xz, r1 = ft_dense(x, w_up, policy=ctx.policy)
+    xz, r1 = ft_dense(x, w_up, ctx=ctx)
     xz = lax.all_gather(xz, ctx.model_axis, axis=-1, tiled=True)
     ms = ctx.model_size
     B1 = x.shape[0]
     xz = xz.reshape(B1, 1, ms, 2, -1)
     xi = xz[:, :, :, 0, :].reshape(B1, 1, -1)                # (B,1,di)
     z = xz[:, :, :, 1, :].reshape(B1, 1, -1)
-    q, r2 = ft_dense(xi, p["w_q"], policy=ctx.policy)
-    k, r3 = ft_dense(xi, p["w_k"], policy=ctx.policy)
-    v, r4 = ft_dense(xi, p["w_v"], policy=ctx.policy)
+    q, r2 = ft_dense(xi, p["w_q"], ctx=ctx)
+    k, r3 = ft_dense(xi, p["w_k"], ctx=ctx)
+    v, r4 = ft_dense(xi, p["w_v"], ctx=ctx)
     dv_loc = v.shape[-1] // H
     q = q.reshape(B, H, cfg.dh_qk).astype(jnp.float32) / jnp.sqrt(cfg.dh_qk)
     k = k.reshape(B, H, cfg.dh_qk).astype(jnp.float32)
@@ -250,7 +250,7 @@ def mlstm_decode(p: Dict[str, Any], x: jax.Array, cache: Dict[str, Any],
         z.shape[-1] // ctx.model_size, axis=-1)
     h = (h * jax.nn.silu(z_loc.astype(jnp.float32)))
     h = h.astype(x.dtype) * p["gamma"][None, None, :]
-    out, r5 = ft_dense(h, p["w_down"], policy=ctx.policy)
+    out, r5 = ft_dense(h, p["w_down"], ctx=ctx)
     out = lax.psum(out, ctx.model_axis)
     new_cache = {"C": C, "n": nv, "m": m_new}
     return out, new_cache, ftreport.merge(r1, r2, r3, r4, r5)
@@ -330,7 +330,7 @@ def slstm_block(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx,
     B, S, D = x.shape
     H = cfg.n_heads
     dh = D // H
-    pre, r1 = ft_dense(x, p["w_in"], policy=ctx.policy)    # col-sharded
+    pre, r1 = ft_dense(x, p["w_in"], ctx=ctx)    # col-sharded
     pre = lax.all_gather(pre, ctx.model_axis, axis=-1, tiled=True)
     pre = pre.reshape(B, S, 4, D).astype(jnp.float32) \
         + p["b"][None, None, :, :]
@@ -343,12 +343,12 @@ def slstm_block(p: Dict[str, Any], x: jax.Array, ctx: ShardCtx,
                         vote=ctx.policy.dmr_vote)
         rep = dmr_report(v)                                # DMR spot-check
     h = h.reshape(B, S, D).astype(x.dtype)
-    y, r2 = ft_dense(h, p["w_out"], policy=ctx.policy)     # w_out replicated
+    y, r2 = ft_dense(h, p["w_out"], ctx=ctx)     # w_out replicated
     # gated FFN (pf=4/3), column->row parallel
-    g, r3 = ft_dense(y, p["f_gate"], policy=ctx.policy)
-    u, r4 = ft_dense(y, p["f_up"], policy=ctx.policy)
+    g, r3 = ft_dense(y, p["f_gate"], ctx=ctx)
+    u, r4 = ft_dense(y, p["f_up"], ctx=ctx)
     f = jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
-    out, r5 = ft_dense(f.astype(x.dtype), p["f_down"], policy=ctx.policy)
+    out, r5 = ft_dense(f.astype(x.dtype), p["f_down"], ctx=ctx)
     out = lax.psum(out, ctx.model_axis)
     return out, ftreport.merge(r1, rep, r2, r3, r4, r5)
 
@@ -366,18 +366,18 @@ def slstm_decode(p: Dict[str, Any], x: jax.Array, cache, ctx: ShardCtx,
     D = x.shape[-1]
     H = cfg.n_heads
     dh = D // H
-    pre, r1 = ft_dense(x, p["w_in"], policy=ctx.policy)
+    pre, r1 = ft_dense(x, p["w_in"], ctx=ctx)
     pre = lax.all_gather(pre, ctx.model_axis, axis=-1, tiled=True)
     pre = pre.reshape(B, 1, 4, D).astype(jnp.float32) + p["b"][None, None]
     pre = pre.reshape(B, 1, 4, H, dh)
     st = (cache["c"], cache["n"], cache["h"], cache["m"])
     h, st = slstm_cell(p, pre, cfg, state=st)
     h = h.reshape(B, 1, D).astype(x.dtype)
-    y, r2 = ft_dense(h, p["w_out"], policy=ctx.policy)
-    g, r3 = ft_dense(y, p["f_gate"], policy=ctx.policy)
-    u, r4 = ft_dense(y, p["f_up"], policy=ctx.policy)
+    y, r2 = ft_dense(h, p["w_out"], ctx=ctx)
+    g, r3 = ft_dense(y, p["f_gate"], ctx=ctx)
+    u, r4 = ft_dense(y, p["f_up"], ctx=ctx)
     f = jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
-    out, r5 = ft_dense(f.astype(x.dtype), p["f_down"], policy=ctx.policy)
+    out, r5 = ft_dense(f.astype(x.dtype), p["f_down"], ctx=ctx)
     out = lax.psum(out, ctx.model_axis)
     new_cache = {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
     return out, new_cache, ftreport.merge(r1, r2, r3, r4, r5)

@@ -25,7 +25,8 @@ from jax import lax
 from repro.core import report as ftreport
 from repro.core.dmr import dmr_compute, dmr_report
 from repro.core.ft_config import FTPolicy, OFF
-from repro.core.injection import DMR_STREAM_1, DMR_STREAM_2, Injection
+from repro.core.injection import (DMR_STREAM_1, DMR_STREAM_2, SEAM_FWD,
+                                  Injection)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,8 +85,13 @@ def apply_updates(params, grads, state, cfg: AdamWConfig, *,
     ``injection`` is the train-step fault seam: DMR-stream errors land in
     the duplicated update arithmetic (every leaf is one DMR interval, so a
     spec whose position fits a leaf's stacked (3, n) update fires there)
-    and are detected / voted out when the policy runs DMR.
+    and are detected / voted out when the policy runs DMR.  Only
+    forward-seam slots apply - SEAM_BWD_* slots address the model's
+    cotangent GEMMs (launch/steps.py routes them there), never the
+    optimizer.
     """
+    if injection is not None:
+        injection = injection.for_seam(SEAM_FWD)
     step = state["step"] + 1
     lr = schedule(cfg, step)
     gn = grad_norm if grad_norm is not None else global_norm(grads, ctx)
@@ -170,8 +176,11 @@ def zero_apply(params, grads, state, cfg: AdamWConfig, ctx, *,
     params/grads: local TP shards (identical across dp); state m/v: this dp
     shard's (n_pad/dp,) slices.  psum_scatter sums gradients across dp while
     handing each shard its slice; all_gather rebuilds updated params.
-    ``injection``: see ``apply_updates`` - the per-step DMR fault seam.
+    ``injection``: see ``apply_updates`` - the per-step DMR fault seam
+    (forward-seam slots only).
     """
+    if injection is not None:
+        injection = injection.for_seam(SEAM_FWD)
     axes = ctx.data_axis
     step = state["step"] + 1
     lr = schedule(cfg, step)

@@ -220,22 +220,18 @@ def test_train_step_injection_seam_detects_and_holds_trajectory():
     """make_train_step(injection_seam=True): a per-step Injection lands in
     the DMR-protected optimizer update, is detected in step metrics, and
     the vote keeps params on the clean trajectory."""
-    from jax.sharding import PartitionSpec as P
-
     from repro.configs import get_config
-    from repro.core import FTPolicy, report as ftreport
-    from repro.launch.mesh import smoke_mesh
-    from repro.launch.steps import make_ctx, make_train_step
-    from repro.models import build_model, param_specs
-    from repro.models.specs import batch_specs
+    from repro.core import FTPolicy
+    from repro.launch.steps import make_ctx, make_smoke_train_fn
+    from repro.models import build_model
     from repro.optim import adamw
 
-    # Model forward under "off" (the DMR barrier has no AD rule on this
-    # jax floor); the optimizer update runs the DMR-protected chain.
+    # Model forward under "off" to isolate the OPTIMIZER seam (hybrid
+    # model training is covered by tests/test_grad_ft.py); the update
+    # runs the DMR-protected chain.
     opt_policy = FTPolicy(mode="hybrid", fused=False)
     cfg = get_config("granite_8b").smoke()
     model = build_model(cfg)
-    mesh = smoke_mesh()
     ctx = make_ctx(multi_pod=False, data_size=1, model_size=1)
     params = model.init(jax.random.PRNGKey(0), 1)
     opt_state = adamw.init_state(params)
@@ -243,20 +239,8 @@ def test_train_step_injection_seam_detects_and_holds_trajectory():
                                           cfg.vocab),
              "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
                                           cfg.vocab)}
-    pspecs = param_specs(params)
-    ospecs = {"m": jax.tree.map(lambda _: P(), params),
-              "v": jax.tree.map(lambda _: P(), params),
-              "step": P()}
-    mspec = {"nll": P(), "aux": P(), "loss": P(),
-             "report": {k: P() for k in ftreport.FIELDS}}
-    ispec = jax.tree.map(lambda _: P(), Injection.none())
-    body = make_train_step(model, ctx, adamw.AdamWConfig(), zero=False,
-                           injection_seam=True, opt_policy=opt_policy)
-    fn = jax.jit(jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(pspecs, ospecs, batch_specs(batch, multi_pod=False),
-                  ispec),
-        out_specs=(pspecs, ospecs, mspec), check_vma=False))
+    fn = make_smoke_train_fn(model, ctx, adamw.AdamWConfig(), params, batch,
+                             opt_policy=opt_policy)
 
     inj = Injection.at(stream=DMR_STREAM_1, pos=3, delta=2.0)
     p_inj, _, metrics = fn(params, opt_state, batch, inj)

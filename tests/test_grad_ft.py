@@ -1,0 +1,242 @@
+"""Differentiable fault tolerance: the AD surface of PR 3.
+
+Covers the ISSUE acceptance criteria:
+  - gradients computed under a dmr_on / hybrid policy RUN (the
+    optimization_barrier JVP/transpose compat shim) and match a no-FT
+    float64 oracle;
+  - an injected backward-GEMM fault (seam SEAM_BWD_*) is located and
+    corrected by the custom_vjp backward rule: grads match the oracle and
+    a faulted train step holds params on the clean trajectory to within
+    checksum rounding (ABFT subtracts the MEASURED residual, so bit-equal
+    is fundamentally a DMR-vote property - see the optimizer-seam test in
+    test_fused_epilogue.py for that guarantee);
+  - jaxpr assertion: the backward GEMMs execute through the ABFT Pallas
+    kernel (pallas_calls, not fallback host-level dot_general);
+  - the bf16 gradient path flows through the same machinery;
+  - backward FT counters surface through the grad probe's cotangent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HYBRID, HYBRID_UNFUSED, OFF, Injection,
+                        ft_matmul_diff, new_grad_probe, probe_report)
+from repro.core.dmr import dmr_compute
+from repro.core.ft_config import FTPolicy
+from repro.core.ft_dense import ft_dense
+from repro.core.injection import (ABFT_ACC, DMR_STREAM_1, SEAM_BWD_DA,
+                                  SEAM_BWD_DB)
+
+M, K, N = 48, 40, 56
+
+
+def _ops(dtype=jnp.float32, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    A = jax.random.normal(k1, (M, K), jnp.float32).astype(dtype)
+    B = jax.random.normal(k2, (K, N), jnp.float32).astype(dtype)
+    return A, B
+
+
+def _seed_mat():
+    return ((jnp.arange(M * N, dtype=jnp.float32) % 7 - 3) / 3.0
+            ).reshape(M, N)
+
+
+def _np(x):
+    return np.asarray(jnp.asarray(x, jnp.float32), np.float64)
+
+
+def _grad_fn(policy):
+    S = _seed_mat()
+
+    def loss(a, b, probe, inj):
+        C, _ = ft_matmul_diff(a, b, policy=policy, injection=inj,
+                              grad_probe=probe)
+        return jnp.sum(C.astype(jnp.float32) * S)
+
+    return jax.jit(jax.grad(loss, argnums=(0, 1, 2))), S
+
+
+def _oracle_grads(A, B):
+    S = np.asarray(_seed_mat(), np.float64)
+    return S @ _np(B).T, _np(A).T @ S
+
+
+# -- gradients match a no-FT f64 oracle --------------------------------------
+@pytest.mark.parametrize("policy", [HYBRID, HYBRID_UNFUSED,
+                                    FTPolicy(mode="dmr", fused=False)])
+def test_clean_grads_match_oracle(policy):
+    A, B = _ops()
+    fn, _ = _grad_fn(policy)
+    dA, dB, dp = fn(A, B, new_grad_probe(), Injection.none())
+    dA_want, dB_want = _oracle_grads(A, B)
+    np.testing.assert_allclose(_np(dA), dA_want, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(_np(dB), dB_want, rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(dp), 0.0)  # no bwd detections
+
+
+def test_dmr_combinator_differentiates():
+    """jax.grad THROUGH dmr_compute runs (barrier AD shim) and a voted-out
+    forward fault leaves the gradients oracle-clean."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (257,), jnp.float32)
+
+    def loss(x_, inj):
+        v = dmr_compute(lambda a: 2.5 * a, x_, injection=inj)
+        return 0.5 * jnp.sum(v.y ** 2), v.detected
+
+    g = jax.jit(jax.grad(loss, has_aux=True))
+    want = 2.5 * (2.5 * _np(x))
+    dx, det = g(x, Injection.none())
+    np.testing.assert_allclose(_np(dx), want, rtol=1e-6)
+    assert int(det) == 0
+    dx, det = g(x, Injection.at(stream=DMR_STREAM_1, pos=17, delta=9.0))
+    assert int(det) >= 1
+    np.testing.assert_allclose(_np(dx), want, rtol=1e-6)
+
+
+# -- backward-GEMM fault injection -------------------------------------------
+@pytest.mark.parametrize("seam,target", [(SEAM_BWD_DA, "dA"),
+                                         (SEAM_BWD_DB, "dB")])
+@pytest.mark.parametrize("policy", [HYBRID, HYBRID_UNFUSED])
+def test_bwd_fault_corrected_and_counted(policy, seam, target):
+    A, B = _ops()
+    fn, _ = _grad_fn(policy)
+    inj = Injection.at(stream=ABFT_ACC, pos=123, delta=64.0, seam=seam)
+    dA, dB, dp = fn(A, B, new_grad_probe(), inj)
+    dA_want, dB_want = _oracle_grads(A, B)
+    np.testing.assert_allclose(_np(dA), dA_want, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(_np(dB), dB_want, rtol=1e-5, atol=1e-3)
+    rep = probe_report(dp)
+    assert int(rep["abft_detected"]) >= 1
+    assert int(rep["abft_corrected"]) >= 1
+
+
+def test_bwd_fault_escapes_without_protection():
+    """Control: same backward fault under policy off corrupts the grads."""
+    A, B = _ops()
+    fn, _ = _grad_fn(OFF)
+    inj = Injection.at(stream=ABFT_ACC, pos=123, delta=64.0,
+                       seam=SEAM_BWD_DA)
+    dA, _, dp = fn(A, B, new_grad_probe(), inj)
+    dA_want, _ = _oracle_grads(A, B)
+    assert np.abs(_np(dA) - dA_want).max() > 10.0
+    np.testing.assert_array_equal(np.asarray(dp), 0.0)
+
+
+# -- jaxpr: bwd GEMMs are pallas_calls, not dot_general -----------------------
+def _count_prims(jaxpr, name, *, enter_kernels=True):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        if not enter_kernels and eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for x in vs:
+                sub = getattr(x, "jaxpr", x if hasattr(x, "eqns") else None)
+                if sub is not None and hasattr(sub, "eqns"):
+                    n += _count_prims(sub, name,
+                                      enter_kernels=enter_kernels)
+    return n
+
+
+def test_backward_gemms_are_pallas_calls():
+    A, B = _ops()
+    S = _seed_mat()
+
+    def loss(a, b):
+        C, _ = ft_matmul_diff(a, b, policy=HYBRID)
+        return jnp.sum(C * S)
+
+    jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(A, B)
+    # fwd interval + dA interval + dB interval = 3 kernel launches
+    assert _count_prims(jaxpr.jaxpr, "pallas_call") == 3
+    assert _count_prims(jaxpr.jaxpr, "dot_general",
+                        enter_kernels=False) == 0
+
+
+# -- bf16 grad path -----------------------------------------------------------
+def test_bf16_grad_path():
+    A, B = _ops(jnp.bfloat16)
+    fn, _ = _grad_fn(HYBRID)
+    inj = Injection.at(stream=ABFT_ACC, pos=77,
+                       delta=float(8 * np.sqrt(N)), seam=SEAM_BWD_DA)
+    dA, dB, dp = fn(A, B, new_grad_probe(), inj)
+    assert dA.dtype == jnp.bfloat16 and dB.dtype == jnp.bfloat16
+    dA_want, dB_want = _oracle_grads(A, B)
+    np.testing.assert_allclose(_np(dA), dA_want, rtol=5e-2, atol=0.5)
+    np.testing.assert_allclose(_np(dB), dB_want, rtol=5e-2, atol=0.5)
+    assert int(probe_report(dp)["abft_detected"]) >= 1
+
+
+# -- probe accumulation across layers -----------------------------------------
+def test_probe_accumulates_across_calls():
+    """One probe threaded through two layers sums both layers' backward
+    counters (cotangent accumulation) - the train-step telemetry contract."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, K), jnp.float32)
+    w1 = jax.random.normal(jax.random.PRNGKey(6), (K, K), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(7), (K, N), jnp.float32)
+    inj = Injection.at(stream=ABFT_ACC, pos=5, delta=64.0,
+                       seam=SEAM_BWD_DB)
+
+    def loss(x_, probe):
+        h, _ = ft_dense(x_, w1, policy=HYBRID, injection=inj,
+                        grad_probe=probe)
+        y, _ = ft_dense(h, w2, policy=HYBRID, injection=inj,
+                        grad_probe=probe)
+        return jnp.sum(y)
+
+    dp = jax.jit(jax.grad(loss, argnums=1))(x, new_grad_probe())
+    rep = probe_report(dp)
+    # the same spec fires in BOTH layers' dB intervals (pos 5 fits both)
+    assert int(rep["abft_detected"]) >= 2
+    assert int(rep["abft_corrected"]) >= 2
+
+
+# -- whole train step under a differentiable hybrid policy --------------------
+def test_train_step_hybrid_policy_bwd_seam():
+    """make_train_step with the MODEL under a dmr_on hybrid policy: grads
+    run end to end (no missing-AD-rule error), a backward-seam fault is
+    detected through the probe counters in step metrics, and the ABFT
+    correction keeps params on the clean trajectory to within checksum
+    rounding (DMR's vote returns an exact stream, so optimizer-seam
+    drills ARE bit-equal - see test_fused_epilogue - but an ABFT
+    correction subtracts the MEASURED residual, i.e. the injected delta
+    plus the round-off drift of the checksum sums, so the repaired
+    gradient differs from clean at the last-ulp level)."""
+    from repro.configs import get_config
+    from repro.launch.steps import make_ctx, make_smoke_train_fn
+    from repro.models import build_model
+    from repro.optim import adamw
+
+    policy = FTPolicy(mode="hybrid", fused=False)
+    cfg = get_config("granite_8b").smoke()
+    model = build_model(cfg)
+    ctx = make_ctx(multi_pod=False, data_size=1, model_size=1,
+                   policy=policy)
+    params = model.init(jax.random.PRNGKey(0), 1)
+    opt_state = adamw.init_state(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                          cfg.vocab)}
+    fn = make_smoke_train_fn(model, ctx, adamw.AdamWConfig(), params, batch,
+                             opt_policy=policy)
+
+    inj = Injection.at(stream=ABFT_ACC, pos=3,
+                       delta=float(16 * np.sqrt(cfg.d_model)),
+                       seam=SEAM_BWD_DA)
+    p_inj, _, metrics = fn(params, opt_state, batch, inj)
+    p_cln, _, m_cln = fn(params, opt_state, batch, Injection.none())
+    assert int(metrics["report"]["abft_detected"]) >= 1
+    assert int(metrics["report"]["abft_corrected"]) >= 1
+    assert int(m_cln["report"]["abft_detected"]) == 0
+    # AdamW's m/sqrt(v) normalization can amplify an ulp-level gradient
+    # difference up to ~lr for near-zero-variance params, so the bound is
+    # a small fraction of lr (3e-4), not float eps.
+    for a, b in zip(jax.tree.leaves(p_inj), jax.tree.leaves(p_cln)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0, atol=2e-5)

@@ -1,0 +1,100 @@
+"""Docs consistency gate (``make docs-check``).
+
+Two checks, both hard failures:
+
+1. every relative markdown link in docs/*.md and README.md resolves to a
+   file that exists (anchors stripped; http(s)/mailto links skipped);
+2. every backtick-quoted dotted ``repro.*`` name in docs/architecture.md
+   resolves against the real tree: the longest module prefix must import,
+   and any trailing component must be an attribute of it.  This is what
+   keeps the protection-coverage map from naming modules that were
+   renamed or deleted.
+
+Run as ``python tools/check_docs.py`` from anywhere (src/ is put on the
+path explicitly, so the gate works outside make too).
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))   # location-independent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+MODULE_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+
+
+def _md_files() -> list:
+    docs = sorted(
+        os.path.join(ROOT, "docs", f)
+        for f in os.listdir(os.path.join(ROOT, "docs"))
+        if f.endswith(".md"))
+    return docs + [os.path.join(ROOT, "README.md")]
+
+
+def check_links() -> list:
+    errors = []
+    for path in _md_files():
+        base = os.path.dirname(path)
+        text = open(path).read()
+        for target in LINK_RE.findall(text):
+            target = target.strip()
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue                      # pure in-page anchor
+            resolved = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_modules() -> list:
+    arch = os.path.join(ROOT, "docs", "architecture.md")
+    names = sorted(set(MODULE_RE.findall(open(arch).read())))
+    errors = []
+    for name in names:
+        parts = name.split(".")
+        mod, attrs = None, []
+        probe = list(parts)
+        while probe:
+            try:
+                mod = importlib.import_module(".".join(probe))
+                break
+            except ImportError:
+                attrs.insert(0, probe.pop())
+        if mod is None:
+            errors.append(f"architecture.md: no such module `{name}`")
+            continue
+        obj = mod
+        for a in attrs:
+            if not hasattr(obj, a):
+                errors.append(f"architecture.md: `{name}` - "
+                              f"{obj.__name__ if hasattr(obj, '__name__') else obj}"
+                              f" has no attribute {a!r}")
+                break
+            obj = getattr(obj, a)
+    return names, errors
+
+
+def main() -> int:
+    link_errors = check_links()
+    names, mod_errors = check_modules()
+    for e in link_errors + mod_errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    n_links = sum(len(LINK_RE.findall(open(p).read())) for p in _md_files())
+    if link_errors or mod_errors:
+        print(f"docs-check: FAIL ({len(link_errors + mod_errors)} errors)",
+              file=sys.stderr)
+        return 1
+    print(f"docs-check: OK ({n_links} links, {len(names)} repro.* names "
+          f"verified)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
