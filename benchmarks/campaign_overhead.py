@@ -16,6 +16,12 @@ And a TRAIN-STEP mode: one fwd+bwd+update step of a small MLP under
 AND backward ABFT - the paper's <3.5% overhead claim, measured where it
 matters now that the backward pass runs through the same verified
 intervals.  Emitted as a second ``BENCH JSON`` line.
+
+And a COLLECTIVE mode: a gradient-tree all-reduce plus a ZeRO-style
+psum_scatter, bare (``lax.psum`` / ``lax.psum_scatter``) vs checksummed
+(``ft_psum`` / ``ft_psum_scatter`` under ``verify_collectives``) - the
+verification adds one scalar-vector psum and O(n) local sums against the
+collective's O(n) wire bytes.  Emitted as a third ``BENCH JSON`` line.
 """
 from __future__ import annotations
 
@@ -138,6 +144,61 @@ def bench_train_step() -> dict:
     }
 
 
+def bench_verified_collectives() -> dict:
+    """Bare vs checksummed gradient collectives on a shard_map'd axis.
+
+    Single-device in CI (the collective lowers to a copy, so the delta
+    IS the verification arithmetic - the worst case for relative
+    overhead); on a real mesh the wire time amortizes the same checksum
+    work.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import report as ftreport
+    from repro.core.ft_collectives import ft_psum, ft_psum_scatter
+    from repro.core.ft_config import FTPolicy, OFF
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rspec = {k: P() for k in ftreport.FIELDS}
+    # a gradient-tree-shaped payload: a few leaves of mixed sizes
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    tree = {f"w{i}": jax.random.normal(k, (256, 64), jnp.float32)
+            for i, k in enumerate(keys)}
+    scat = jax.random.normal(jax.random.PRNGKey(4),
+                             (n_dev, 4096), jnp.float32)
+    vc = FTPolicy(mode="hybrid", verify_collectives=True)
+
+    def make(policy):
+        def body(t, s):
+            rt, rep1 = ft_psum(t, "data", policy=policy)
+            rs, rep2 = ft_psum_scatter(s, "data", scatter_dimension=0,
+                                       tiled=False, policy=policy)
+            return rt, rs, ftreport.merge(rep1, rep2)
+
+        return jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(P(), P()),
+            out_specs=(jax.tree.map(lambda _: P(), tree), P("data"),
+                       rspec), check_vma=False))
+
+    t_bare = _bench_us(make(OFF), tree, scat)
+    t_ver = _bench_us(make(vc), tree, scat)
+    n_elems = sum(x.size for x in jax.tree.leaves(tree)) + scat.size
+    return {
+        "bench": "verified_collective_overhead",
+        "devices": n_dev,
+        "elements": n_elems,
+        "leaves": len(tree) + 1,
+        "us_bare": round(t_bare, 1),
+        "us_verified": round(t_ver, 1),
+        "overhead_pct_verified": round(
+            100.0 * (t_ver - t_bare) / max(t_bare, 1e-9), 2),
+    }
+
+
 def main() -> None:
     from repro.campaign import build_cells, run_cells, summarize
 
@@ -166,6 +227,12 @@ def main() -> None:
     print(f"campaign_train_step_fwd_bwd,{ts['us_fwd_bwd']},"
           f"overhead_pct={ts['overhead_pct_fwd_bwd']:.2f}")
     print("BENCH JSON " + json.dumps(ts))
+
+    cv = bench_verified_collectives()
+    print(f"campaign_collective_bare,{cv['us_bare']},overhead_pct=0.00")
+    print(f"campaign_collective_verified,{cv['us_verified']},"
+          f"overhead_pct={cv['overhead_pct_verified']:.2f}")
+    print("BENCH JSON " + json.dumps(cv))
 
 
 if __name__ == "__main__":

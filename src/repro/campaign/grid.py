@@ -16,17 +16,21 @@ four-method surface:
 Stream protection is a *joint* property of routine and policy: a DMR stream
 is protected iff the policy runs DMR on that routine's compute class, an
 ABFT stream iff the policy checksums its matmuls (backward-seam streams
-additionally require ``policy.protect_grads``).  Cells where the injected
+additionally require ``policy.protect_grads``), a collective wire stream
+iff the policy sets ``verify_collectives``.  Cells where the injected
 stream is NOT protected are kept as controls - they demonstrate the error
 actually corrupts the output when nothing defends it.
 
-Policy axis (see POLICIES; smoke = first five):
+Policy axis (see POLICIES; smoke = first six):
 
   off               no FT - the control / baseline column
   hybrid-fused      paper scheme, fused Pallas ABFT kernel
   hybrid-unfused    paper scheme, ABFT layered on a black-box GEMM
   hybrid-sepilogue  fused kernel, but the alpha/beta epilogue is a
                     SEPARATE DMR-protected pass (pre-fusion ablation)
+  hybrid-vcoll      hybrid + checksummed collectives (the only policy that
+                    protects the psum/psum-scatter wire streams; generated
+                    only for routines that HAVE a collective stream)
   dmr-unfused       DMR everywhere, pure-jnp
   dmr-fused         DMR everywhere, Pallas DMR kernels
   abft-unfused      ABFT on matmuls only, no DMR
@@ -47,11 +51,13 @@ from repro.blas import ref
 from repro.core import abft as abftmod
 from repro.core import report as ftreport
 from repro.core.dmr import dmr_compute, dmr_report
+from repro.core.ft_collectives import ft_psum, ft_psum_scatter
 from repro.core.ft_config import FTPolicy
 from repro.core.ft_dense import ft_bmm, ft_dense
-from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, DMR_STREAM_1,
+from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, COLLECTIVE_WIRE,
+                                  COLLECTIVE_WIRE_STICKY, DMR_STREAM_1,
                                   DMR_STREAM_2, SEAM_BWD_DA, SEAM_BWD_DB,
-                                  SEAM_FWD)
+                                  SEAM_COLLECTIVE, SEAM_FWD)
 
 DTYPES: Dict[str, jnp.dtype] = {"f32": jnp.float32, "bf16": jnp.bfloat16}
 
@@ -75,6 +81,9 @@ POLICIES: Dict[str, PolicyCase] = {
         PolicyCase("hybrid-unfused", FTPolicy(mode="hybrid", fused=False)),
         PolicyCase("hybrid-sepilogue",
                    FTPolicy(mode="hybrid", fused=True, fuse_epilogue=False)),
+        PolicyCase("hybrid-vcoll",
+                   FTPolicy(mode="hybrid", fused=False,
+                            verify_collectives=True)),
         PolicyCase("dmr-unfused", FTPolicy(mode="dmr", fused=False)),
         PolicyCase("dmr-fused", FTPolicy(mode="dmr", fused=True)),
         PolicyCase("abft-unfused", FTPolicy(mode="abft", fused=False)),
@@ -87,14 +96,14 @@ POLICIES: Dict[str, PolicyCase] = {
 }
 
 SMOKE_POLICIES = ("off", "hybrid-fused", "hybrid-unfused",
-                  "hybrid-sepilogue", "dmr-unfused")
+                  "hybrid-sepilogue", "hybrid-vcoll", "dmr-unfused")
 FULL_POLICIES = tuple(POLICIES)
 
 
 @dataclasses.dataclass(frozen=True)
 class StreamSpec:
     """One injectable stream of a routine."""
-    kind: str                    # "dmr" | "abft"
+    kind: str                    # "dmr" | "abft" | "collective"
     stream: int                  # core.injection stream id
     domain: int                  # flat-index positions the stream can hit
     pin_pos: Optional[int] = None  # fixed position (location-sensitive dets)
@@ -107,6 +116,11 @@ class StreamSpec:
     seam: int = SEAM_FWD           # SEAM_BWD_* = the error strikes a
     # cotangent GEMM of the differentiated routine (``domain`` then indexes
     # flat dA / dB); protection additionally requires policy.protect_grads.
+    # SEAM_COLLECTIVE = the error strikes a verified collective's wire
+    # payload; protection requires policy.verify_collectives.
+    detect_only: bool = False      # detection without correction is the
+    # BEST possible outcome for this stream (e.g. a sticky wire fault that
+    # survives the retry) - the cell's expectation is "detected".
 
     def exists_under(self, policy: FTPolicy) -> bool:
         if self.epilogue:
@@ -116,6 +130,8 @@ class StreamSpec:
     def protected_under(self, policy: FTPolicy) -> bool:
         if not self.exists_under(policy):
             return False
+        if self.kind == "collective":
+            return policy.verify_collectives
         if self.seam != SEAM_FWD and not policy.protect_grads:
             return False
         if self.kind == "dmr":
@@ -157,6 +173,7 @@ GEMM_M, GEMM_K, GEMM_N = 48, 40, 56
 TRSM_M, TRSM_N = 48, 24   # 48 % 32 != 0 -> padded panel loop
 DENSE_B, DENSE_S, DENSE_K, DENSE_N = 2, 8, 40, 56
 BMM_B, BMM_M, BMM_K, BMM_N = 3, 16, 40, 24
+COLL_N = 96               # per-shard payload of the collective seams
 
 
 def _normal(key, shape, dtype):
@@ -540,6 +557,73 @@ def _routines() -> Dict[str, Routine]:
             StreamSpec("dmr", DMR_STREAM_1, N1, label="dmr-grad"),),
         base_scale=4.0, ref_scale=8.0))
 
+    # ---- collective seams (checksummed psum / psum_scatter) ----
+    # The routines run under an internal shard_map over every available
+    # device (the in-process campaign sees one; tests/test_distributed.py
+    # exercises real 4-device meshes), with replicated operands so the
+    # oracle is world * x.  Wire faults (seam SEAM_COLLECTIVE) land on the
+    # reduced payload between the collective and its verification: a
+    # transient fault must be retried away ("recovered"), a sticky fault
+    # persists through the retry and the best outcome is detection plus
+    # the collective_uncorrected counter ("detected" cells).  base_scale
+    # must clear the bf16 wire tolerance, which scales with n * world at
+    # the bf16 ulp (docs/abft-math.md section 6).
+    def _coll_mesh():
+        from jax.sharding import AxisType  # via repro.compat on old jax
+        return jax.make_mesh((jax.device_count(),), ("data",),
+                             axis_types=(AxisType.Auto,))
+
+    def _coll_streams(ops):
+        return (
+            StreamSpec("collective", COLLECTIVE_WIRE, COLL_N, label="wire",
+                       seam=SEAM_COLLECTIVE),
+            StreamSpec("collective", COLLECTIVE_WIRE_STICKY, COLL_N,
+                       label="wire-sticky", seam=SEAM_COLLECTIVE,
+                       detect_only=True))
+
+    def _psum_run(ops, pol, inj):
+        from jax.sharding import PartitionSpec as P
+
+        def body(x, inj_):
+            return ft_psum(x, "data", policy=pol, injection=inj_)
+
+        y, rep = jax.shard_map(
+            body, mesh=_coll_mesh(), in_specs=(P(), P()),
+            out_specs=(P(), {k: P() for k in ftreport.FIELDS}),
+            check_vma=False)(ops[0], inj)
+        return y.ravel(), rep
+
+    add(Routine(
+        "ft_psum", "collective",
+        make=lambda key, dt: (_normal(key, (COLL_N,), dt),),
+        run=_psum_run,
+        oracle=lambda ops: (jax.device_count() * _f(ops[0])).ravel(),
+        streams=_coll_streams,
+        base_scale=512.0, ref_scale=4.0))
+
+    def _psum_scatter_run(ops, pol, inj):
+        from jax.sharding import PartitionSpec as P
+
+        def body(x, inj_):
+            return ft_psum_scatter(x, "data", scatter_dimension=0,
+                                   tiled=False, policy=pol, injection=inj_)
+
+        y, rep = jax.shard_map(
+            body, mesh=_coll_mesh(), in_specs=(P(), P()),
+            out_specs=(P("data"), {k: P() for k in ftreport.FIELDS}),
+            check_vma=False)(ops[0], inj)
+        return y.ravel(), rep
+
+    add(Routine(
+        "ft_psum_scatter", "collective",
+        # operand rows = one slice per shard (ZeRO's (dp, n/dp) layout)
+        make=lambda key, dt: (
+            _normal(key, (jax.device_count(), COLL_N), dt),),
+        run=_psum_scatter_run,
+        oracle=lambda ops: (jax.device_count() * _f(ops[0])).ravel(),
+        streams=_coll_streams,
+        base_scale=512.0, ref_scale=4.0))
+
     return r
 
 
@@ -567,10 +651,13 @@ class Cell:
         return dataclasses.asdict(self)
 
 
-def _expectation(kind: str, policy: FTPolicy, protected: bool) -> str:
+def _expectation(spec: StreamSpec, policy: FTPolicy,
+                 protected: bool) -> str:
     if not protected:
         return "unprotected"
-    if kind == "dmr" and not policy.dmr_vote:
+    if spec.detect_only:
+        return "detected"           # e.g. sticky wire fault: retry can't fix
+    if spec.kind == "dmr" and not policy.dmr_vote:
         return "detected"           # detect-only: no vote, no correction
     return "recovered"              # detected AND output matches the oracle
 
@@ -584,7 +671,7 @@ def _mk_cell(rt: Routine, pc: PolicyCase, dtype: str, model: str,
         routine=rt.name, level=rt.level, policy=pc.name, dtype=dtype,
         model=model, stream_kind=spec.kind, stream=spec.stream,
         protected=protected,
-        expect=_expectation(spec.kind, pc.policy, protected))
+        expect=_expectation(spec, pc.policy, protected))
 
 
 def build_cells(*, smoke: bool = True,
@@ -595,15 +682,19 @@ def build_cells(*, smoke: bool = True,
     """Enumerate campaign cells.
 
     Smoke grid: every routine x {off, hybrid-fused, hybrid-unfused,
-    hybrid-sepilogue, dmr-unfused} x {f32, bf16} x single-error on every
-    protected stream - including the epilogue-injection "abft-epi" cells
-    (faults on the epilogue-scaled accumulator) and the batched
-    nonzero-slice "abft-slice" cell - one control cell per routine
-    (policy off, f32), plus an L3 burst row under the recompute policy.
-    The full grid adds the remaining policies (abft-unfused, dmr-fused,
-    hybrid-novote) and bf16 controls.  Streams whose hardware path is
-    folded away by a policy (the separate DMR epilogue under fused-epilogue
-    ABFT) generate no cells under it.
+    hybrid-sepilogue, hybrid-vcoll, dmr-unfused} x {f32, bf16} x
+    single-error on every protected stream - including the
+    epilogue-injection "abft-epi" cells (faults on the epilogue-scaled
+    accumulator), the batched nonzero-slice "abft-slice" cell, and the
+    collective "wire"/"wire-sticky" cells (transient vs persistent
+    corruption of a verified psum / psum_scatter payload) - one control
+    cell per routine (policy off, f32), plus an L3 burst row under the
+    recompute policy.  The full grid adds the remaining policies
+    (abft-unfused, dmr-fused, hybrid-novote) and bf16 controls.  Streams
+    whose hardware path is folded away by a policy (the separate DMR
+    epilogue under fused-epilogue ABFT) generate no cells under it, and
+    ablation-only policies (hybrid-sepilogue, hybrid-vcoll) generate
+    cells only for routines with a stream they change.
     """
     def _check(sel, known, what):
         bad = sorted(set(sel) - set(known))
@@ -638,6 +729,10 @@ def build_cells(*, smoke: bool = True,
             # from hybrid-fused under it, so skip the rest (combo budget).
             if (pname == "hybrid-sepilogue"
                     and not any(s.epilogue for s in specs)):
+                continue
+            # hybrid-vcoll only differs on collective wire streams.
+            if (pname == "hybrid-vcoll"
+                    and not any(s.kind == "collective" for s in specs)):
                 continue
             for dtype in sel_dtypes:
                 if "single" in sel_models:

@@ -12,10 +12,13 @@ axis, and the verdict-report schema are documented in docs/campaign.md.
 ``lax.scan`` over steps with a Poisson errors-per-minute schedule feeding
 the FT seams, reproducing the paper's "hundreds of errors per minute"
 regime, then real model train steps via ``launch/steps.py`` - the model
-under a differentiable hybrid policy - asserting (1) optimizer-seam DMR
-faults are voted out with params bit-equal to a clean run and (2)
-backward-seam faults striking the cotangent GEMMs are detected through
-the grad-probe counters with the trajectory held at rounding level.
+under a differentiable hybrid policy with verified collectives -
+asserting (1) optimizer-seam DMR faults are voted out with params
+bit-equal to a clean run, (2) backward-seam faults striking the cotangent
+GEMMs are detected through the grad-probe counters with the trajectory
+held at rounding level, and (3) collective-seam wire faults on the
+gradient reductions are detected and retried away with params bit-equal
+to clean.
 """
 from __future__ import annotations
 
@@ -31,8 +34,9 @@ def build_argparser() -> argparse.ArgumentParser:
         prog="python -m repro.campaign.run",
         description="FT-BLAS fault-injection campaign")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI sub-grid (5 policies incl. the "
-                         "separate-epilogue ablation; bursts f32-only)")
+                    help="CI sub-grid (6 policies incl. the "
+                         "separate-epilogue and verified-collective "
+                         "ablations; bursts f32-only)")
     ap.add_argument("--out", default="/tmp/ftblas_campaign",
                     help="output directory for campaign.json / campaign.md")
     ap.add_argument("--seed", type=int, default=0)
@@ -105,7 +109,10 @@ def run_drill(args) -> bool:
     same steps under a BACKWARD-seam schedule - faults strike the
     cotangent GEMMs of the model's custom_vjp backward rules, detections
     surface via the grad-probe counters in ``metrics["report"]``, and the
-    ABFT correction holds the parameter trajectory at rounding level."""
+    ABFT correction holds the parameter trajectory at rounding level;
+    (4) a COLLECTIVE-seam schedule - transient wire faults strike the
+    verified gradient reductions and the psum retry keeps params
+    bit-equal to the clean run."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -167,8 +174,13 @@ def run_drill(args) -> bool:
     model = build_model(cfg)
     # Model under the differentiable hybrid policy (the compat shim gives
     # the DMR barrier its AD rule; protected matmuls carry custom_vjp
-    # backward coverage); the optimizer update runs the DMR chain.
-    model_policy = FTPolicy(mode="hybrid", fused=False)
+    # backward coverage); the optimizer update runs the DMR chain, and the
+    # gradient collectives run checksummed (verify_collectives) so the
+    # collective-seam drill below shares the same compiled step - the
+    # optimizer/backward drills double as the verified collectives' clean
+    # false-positive gate.
+    model_policy = FTPolicy(mode="hybrid", fused=False,
+                            verify_collectives=True)
     ctx = make_ctx(multi_pod=False, data_size=1, model_size=1,
                    policy=model_policy)
     params = model.init(jax.random.PRNGKey(0), 1)
@@ -257,7 +269,29 @@ def run_drill(args) -> bool:
           f"{bwd_drift:.3e} (bound {drift_bound:.1e})")
     bwd_ok = (bwd_faulty > 0 and bwd_detected >= bwd_faulty
               and clean_fp == 0 and bwd_drift < drift_bound)
-    return ok and have and step_ok and bwd_ok
+
+    # (4) Collective-seam rate drill: transient wire faults strike the
+    # verified gradient reductions (the dp grad ft_psum and the grad-norm
+    # psums).  Every fault position lands somewhere in the grads tree, so
+    # every faulty step must raise collective_detected; the retry re-issues
+    # the all-reduce on clean operands, so the trajectory is BIT-equal to
+    # the clean run (unlike ABFT's rounding-exact correction).
+    from repro.core.injection import COLLECTIVE_WIRE, SEAM_COLLECTIVE
+
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree.leaves(params))
+    coll_sched = PS(rate_per_min=args.drill_rate, step_time_s=0.25,
+                    out_size=n_params, stream_choices=(COLLECTIVE_WIRE,),
+                    base_scale=1e4, seam_choices=(SEAM_COLLECTIVE,))
+    c_injected, c_detected, c_faulty, c_fp, c_drift = \
+        drive_steps(coll_sched, args.seed + 3, "collective_detected")
+    print(f"  collective-seam drill: {n_steps} steps, {c_injected} wire "
+          f"errors in {c_faulty} steps -> {c_detected} faulty steps "
+          f"detected, {c_fp} clean false positives, max param drift vs "
+          f"clean = {c_drift:.3e}")
+    coll_ok = (c_faulty > 0 and c_detected >= c_faulty and c_fp == 0
+               and c_drift == 0.0)
+    return ok and have and step_ok and bwd_ok and coll_ok
 
 
 def main(argv=None) -> int:

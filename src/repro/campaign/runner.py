@@ -37,9 +37,10 @@ from repro.campaign.grid import (Cell, DTYPES, POLICIES, ROUTINES, Routine,
 from repro.core import report as ftreport
 from repro.core.injection import ABFT_ACC, ABFT_ACC_2, Injection
 
-_DETECT_KEYS = ("abft_detected", "dmr_detected")
-_CORRECT_KEYS = ("abft_corrected", "dmr_corrected")
-_BAD_KEYS = ("abft_unrecoverable", "dmr_unrecoverable")
+_DETECT_KEYS = ("abft_detected", "dmr_detected", "collective_detected")
+_CORRECT_KEYS = ("abft_corrected", "dmr_corrected", "collective_retried")
+_BAD_KEYS = ("abft_unrecoverable", "dmr_unrecoverable",
+             "collective_uncorrected")
 
 
 @dataclasses.dataclass

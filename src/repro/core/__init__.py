@@ -6,18 +6,20 @@ Public surface:
   dmr_compute          - duplicate/verify/vote combinator (dmr)
   checksum             - ABFT encode/verify/locate/correct algebra
   Injection            - jit-compatible soft-error injection (injection)
-  ft_psum / ft_pmean   - checksum-verified collectives (ft_collectives)
+  ft_psum / ft_pmean / ft_psum_scatter
+                       - checksum-verified collectives (ft_collectives)
   report               - FT telemetry counters
 """
 from repro.core.ft_config import (FTPolicy, OFF, HYBRID, HYBRID_UNFUSED,
                                   HYBRID_SEP_EPILOGUE, DMR_ONLY, ABFT_ONLY,
                                   default_policy)
-from repro.core.injection import (Injection, SEAM_BWD_DA, SEAM_BWD_DB,
-                                  SEAM_FWD)
+from repro.core.injection import (COLLECTIVE_WIRE, COLLECTIVE_WIRE_STICKY,
+                                  Injection, SEAM_BWD_DA, SEAM_BWD_DB,
+                                  SEAM_COLLECTIVE, SEAM_FWD)
 from repro.core.abft import (ft_matmul, ft_matmul_batched, ft_matmul_diff,
                              ft_matmul_bwd_gemms, matmul_fused,
                              matmul_unfused, new_grad_probe, probe_report)
 from repro.core.dmr import dmr_compute, dmr_reduce_sum, DmrVerdict, dmr_report
 from repro.core.ft_dense import ft_dense, ft_dense_fused_gate, ft_bmm
-from repro.core.ft_collectives import ft_psum, ft_pmean
+from repro.core.ft_collectives import ft_psum, ft_pmean, ft_psum_scatter
 from repro.core import checksum, report

@@ -7,12 +7,31 @@ algebra*: summation commutes with summation, so
     sum_elements(psum(x)) == psum(sum_elements(x))
 
 holds exactly in infinite precision and to round-off in floats.  Verifying a
-psum therefore costs one extra *scalar* psum (O(1) bytes on the wire against
-O(bytes(x))) - the collective analogue of a fused checksum.
+psum therefore costs one extra *scalar* psum (O(leaves) bytes on the wire
+against O(bytes(x))) - the collective analogue of a fused checksum.  The
+same identity covers ``psum_scatter`` (ZeRO's fused sum+shard): the psum of
+the scattered-slice totals equals the psum of the local full-tensor totals.
+
+Checksums are PER LEAF (a stacked (L,) vector rides the one scalar
+collective): a single whole-tree sum would dilute a one-element corruption
+into the round-off floor of the full parameter count, while per-leaf
+residuals keep the detectable-delta floor at the leaf scale and tell the
+report how many reductions of the schedule were hit.
 
 On mismatch the policy retries the collective once (transient-fault model:
-a retried all-reduce re-samples the error), counting retries in the report.
-All ops are shard_map-compatible: they take the axis name(s) to reduce over.
+a retried all-reduce re-samples the error) and RE-VERIFIES the retried
+result; if the mismatch persists (sticky corruption - a bad link, not a
+flipped bit in flight) the better of the two attempts is kept and the
+``collective_uncorrected`` counter is raised.  Tolerances follow the
+derivation in docs/abft-math.md section 6: the verified side sums ``n``
+entries that are each ~``world`` x the local magnitudes, so the round-off
+budget scales with ``n * world`` - scaling it with ``n + world`` (the naive
+term count) tightens the threshold relative to the true drift as the mesh
+grows and clean reductions start false-positiving.
+
+All ops are shard_map-compatible: they take the axis name(s) to reduce
+over.  ``injection`` (seam ``SEAM_COLLECTIVE``) lands on the wire payload
+between the reduce and its verification; see ``core.injection``.
 """
 from __future__ import annotations
 
@@ -24,58 +43,233 @@ from jax import lax
 
 from repro.core import report as ftreport
 from repro.core.ft_config import FTPolicy, default_policy
+from repro.core.injection import (COLLECTIVE_WIRE, COLLECTIVE_WIRE_STICKY,
+                                  SEAM_COLLECTIVE, Injection)
 
 AxisNames = Union[str, Sequence[str]]
 
-
-def _sum_leaves(tree) -> jax.Array:
-    leaves = [jnp.sum(x.astype(jnp.float32)) for x in jax.tree.leaves(tree)]
-    return jnp.asarray(sum(leaves), jnp.float32)
+_ALL_WIRE = (COLLECTIVE_WIRE, COLLECTIVE_WIRE_STICKY)
+_STICKY = (COLLECTIVE_WIRE_STICKY,)
 
 
-def _abs_sum_leaves(tree) -> jax.Array:
-    leaves = [jnp.sum(jnp.abs(x).astype(jnp.float32))
-              for x in jax.tree.leaves(tree)]
-    return jnp.asarray(sum(leaves), jnp.float32)
+def axis_world(axis_name: AxisNames) -> int:
+    """Static product of the reduced axes' sizes (no wire traffic).
+
+    ``lax.axis_size`` resolves at trace time (the compat shim provides it on
+    the pinned jax floor), so both ``ft_pmean``'s divisor and the tolerance
+    scaling below are compile-time constants instead of a redundant
+    world-size psum.
+    """
+    axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    world = 1
+    for ax in axes:
+        world = world * lax.axis_size(ax)
+    return world
+
+
+def collective_tol(n: int, world: int, ref_abs, tol_factor: float,
+                   eps: float):
+    """Round-off budget for one leaf's sum-vs-psum checksum comparison.
+
+    ``ref_abs`` is the leaf's total absolute mass across all shards (the
+    psum of the local |.|-sums).  The verified side sums ``n`` entries of
+    the REDUCED leaf, each already ~``world`` x a local entry, so its
+    running partials - and therefore the worst observable drift for the
+    sign-correlated trees real gradients are (see the biased-accumulation
+    term in docs/abft-math.md section 4) - scale with the product
+    ``n * world``, not the term count ``n + world``.
+    """
+    return tol_factor * eps * (n * world) * (ref_abs + 1.0)
+
+
+def _leaf_eps(x) -> float:
+    """The leaf's wire ulp: a bf16 payload drifts at the bf16 ulp no
+    matter how precise the f32 checksum arithmetic is."""
+    if jnp.issubdtype(x.dtype, jnp.inexact):
+        return max(float(jnp.finfo(x.dtype).eps),
+                   float(jnp.finfo(jnp.float32).eps))
+    return float(jnp.finfo(jnp.float32).eps)
+
+
+def _leaf_signed_sums(tree) -> jax.Array:
+    """Stacked per-leaf signed sums in f32: (L,).  The verify side only
+    needs these - the |.|-mass is computed once, on the pre-reduction
+    operands."""
+    return jnp.stack([jnp.sum(x.astype(jnp.float32))
+                      for x in jax.tree.leaves(tree)])
+
+
+def _leaf_sums(tree) -> Tuple[jax.Array, jax.Array]:
+    """Stacked per-leaf (signed sum, absolute sum) in f32: (L,), (L,)."""
+    leaves = jax.tree.leaves(tree)
+    a = jnp.stack([jnp.sum(jnp.abs(x).astype(jnp.float32))
+                   for x in leaves])
+    return _leaf_signed_sums(tree), a
+
+
+def _perturb_tree(tree, inj: Optional[Injection], streams,
+                  offset: int = 0):
+    """Apply wire-fault slots into the flat concatenation of the leaves,
+    starting at ``offset`` within the caller's collective address space."""
+    if inj is None:
+        return tree
+    leaves, tdef = jax.tree.flatten(tree)
+    out, off = [], offset
+    for x in leaves:
+        out.append(inj.perturb(x, stream=streams, offset=off))
+        off += x.size
+    return jax.tree.unflatten(tdef, out)
+
+
+def _leaf_tols(tree, world: int, ref_abs: jax.Array,
+               policy: FTPolicy) -> jax.Array:
+    # Per-leaf eps: one bf16 leaf must not loosen its f32 neighbors.
+    leaves = jax.tree.leaves(tree)
+    ns = jnp.asarray([x.size for x in leaves], jnp.float32)
+    eps = jnp.asarray([_leaf_eps(x) for x in leaves], jnp.float32)
+    return collective_tol(ns, world, ref_abs, policy.tol_factor, eps)
 
 
 def ft_psum(tree, axis_name: AxisNames, *,
-            policy: Optional[FTPolicy] = None) -> Tuple[object, dict]:
-    """psum with additive-checksum verification (and one retry).
+            policy: Optional[FTPolicy] = None,
+            injection: Optional[Injection] = None,
+            injection_offset: int = 0) -> Tuple[object, dict]:
+    """psum with per-leaf additive-checksum verification and one retry.
 
     Returns (reduced_tree, FTReport).  With policy.verify_collectives False
-    this is exactly lax.psum.
+    this is exactly ``lax.psum`` (bit-identical program; a wire-seam
+    injection then lands unprotected - the campaign's control cells).
+
+    ``injection_offset``: flat index of this reduction within the
+    caller's larger collective-seam address space, so a step issuing
+    several verified collectives (grad tree + grad-norm scalars) can give
+    each a disjoint position range - one slot, one wire.
     """
     policy = policy or default_policy()
+    offset = injection_offset
+    if injection is not None:
+        injection = injection.for_seam(SEAM_COLLECTIVE)
     if not policy.verify_collectives:
-        return lax.psum(tree, axis_name), ftreport.empty_report()
+        reduced = _perturb_tree(lax.psum(tree, axis_name), injection,
+                                _ALL_WIRE, offset)
+        return reduced, ftreport.empty_report()
 
-    local_sum = _sum_leaves(tree)
-    local_abs = _abs_sum_leaves(tree)
+    world = axis_world(axis_name)
+    local_sum, local_abs = _leaf_sums(tree)
     reduced = lax.psum(tree, axis_name)
-    # One fused scalar psum carries both the checksum and its magnitude.
+    # One fused (L,)-vector psum carries every leaf's checksum + magnitude.
     ref_sum, ref_abs = lax.psum((local_sum, local_abs), axis_name)
+    reduced = _perturb_tree(reduced, injection, _ALL_WIRE, offset)
 
-    got = _sum_leaves(reduced)
-    n = sum(x.size for x in jax.tree.leaves(tree))
-    world = lax.psum(jnp.ones((), jnp.float32), axis_name)
-    eps = jnp.finfo(jnp.float32).eps
-    tol = policy.tol_factor * eps * (n + world) * (ref_abs + 1.0)
-    bad = jnp.abs(got - ref_sum) > tol
+    tol = _leaf_tols(tree, world, ref_abs, policy)
+    res1 = jnp.abs(_leaf_signed_sums(reduced) - ref_sum)
+    bad1 = res1 > tol
+    bad = jnp.any(bad1)
 
     def retry(t):
-        return lax.psum(jax.tree.map(lax.optimization_barrier, t), axis_name)
+        # optimization_barrier defeats CSE with the first psum; a sticky
+        # wire fault strikes the retried payload too.
+        r = lax.psum(jax.tree.map(lax.optimization_barrier, t), axis_name)
+        r = _perturb_tree(r, injection, _STICKY, offset)
+        return r, jnp.abs(_leaf_signed_sums(r) - ref_sum)
 
-    reduced = lax.cond(bad, retry, lambda t: reduced, tree)
+    def keep(t):
+        return reduced, res1
+
+    retried, res2 = lax.cond(bad, retry, keep, tree)
+    # Keep the better attempt per leaf; a leaf whose best residual still
+    # misses the tolerance is a persistent corruption.  collective_retried
+    # counts retries that RESTORED a verified payload (detected ==
+    # retried + uncorrected) - a retry that came back corrupt too is not
+    # a correction.
+    use_retry = bad1 & (res2 <= res1)
+    leaves_a = jax.tree.leaves(reduced)
+    leaves_b, tdef = jax.tree.flatten(retried)
+    final = jax.tree.unflatten(tdef, [
+        jnp.where(use_retry[i], b, a)
+        for i, (a, b) in enumerate(zip(leaves_a, leaves_b))])
+    still_bad = bad1 & (jnp.minimum(res1, res2) > tol)
+    rep = ftreport.make_report(
+        collective_detected=jnp.sum(bad1).astype(jnp.int32),
+        collective_retried=jnp.sum(bad1 & ~still_bad).astype(jnp.int32),
+        collective_uncorrected=jnp.sum(still_bad).astype(jnp.int32))
+    return final, rep
+
+
+def ft_psum_scatter(x: jax.Array, axis_name: AxisNames, *,
+                    scatter_dimension: int = 0, tiled: bool = False,
+                    policy: Optional[FTPolicy] = None,
+                    injection: Optional[Injection] = None,
+                    injection_offset: int = 0) -> Tuple[jax.Array, dict]:
+    """Verified ``lax.psum_scatter`` (ZeRO's fused sum+shard collective).
+
+    The checksum identity survives the scatter: the psum of each shard's
+    scattered-slice total equals the psum of the local full-tensor totals.
+    Verification costs one scalar-pair psum up front plus one scalar psum
+    of the output totals; the retry (and its re-verification psum) lives
+    inside the mismatch branch, so the clean path pays no second pass.
+    Works for any wire dtype - the bf16 ZeRO configuration checksums the
+    bf16 payload in f32 and sizes the tolerance by the bf16 ulp.
+
+    ``injection_offset``: flat index of this call's scattered output
+    within the caller's larger collective-seam address space - a caller
+    issuing one scatter per leaf (``optim.adamw.zero_apply``) passes the
+    running offset so an injection position addresses exactly one leaf,
+    matching ``ft_psum``'s flat-concatenation convention.
+    """
+    policy = policy or default_policy()
+    if injection is not None:
+        injection = injection.for_seam(SEAM_COLLECTIVE)
+
+    def scat(v):
+        return lax.psum_scatter(v, axis_name,
+                                scatter_dimension=scatter_dimension,
+                                tiled=tiled)
+
+    def hurt(v, streams):
+        return (v if injection is None
+                else injection.perturb(v, stream=streams,
+                                       offset=injection_offset))
+
+    if not policy.verify_collectives:
+        return hurt(scat(x), _ALL_WIRE), ftreport.empty_report()
+
+    world = axis_world(axis_name)
+    local_sum = jnp.sum(x.astype(jnp.float32))
+    local_abs = jnp.sum(jnp.abs(x).astype(jnp.float32))
+    ref_sum, ref_abs = lax.psum((local_sum, local_abs), axis_name)
+    out = hurt(scat(x), _ALL_WIRE)
+    tol = collective_tol(x.size, world, ref_abs, policy.tol_factor,
+                         _leaf_eps(x))
+    got1 = lax.psum(jnp.sum(out.astype(jnp.float32)), axis_name)
+    res1 = jnp.abs(got1 - ref_sum)
+    bad = res1 > tol
+
+    def retry(v):
+        r = hurt(scat(lax.optimization_barrier(v)), _STICKY)
+        got2 = lax.psum(jnp.sum(r.astype(jnp.float32)), axis_name)
+        return r, jnp.abs(got2 - ref_sum)
+
+    def keep(v):
+        return out, res1
+
+    retried, res2 = lax.cond(bad, retry, keep, x)
+    use_retry = bad & (res2 <= res1)
+    final = jnp.where(use_retry, retried, out)
+    still_bad = bad & (jnp.minimum(res1, res2) > tol)
     rep = ftreport.make_report(
         collective_detected=bad.astype(jnp.int32),
-        collective_retried=bad.astype(jnp.int32))
-    return reduced, rep
+        collective_retried=(bad & ~still_bad).astype(jnp.int32),
+        collective_uncorrected=still_bad.astype(jnp.int32))
+    return final, rep
 
 
 def ft_pmean(tree, axis_name: AxisNames, *,
-             policy: Optional[FTPolicy] = None) -> Tuple[object, dict]:
-    policy = policy or default_policy()
-    world = lax.psum(jnp.ones((), jnp.float32), axis_name)
-    summed, rep = ft_psum(tree, axis_name, policy=policy)
-    return jax.tree.map(lambda x: (x / world.astype(x.dtype)), summed), rep
+             policy: Optional[FTPolicy] = None,
+             injection: Optional[Injection] = None) -> Tuple[object, dict]:
+    """pmean as verified psum / static world (no world-size collective)."""
+    world = axis_world(axis_name)
+    summed, rep = ft_psum(tree, axis_name, policy=policy,
+                          injection=injection)
+    return jax.tree.map(
+        lambda x: x / jnp.asarray(world, x.dtype), summed), rep

@@ -25,10 +25,19 @@ addresses (the gradient-seam address space; docs/architecture.md):
                     custom_vjp backward rule; pos indexes flat dA
   2 : SEAM_BWD_DB - the dB = alpha * A^T @ g cotangent GEMM; pos
                     indexes flat dB
+  3 : SEAM_COLLECTIVE - the wire payload of a verified collective
+                    (ft_psum / ft_psum_scatter): the delta lands on the
+                    REDUCED tree between the reduce and its checksum
+                    verification, modeling a corrupted all-reduce.  pos
+                    indexes the flat concatenation of the reduced
+                    leaves; stream selects the retry-timeline behavior
+                    (COLLECTIVE_WIRE = transient, first attempt only;
+                    COLLECTIVE_WIRE_STICKY = persistent, every attempt).
 
 Ops that are not differentiated simply never evaluate the bwd seams; FT
 entry points filter with ``for_seam`` so a mixed spec can drive a whole
-train step (forward matmuls, backward matmuls, optimizer update) at once.
+train step (forward matmuls, backward matmuls, collective reductions,
+optimizer update) at once.
 """
 from __future__ import annotations
 
@@ -48,6 +57,15 @@ ABFT_ACC_2 = 3
 SEAM_FWD = 0
 SEAM_BWD_DA = 1
 SEAM_BWD_DB = 2
+SEAM_COLLECTIVE = 3
+
+# Collective-seam streams: WHERE ON THE RETRY TIMELINE a wire fault lands.
+# Transient faults corrupt the first reduction only (a retried all-reduce
+# re-samples the error, the paper's soft-error model); sticky faults strike
+# every attempt (persistent corruption, e.g. a bad link) and must surface
+# as ``collective_uncorrected``.
+COLLECTIVE_WIRE = 0
+COLLECTIVE_WIRE_STICKY = 1
 
 
 @jax.tree_util.register_pytree_node_class

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 FIELDS = (
     "abft_detected", "abft_corrected", "abft_unrecoverable",
     "dmr_detected", "dmr_corrected", "dmr_unrecoverable",
-    "collective_detected", "collective_retried",
+    "collective_detected", "collective_retried", "collective_uncorrected",
 )
 
 
@@ -57,4 +57,5 @@ def total_errors(report: dict) -> jax.Array:
 
 
 def total_unrecoverable(report: dict) -> jax.Array:
-    return report["abft_unrecoverable"] + report["dmr_unrecoverable"]
+    return (report["abft_unrecoverable"] + report["dmr_unrecoverable"]
+            + report["collective_uncorrected"])

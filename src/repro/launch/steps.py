@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.core import report as ftreport
 from repro.core.abft import new_grad_probe, probe_report
+from repro.core.ft_collectives import ft_psum
 from repro.core.ft_config import FTPolicy, OFF
 from repro.core.injection import SEAM_BWD_DA, SEAM_BWD_DB
 from repro.models import build_model
@@ -47,12 +48,31 @@ def make_ctx(*, multi_pod: bool, data_size: int, model_size: int,
 
 
 # -- train --------------------------------------------------------------------
-def _reduce_replicated_grads(grads, pspecs, ctx: ShardCtx):
+def _ft_psum_leaf_subset(leaves, idx, axis, ctx: ShardCtx, injection):
+    """Reduce ``leaves[i] for i in idx`` over ``axis`` as ONE verified
+    ``ft_psum`` interval (per-leaf checksums ride a single stacked scalar
+    psum).  Injection positions index the flat concatenation of the
+    REDUCED subset - each gradient-tree reduction of a step owns its own
+    payload address space; the grad-norm scalars are offset past it (see
+    ``_train_step``).  Returns (new leaves list, FTReport)."""
+    if not idx:
+        return list(leaves), ftreport.empty_report()
+    reduced, rep = ft_psum([leaves[i] for i in idx], axis,
+                           policy=ctx.policy, injection=injection)
+    leaves = list(leaves)
+    for i, r in zip(idx, reduced):
+        leaves[i] = r
+    return leaves, rep
+
+
+def _reduce_replicated_grads(grads, pspecs, ctx: ShardCtx, injection=None):
     """Model-axis psum for grads of params replicated over "model".
 
     shard_map AD yields per-shard partials; for a parameter that exists on
     every model shard the total derivative is the sum of partials (without
-    this, replicas would apply different updates and drift).
+    this, replicas would apply different updates and drift).  With
+    ``ctx.policy.verify_collectives`` the whole replicated-leaf batch is
+    verified and retried as a unit.  Returns (grads, FTReport).
     """
     def has_model(spec):
         for entry in spec:
@@ -61,11 +81,13 @@ def _reduce_replicated_grads(grads, pspecs, ctx: ShardCtx):
                 return True
         return False
 
-    def one(g, spec):
-        return g if has_model(spec) else lax.psum(g, ctx.model_axis)
-
-    return jax.tree.map(one, grads, pspecs,
-                        is_leaf=lambda x: isinstance(x, P))
+    leaves_g, tdef = jax.tree.flatten(grads)
+    leaves_s = jax.tree.leaves(pspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+    rep_idx = [i for i, s in enumerate(leaves_s) if not has_model(s)]
+    leaves_g, rep = _ft_psum_leaf_subset(leaves_g, rep_idx,
+                                         ctx.model_axis, ctx, injection)
+    return jax.tree.unflatten(tdef, leaves_g), rep
 
 
 def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
@@ -87,7 +109,9 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
     (``core.injection``): SEAM_FWD slots go to the DMR-protected optimizer
     update, SEAM_BWD_DA / SEAM_BWD_DB slots are threaded into the model
     (via ``ShardCtx.injection``) where they strike the cotangent GEMMs of
-    every protected matmul's custom_vjp backward rule.  Detections from
+    every protected matmul's custom_vjp backward rule, and SEAM_COLLECTIVE
+    slots land on the wire payloads of the verified gradient reductions
+    (``ft_psum`` / ``ft_psum_scatter``).  Detections from
     both directions surface in ``metrics["report"]``: forward/optimizer
     counters ride the ordinary report plumbing, backward counters come
     out of the grad probe's cotangent (``core.abft.probe_report``).
@@ -159,11 +183,19 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
             metrics = jax.tree.map(lambda m: m / n_micro
                                    if m.dtype.kind == "f" else m, metrics)
         # Backward-pass FT counters (probe cotangents are per-shard sums).
+        # This psum reduces TELEMETRY, not gradients - it stays bare on
+        # purpose (verifying the counters with more counters is circular).
         bwd_report = probe_report(
             lax.psum(probe_g, ctx.data_axis + (ctx.model_axis,)))
 
+        # Every gradient-path collective below goes through the verified
+        # primitives; with ctx.policy.verify_collectives False they lower
+        # to the bare lax.psum / lax.psum_scatter bit-identically.
+        coll_rep = ftreport.empty_report()
         if pspecs is not None:
-            grads = _reduce_replicated_grads(grads, pspecs, ctx)
+            grads, r = _reduce_replicated_grads(grads, pspecs, ctx,
+                                                injection=injection)
+            coll_rep = ftreport.merge(coll_rep, r)
         if zero:
             cdt = jnp.bfloat16 if model.cfg.zero_collective_dtype == "bf16" \
                 else jnp.float32
@@ -173,39 +205,56 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
                 collective_dtype=cdt, injection=injection)
         elif fsdp:
             # FSDP leaves arrive dp-summed via the all_gather transpose;
-            # replicated leaves still need the explicit dp psum.
+            # replicated leaves still need the explicit dp psum - one
+            # verified interval for the whole batch of them.
             from repro.models.specs import fsdp_dims_unstacked
             dims = fsdp_dims_unstacked(params)
-            grads = jax.tree.map(
-                lambda g, d: g if d is not None
-                else lax.psum(g, ctx.data_axis), grads, dims)
+            leaves_g, tdef = jax.tree.flatten(grads)
+            # keep None dims as leaves: tree.leaves would drop them and
+            # misalign the zip against the grad leaves
+            leaves_d = jax.tree.leaves(dims, is_leaf=lambda d: d is None)
+            rp_idx = [i for i, d in enumerate(leaves_d) if d is None]
+            leaves_g, r = _ft_psum_leaf_subset(leaves_g, rp_idx,
+                                               ctx.data_axis, ctx,
+                                               injection)
+            coll_rep = ftreport.merge(coll_rep, r)
+            grads = jax.tree.unflatten(tdef, leaves_g)
             # grad norm: dp-sharded leaves sum over (data, model); the
-            # replicated leaves only over model (no double count)
+            # replicated leaves only over model (no double count).  The
+            # scalar reductions live PAST the grads tree in the
+            # collective-seam address space (one slot, one wire).
+            n_grads = sum(g.size for g in leaves_g)
             ss_sh = sum(jnp.sum(g.astype(jnp.float32) ** 2)
-                        for g, d in zip(jax.tree.leaves(grads),
-                                        jax.tree.leaves(dims))
+                        for g, d in zip(jax.tree.leaves(grads), leaves_d)
                         if d is not None)
             ss_rp = sum(jnp.sum(g.astype(jnp.float32) ** 2)
-                        for g, d in zip(jax.tree.leaves(grads),
-                                        jax.tree.leaves(dims))
+                        for g, d in zip(jax.tree.leaves(grads), leaves_d)
                         if d is None)
-            gn = jnp.sqrt(
-                lax.psum(jnp.asarray(ss_sh),
-                         ctx.data_axis + (ctx.model_axis,))
-                + lax.psum(jnp.asarray(ss_rp), ctx.model_axis))
+            ss_sh, r_sh = ft_psum(jnp.asarray(ss_sh),
+                                  ctx.data_axis + (ctx.model_axis,),
+                                  policy=ctx.policy, injection=injection,
+                                  injection_offset=n_grads)
+            ss_rp, r_rp = ft_psum(jnp.asarray(ss_rp), ctx.model_axis,
+                                  policy=ctx.policy, injection=injection,
+                                  injection_offset=n_grads + 1)
+            gn = jnp.sqrt(ss_sh + ss_rp)
+            coll_rep = ftreport.merge(coll_rep, r_sh, r_rp)
             params2, opt2, rep = adamw.apply_updates(
                 params, grads, opt_state, opt_cfg,
                 policy=opt_policy, ctx=None, grad_norm=gn,
                 injection=injection)
         else:
-            grads = lax.psum(grads, ctx.data_axis)  # partials carry 1/dp
+            # partials carry 1/dp (loss is pmean'd inside train_loss)
+            grads, r = ft_psum(grads, ctx.data_axis, policy=ctx.policy,
+                               injection=injection)
+            coll_rep = ftreport.merge(coll_rep, r)
             params2, opt2, rep = adamw.apply_updates(
                 params, grads, opt_state, opt_cfg,
                 policy=opt_policy, ctx=ctx, injection=injection)
         metrics = dict(metrics)
         metrics["loss"] = loss
         metrics["report"] = ftreport.merge(metrics.get("report"), rep,
-                                           bwd_report)
+                                           bwd_report, coll_rep)
         return params2, opt2, metrics
 
     if injection_seam:

@@ -44,6 +44,9 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ft", default="hybrid",
                     choices=list(ft_config.MODES))
+    ap.add_argument("--verify-collectives", action="store_true",
+                    help="checksum-verify the gradient collectives "
+                         "(ft_psum/ft_psum_scatter; no-op with --ft off)")
     ap.add_argument("--inject-every", type=int, default=0,
                     help="inject one soft error every N steps (drill)")
     ap.add_argument("--ckpt-dir", default="")
@@ -58,7 +61,8 @@ def main(argv=None) -> int:
         cfg = cfg.smoke()
     model = build_model(cfg)
     mesh = smoke_mesh()
-    policy = ft_config.FTPolicy(mode=args.ft, fused=False) \
+    policy = ft_config.FTPolicy(mode=args.ft, fused=False,
+                                verify_collectives=args.verify_collectives) \
         if args.ft != "off" else ft_config.OFF
     ctx = make_ctx(multi_pod=False, data_size=1, model_size=1, policy=policy)
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=max(args.steps, 2),
@@ -110,8 +114,8 @@ def main(argv=None) -> int:
             rep = metrics["report"]
             print(f"[train] step {step:5d} loss {float(metrics['loss']):.4f}"
                   f" nll {float(metrics['nll']):.4f}"
-                  f" ft(det/corr) {int(rep['dmr_detected'] + rep['abft_detected'])}/"
-                  f"{int(rep['dmr_corrected'] + rep['abft_corrected'])}"
+                  f" ft(det/corr) {int(rep['dmr_detected'] + rep['abft_detected'] + rep['collective_detected'])}/"
+                  f"{int(rep['dmr_corrected'] + rep['abft_corrected'] + rep['collective_retried'])}"
                   f" {('straggler:' + str(decisions)) if decisions else ''}")
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             saver.save(args.ckpt_dir, step + 1, (params, opt_state))

@@ -24,6 +24,7 @@ from jax import lax
 
 from repro.core import report as ftreport
 from repro.core.dmr import dmr_compute, dmr_report
+from repro.core.ft_collectives import ft_psum, ft_psum_scatter
 from repro.core.ft_config import FTPolicy, OFF
 from repro.core.injection import (DMR_STREAM_1, DMR_STREAM_2, SEAM_FWD,
                                   Injection)
@@ -67,13 +68,25 @@ def _adamw_math(p, g, m, v, lr, cfg: AdamWConfig, bc1, bc2):
     return p - lr * step, m2, v2
 
 
-def global_norm(grads, ctx=None) -> jax.Array:
-    """Grad-norm (the paper's DNRM2) - psum over model for TP shards."""
-    ss = sum(jnp.sum(g.astype(jnp.float32) ** 2)
-             for g in jax.tree.leaves(grads))
+def global_norm(grads, ctx=None, *, policy: FTPolicy = OFF,
+                injection: Optional[Injection] = None,
+                injection_offset: int = 0) -> Tuple[jax.Array, Dict]:
+    """Grad-norm (the paper's DNRM2) - psum over model for TP shards.
+
+    Returns (norm, FTReport): the cross-shard reduction is a gradient-path
+    collective, so with ``policy.verify_collectives`` it runs through the
+    checksummed ``ft_psum`` (bare ``lax.psum`` otherwise).
+    ``injection_offset`` places the scalar's single wire position past the
+    caller's gradient payload range in the collective-seam address space.
+    """
+    ss = jnp.asarray(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)), jnp.float32)
+    rep = ftreport.empty_report()
     if ctx is not None:
-        ss = lax.psum(ss, ctx.model_axis)
-    return jnp.sqrt(ss)
+        ss, rep = ft_psum(ss, ctx.model_axis, policy=policy,
+                          injection=injection,
+                          injection_offset=injection_offset)
+    return jnp.sqrt(ss), rep
 
 
 def apply_updates(params, grads, state, cfg: AdamWConfig, *,
@@ -86,19 +99,28 @@ def apply_updates(params, grads, state, cfg: AdamWConfig, *,
     the duplicated update arithmetic (every leaf is one DMR interval, so a
     spec whose position fits a leaf's stacked (3, n) update fires there)
     and are detected / voted out when the policy runs DMR.  Only
-    forward-seam slots apply - SEAM_BWD_* slots address the model's
-    cotangent GEMMs (launch/steps.py routes them there), never the
-    optimizer.
+    forward-seam slots apply to the update math - SEAM_BWD_* slots address
+    the model's cotangent GEMMs (launch/steps.py routes them there) and
+    SEAM_COLLECTIVE slots the verified grad-norm reduction.
     """
+    coll_inj = injection          # collective seam wants the raw spec
     if injection is not None:
         injection = injection.for_seam(SEAM_FWD)
     step = state["step"] + 1
     lr = schedule(cfg, step)
-    gn = grad_norm if grad_norm is not None else global_norm(grads, ctx)
+    if grad_norm is not None:
+        gn, rep_gn = grad_norm, ftreport.empty_report()
+    else:
+        # wire position past the grads payload (the step's dp psum owns
+        # [0, n_grads) of the collective address space)
+        n_grads = sum(g.size for g in jax.tree.leaves(grads))
+        gn, rep_gn = global_norm(grads, ctx, policy=policy,
+                                 injection=coll_inj,
+                                 injection_offset=n_grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
     bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
     bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
-    rep = ftreport.empty_report()
+    rep = rep_gn
 
     def upd(p, g, m, v):
         g32 = g.astype(jnp.float32) * scale
@@ -177,22 +199,35 @@ def zero_apply(params, grads, state, cfg: AdamWConfig, ctx, *,
     shard's (n_pad/dp,) slices.  psum_scatter sums gradients across dp while
     handing each shard its slice; all_gather rebuilds updated params.
     ``injection``: see ``apply_updates`` - the per-step DMR fault seam
-    (forward-seam slots only).
+    (forward-seam slots drive the update math, SEAM_COLLECTIVE slots the
+    verified sum+scatter / grad-norm collectives; positions index the
+    flat concatenation of the per-leaf scattered outputs, so one slot
+    addresses exactly one leaf's wire payload).
+
+    Cost note: the scatter is per leaf by construction (the pre-existing
+    schedule), so verification adds two scalar psums per leaf on the
+    clean path - a constant factor on an already per-leaf collective
+    count, but not the single stacked reference psum ``ft_psum`` achieves
+    for all-reduce trees (batching the scatters is a ROADMAP item).
     """
+    coll_inj = injection          # collective seam wants the raw spec
     if injection is not None:
         injection = injection.for_seam(SEAM_FWD)
     axes = ctx.data_axis
     step = state["step"] + 1
     lr = schedule(cfg, step)
     # grad clip on the global norm (pre-reduction grads are identical across
-    # dp for TP params; psum over model only)
-    gn = global_norm(grads, ctx)
+    # dp for TP params; psum over model only).  Its wire position sits past
+    # the scattered-leaf address space ([0, n_wire)).
+    n_wire = sum(_pad_len(p.size, dp_size) // dp_size
+                 for p in jax.tree.leaves(params))
+    gn, rep = global_norm(grads, ctx, policy=policy, injection=coll_inj,
+                          injection_offset=n_wire)
     scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
     bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
     bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
-    rep = ftreport.empty_report()
 
-    def upd(p, g, m_loc, v_loc):
+    def upd(p, g, m_loc, v_loc, wire_offset):
         n = p.size
         n_pad = _pad_len(n, dp_size)
         m_loc = m_loc.reshape(-1)          # (1, n_pad/dp) -> flat
@@ -202,10 +237,13 @@ def zero_apply(params, grads, state, cfg: AdamWConfig, ctx, *,
         # sum over dp + scatter my slice, one collective (optionally bf16:
         # halves the ZeRO wire bytes; hillclimb H3).  SUM, not mean: the
         # loss is pmean'd over data inside train_loss, so per-shard
-        # partials already carry the 1/dp factor.
-        g_loc = lax.psum_scatter(gf.reshape(dp_size, -1), axes,
-                                 scatter_dimension=0, tiled=False
-                                 ).astype(jnp.float32)
+        # partials already carry the 1/dp factor.  Verified per leaf: the
+        # checksum rides the bf16/f32 wire payload itself.
+        g_loc, r_coll = ft_psum_scatter(gf.reshape(dp_size, -1), axes,
+                                        scatter_dimension=0, tiled=False,
+                                        policy=policy, injection=coll_inj,
+                                        injection_offset=wire_offset)
+        g_loc = g_loc.astype(jnp.float32)
         pf = jnp.pad(p.astype(jnp.float32).reshape(-1), (0, n_pad - n))
         p_loc = lax.dynamic_slice_in_dim(
             pf, _dp_index(ctx) * (n_pad // dp_size), n_pad // dp_size)
@@ -227,15 +265,18 @@ def zero_apply(params, grads, state, cfg: AdamWConfig, ctx, *,
         p_new = lax.all_gather(out[0].astype(
             collective_dtype if p.dtype != jnp.float32 else jnp.float32),
             axes, axis=0, tiled=True)[:n].reshape(p.shape)
-        return (p_new.astype(p.dtype), out[1][None, :], out[2][None, :], r)
+        return (p_new.astype(p.dtype), out[1][None, :], out[2][None, :],
+                ftreport.merge(r, r_coll))
 
     flat_p, tdef = jax.tree.flatten(params)
     flat_g = jax.tree.leaves(grads)
     flat_m = jax.tree.leaves(state["m"])
     flat_v = jax.tree.leaves(state["v"])
     new_p, new_m, new_v = [], [], []
+    wire_offset = 0               # flat collective-seam address space
     for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
-        np_, nm, nv, r = upd(p, g, m, v)
+        np_, nm, nv, r = upd(p, g, m, v, wire_offset)
+        wire_offset += _pad_len(p.size, dp_size) // dp_size
         new_p.append(np_)
         new_m.append(nm)
         new_v.append(nv)

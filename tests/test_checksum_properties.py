@@ -117,3 +117,74 @@ def test_dmr_reduce_matches_sum(rows, cols, seed):
     np.testing.assert_allclose(float(s), float(x.sum()), rtol=1e-4,
                                atol=1e-4)
     assert int(v.detected) == 0
+
+
+# -- collective checksum tolerance (ft_psum; docs/abft-math.md sec. 6) -------
+@st.composite
+def psum_case(draw):
+    n = draw(st.integers(4, 4096))
+    world = draw(st.sampled_from([1, 2, 4, 8, 16, 32, 64]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.sampled_from([1.0, 1e3, 1e6]))
+    biased = draw(st.booleans())
+    return n, world, seed, scale, biased
+
+
+@given(psum_case())
+@settings(**HYP)
+def test_collective_tolerance_covers_clean_drift_across_world_sizes(case):
+    """Emulated psum verification never flags a clean reduction.
+
+    ``sum(psum(x))`` is compared against ``psum(sum(x))`` exactly as
+    ``ft_psum`` does, with the world axis emulated by sequential f32
+    accumulation over per-shard operands (worst-case association, no
+    tree-reduction help).  The entries of the reduced array are ~world x
+    the local magnitudes - the reason the tolerance must scale with
+    ``n * world`` - and sign-correlated ("biased") shard data maximizes
+    the drift the way real gradient trees do.
+    """
+    from repro.core.ft_collectives import collective_tol
+
+    n, world, seed, scale, biased = case
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (world, n), jnp.float32) * scale
+    if biased:
+        xs = jnp.abs(xs)          # shared sign -> linear partial growth
+    # wire side: elementwise psum (sequential over shards), then sum
+    reduced = np.zeros((n,), np.float32)
+    for w in range(world):
+        reduced = (reduced + np.asarray(xs[w])).astype(np.float32)
+    got = np.float32(np.sum(reduced, dtype=np.float32))
+    # reference side: per-shard local sums, then the scalar psum
+    ref = np.float32(0.0)
+    local_abs = np.float32(0.0)
+    for w in range(world):
+        ref = np.float32(ref + np.sum(np.asarray(xs[w]),
+                                      dtype=np.float32))
+        local_abs = np.float32(
+            local_abs + np.sum(np.abs(np.asarray(xs[w])),
+                               dtype=np.float32))
+    tol = float(collective_tol(n, world, local_abs, tol_factor=4.0,
+                               eps=float(jnp.finfo(jnp.float32).eps)))
+    assert abs(float(got) - float(ref)) <= tol, (n, world, scale, biased)
+
+
+@given(psum_case())
+@settings(**HYP)
+def test_collective_tolerance_scales_with_n_times_world(case):
+    """The budget must grow with the PRODUCT n * world (the reduced
+    entries are world x larger), not the term count n + world: doubling
+    the mesh at fixed mass doubles the threshold."""
+    from repro.core.ft_collectives import collective_tol
+
+    n, world, _, scale, _ = case
+    mass = n * world * scale
+    eps = float(jnp.finfo(jnp.float32).eps)
+    t1 = float(collective_tol(n, world, mass, tol_factor=4.0, eps=eps))
+    t2 = float(collective_tol(n, 2 * world, mass, tol_factor=4.0, eps=eps))
+    assert t2 == pytest.approx(2 * t1, rel=1e-6)
+    # and it still vanishes against the campaign's smallest injected rung
+    # for leaf-sized payloads at unit scale (no masking of real faults)
+    unit = float(collective_tol(96, world, 96.0 * world, tol_factor=4.0,
+                                eps=eps))
+    assert unit < 512.0

@@ -85,6 +85,120 @@ def test_collective_checksum_clean_path(mesh):
     assert int(rep["collective_detected"]) == 0
 
 
+def test_collective_wire_fault_retried_then_counted_sticky(mesh):
+    """A transient wire fault on a verified psum is retried away (values
+    bit-equal to clean); a sticky one persists and raises
+    collective_uncorrected."""
+    from repro.core import ft_psum
+    from repro.core.injection import (COLLECTIVE_WIRE,
+                                      COLLECTIVE_WIRE_STICKY,
+                                      SEAM_COLLECTIVE)
+    pol = FTPolicy(mode="hybrid", verify_collectives=True)
+
+    def f(x, inj):
+        y, rep = ft_psum(x, "data", policy=pol, injection=inj)
+        return y, rep
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,), jnp.float32)
+    fn = jax.jit(jax.shard_map(
+        f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), {
+            k: P() for k in ftreport.FIELDS}), check_vma=False))
+    clean, _ = fn(x, Injection.none())
+
+    inj = Injection.at(stream=COLLECTIVE_WIRE, pos=7, delta=100.0,
+                       seam=SEAM_COLLECTIVE)
+    y, rep = fn(x, inj)
+    assert int(rep["collective_detected"]) == 1
+    assert int(rep["collective_retried"]) == 1
+    assert int(rep["collective_uncorrected"]) == 0
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(clean))
+
+    inj = Injection.at(stream=COLLECTIVE_WIRE_STICKY, pos=7, delta=100.0,
+                       seam=SEAM_COLLECTIVE)
+    y, rep = fn(x, inj)
+    assert int(rep["collective_detected"]) == 1
+    assert int(rep["collective_uncorrected"]) == 1
+    assert abs(float(y[7]) - float(clean[7])) > 50.0
+
+
+def test_zero_scatter_wire_addressing_is_flat_across_leaves(mesh):
+    """One SEAM_COLLECTIVE slot addresses exactly ONE leaf of the ZeRO
+    sum+scatter schedule (flat-concatenation convention): a position in
+    the second leaf's range fires once, not once per leaf."""
+    from repro.core.injection import COLLECTIVE_WIRE, SEAM_COLLECTIVE
+    from repro.optim import adamw
+
+    pol = FTPolicy(mode="off", verify_collectives=True)
+    params = {"a": jnp.arange(8.0, dtype=jnp.float32),
+              "b": jnp.arange(8.0, 16.0, dtype=jnp.float32)}
+    grads = jax.tree.map(jnp.ones_like, params)
+    state = adamw.zero_init(params, 1, 1)
+    cfg = adamw.AdamWConfig(warmup=1, total_steps=10)
+    ctx = _ctx(pol)
+
+    def f(p, g, s, inj):
+        p2, s2, rep = adamw.zero_apply(p, g, s, cfg, ctx, policy=pol,
+                                       dp_size=1, injection=inj)
+        return p2, rep
+
+    pspec = {"a": P(), "b": P()}
+    fn = jax.jit(jax.shard_map(
+        f, mesh=mesh,
+        in_specs=(pspec, pspec,
+                  {"m": pspec, "v": pspec, "step": P()}, P()),
+        out_specs=(pspec, {k: P() for k in ftreport.FIELDS}),
+        check_vma=False))
+    clean, _ = fn(params, grads, state, Injection.none())
+    # pos 11 lies in leaf "b"'s slice (offsets: a=[0,8), b=[8,16))
+    inj = Injection.at(stream=COLLECTIVE_WIRE, pos=11, delta=64.0,
+                       seam=SEAM_COLLECTIVE)
+    p2, rep = fn(params, grads, state, inj)
+    assert int(rep["collective_detected"]) == 1   # one leaf, not two
+    assert int(rep["collective_uncorrected"]) == 0
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(clean)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # out-of-range position fires nowhere and raises nothing
+    inj = Injection.at(stream=COLLECTIVE_WIRE, pos=99, delta=64.0,
+                       seam=SEAM_COLLECTIVE)
+    _, rep = fn(params, grads, state, inj)
+    assert int(rep["collective_detected"]) == 0
+
+
+def test_collective_fault_in_train_step_surfaces_in_metrics(mesh):
+    """A wire fault on the dp grad all-reduce of a real train step is
+    detected, retried, and leaves params bit-equal to the clean step."""
+    from repro.core.injection import COLLECTIVE_WIRE, SEAM_COLLECTIVE
+    from repro.launch.steps import make_ctx, make_smoke_train_fn
+    from repro.optim import adamw
+
+    cfg = get_config("llama3_8b").smoke()
+    model = build_model(cfg)
+    pol = FTPolicy(mode="hybrid", fused=False, verify_collectives=True)
+    ctx = make_ctx(multi_pod=False, data_size=1, model_size=1, policy=pol)
+    params = model.init(jax.random.PRNGKey(0), 1)
+    opt_cfg = adamw.AdamWConfig(warmup=1, total_steps=100)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32),
+                                          0, cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32),
+                                          0, cfg.vocab)}
+    fn = make_smoke_train_fn(model, ctx, opt_cfg, params, batch,
+                             opt_policy=pol)
+    state = adamw.init_state(params)
+    p_cln, _, m_cln = fn(params, state, batch, Injection.none())
+    assert int(m_cln["report"]["collective_detected"]) == 0
+
+    total = sum(x.size for x in jax.tree.leaves(params))
+    inj = Injection.at(stream=COLLECTIVE_WIRE, pos=total // 3, delta=1e4,
+                       seam=SEAM_COLLECTIVE)
+    p_inj, _, m_inj = fn(params, state, batch, inj)
+    rep = m_inj["report"]
+    assert int(rep["collective_detected"]) >= 1
+    assert int(rep["collective_retried"]) >= 1
+    assert int(rep["collective_uncorrected"]) == 0
+    for a, b in zip(jax.tree.leaves(p_inj), jax.tree.leaves(p_cln)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_report_counters_flow_through_train_metrics(mesh):
     """FT counters must surface in step metrics (fleet SDC observability)."""
     cfg = get_config("granite_8b").smoke()
