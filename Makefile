@@ -3,16 +3,36 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test campaign-smoke campaign-full drill bench-smoke docs-check ci
+CAMPAIGN_OUT ?= /tmp/ftblas_campaign
+SHARDS ?= 4
+
+.PHONY: test campaign-smoke campaign-compiled-smoke campaign-full drill \
+        bench-smoke docs-check ci
 
 test:            ## tier-1 test suite (ROADMAP contract)
 	$(PY) -m pytest -x -q
 
-campaign-smoke:  ## fault-injection campaign, CI sub-grid (gates on verdict)
-	$(PY) -m repro.campaign.run --smoke --quiet --out /tmp/ftblas_campaign
+# The CI sub-grid runs as a $(SHARDS)-shard fleet + merge: the merged
+# campaign.json is byte-identical to a single-process run of the same
+# manifest, and the gate applies at --merge over the full manifest.
+campaign-smoke:  ## fault-injection campaign, sharded CI sub-grid
+	rm -rf $(CAMPAIGN_OUT)/shards
+	for i in $$(seq 0 $$(($(SHARDS) - 1))); do \
+	    $(PY) -m repro.campaign.run --smoke --quiet \
+	        --shard-index $$i --shard-count $(SHARDS) \
+	        --out $(CAMPAIGN_OUT) || exit 1; \
+	done
+	$(PY) -m repro.campaign.run --quiet --merge --out $(CAMPAIGN_OUT)
+
+# Reduced sub-grid (one routine per kernel family + the model/grad seams)
+# through the compiled lowering: FTPolicy.interpret=False end to end.
+campaign-compiled-smoke:  ## compiled-backend campaign gate
+	$(PY) -m repro.campaign.run --smoke --quiet --backends compiled \
+	    --routines axpy,dot,gemv,gemm,trsm,ft_dense,ft_bmm,ft_dense_grad \
+	    --out $(CAMPAIGN_OUT)_compiled
 
 campaign-full:   ## full grid: all policies (incl. novote/abft/dmr-fused)
-	$(PY) -m repro.campaign.run --quiet --time --out /tmp/ftblas_campaign_full
+	$(PY) -m repro.campaign.run --quiet --time --out $(CAMPAIGN_OUT)_full
 
 drill:           ## Poisson errors-per-minute train-loop drill
 	$(PY) -m repro.campaign.run --smoke --quiet --drill \
@@ -24,4 +44,4 @@ bench-smoke:     ## per-routine FT overhead timings via the campaign engine
 docs-check:      ## docs/*.md cross-links + architecture.md module names
 	$(PY) tools/check_docs.py
 
-ci: test campaign-smoke bench-smoke docs-check
+ci: test campaign-smoke campaign-compiled-smoke bench-smoke docs-check

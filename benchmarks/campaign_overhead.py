@@ -22,6 +22,13 @@ psum_scatter, bare (``lax.psum`` / ``lax.psum_scatter``) vs checksummed
 (``ft_psum`` / ``ft_psum_scatter`` under ``verify_collectives``) - the
 verification adds one scalar-vector psum and O(n) local sums against the
 collective's O(n) wire bytes.  Emitted as a third ``BENCH JSON`` line.
+
+And a BACKEND mode: the same fused-kernel campaign sub-grid executed
+through both kernel lowerings (interpret-mode Pallas vs the compiled
+backend, ``FTPolicy.interpret=False``), comparing mean per-cell wall time
+from the executor's compile-cache stats - the number that makes the
+sharded compiled smoke cheaper per cell than the interpret sweep.
+Emitted as a fourth ``BENCH JSON`` line.
 """
 from __future__ import annotations
 
@@ -199,6 +206,32 @@ def bench_verified_collectives() -> dict:
     }
 
 
+def bench_backend_per_cell() -> dict:
+    """Interpret vs compiled backend: mean per-cell wall time over the
+    fused-kernel sub-grid (one routine per kernel family)."""
+    from repro.campaign import build_cells, executor
+
+    per_cell = {}
+    compiles = {}
+    for backend in ("interpret", "compiled"):
+        cells = build_cells(
+            smoke=True, dtypes=["f32"], models=["single"],
+            routines=["axpy", "gemv", "gemm", "ft_dense"],
+            policies=["hybrid-fused"], backends=[backend])
+        _, stats = executor.execute(cells, seed=0)
+        walls = list(stats.cell_wall_ms.values())
+        per_cell[backend] = sum(walls) / max(len(walls), 1)
+        compiles[backend] = stats.compiles.get(backend, 0)
+    return {
+        "bench": "campaign_backend_per_cell",
+        "programs_per_backend": compiles,
+        "ms_per_cell_interpret": round(per_cell["interpret"], 2),
+        "ms_per_cell_compiled": round(per_cell["compiled"], 2),
+        "speedup_compiled": round(
+            per_cell["interpret"] / max(per_cell["compiled"], 1e-9), 2),
+    }
+
+
 def main() -> None:
     from repro.campaign import build_cells, run_cells, summarize
 
@@ -233,6 +266,13 @@ def main() -> None:
     print(f"campaign_collective_verified,{cv['us_verified']},"
           f"overhead_pct={cv['overhead_pct_verified']:.2f}")
     print("BENCH JSON " + json.dumps(cv))
+
+    bk = bench_backend_per_cell()
+    print(f"campaign_backend_interpret,{1e3 * bk['ms_per_cell_interpret']},"
+          f"derived=us_per_cell")
+    print(f"campaign_backend_compiled,{1e3 * bk['ms_per_cell_compiled']},"
+          f"derived=speedup={bk['speedup_compiled']}")
+    print("BENCH JSON " + json.dumps(bk))
 
 
 if __name__ == "__main__":

@@ -14,8 +14,11 @@ CLI: ``python -m repro.campaign.run --smoke --out /tmp/campaign``.
 """
 from repro.campaign.errors import (PoissonSchedule, burst, exponent_delta,
                                    single_error)
-from repro.campaign.grid import (Cell, POLICIES, ROUTINES, SMOKE_POLICIES,
-                                 build_cells)
+from repro.campaign.executor import (build_manifest, execute,
+                                     manifest_fingerprint, merge_shards,
+                                     run_shard, shard_cells)
+from repro.campaign.grid import (BACKENDS, Cell, POLICIES, ROUTINES,
+                                 SMOKE_POLICIES, build_cells)
 from repro.campaign.report import (summarize, to_markdown, write_json,
                                    write_markdown)
-from repro.campaign.runner import CellResult, run_cells
+from repro.campaign.runner import CellResult, ExecStats, run_cells

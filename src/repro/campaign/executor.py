@@ -1,0 +1,274 @@
+"""Sharded dual-backend campaign executor.
+
+The scale-out substrate for the campaign engine: instead of one process
+walking the whole grid, the cell list becomes a *deterministic manifest*
+that any number of processes/hosts can split, execute, and re-fold into a
+single verdict report byte-identical to a single-process run.
+
+Three pieces:
+
+  manifest   ``build_manifest`` fingerprints the exact cell list + seed.
+             Every shard embeds the fingerprint in its partial-result
+             file; ``merge_shards`` refuses to fold shards from different
+             grids, and a resumed shard discards stale partials.
+
+  shards     ``shard_cells(cells, i, n)`` partitions the manifest by
+             COMBO GROUP - all cells sharing a (routine, policy, dtype,
+             backend) jaxpr signature stay on one shard, groups are dealt
+             round-robin - so sharding never duplicates an XLA
+             compilation that a single process would have shared.
+             ``run_shard`` executes one shard resumably: results land in
+             ``shards/shard-<i>of<n>.json`` keyed by cell id, and a
+             re-run after an interrupt executes only the missing cells.
+
+  merge      ``merge_shards`` folds any ordering/subset layout of shard
+             files back into manifest order, verifies every cell is
+             present exactly once, and returns plain result dicts ready
+             for ``report.summarize``.  Per-cell injection PRNG keys are
+             derived from cell identity (``runner.injection_key``), not
+             loop position, which is what makes the folded report
+             byte-identical to the single-process one.
+
+Determinism contract: ``campaign.json`` carries no wall-clock content.
+Execution telemetry (compile counts per backend, per-cell wall time) is
+collected in ``runner.ExecStats`` and surfaces in the shard partials and
+``campaign.md``'s executor section only.  (``--time`` overhead rows are
+wall-clock by nature; byte-identity is guaranteed for runs without it.)
+
+Backend axis: "interpret" runs Pallas kernels through the interpreter,
+"compiled" sets ``FTPolicy.interpret=False`` so kernels lower through the
+platform's Pallas compiler - or, on platforms without one, through the
+XLA-compiled jnp lowerings in ``kernels/ops.py`` (see
+``kernels/backend.py`` for the honest definition of "compiled" per
+platform).
+"""
+from __future__ import annotations
+
+import glob
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.campaign.grid import BACKENDS, Cell
+from repro.campaign.runner import CellResult, ExecStats, run_cells
+from repro.kernels.backend import compiled_pallas_supported
+
+__all__ = ["BACKENDS", "build_manifest", "manifest_fingerprint",
+           "shard_cells", "shard_path", "run_shard", "merge_shards",
+           "execute", "compiled_pallas_supported"]
+
+
+# -- manifest -----------------------------------------------------------------
+def manifest_fingerprint(cells: Sequence[Cell], seed: int) -> str:
+    """Stable digest of the exact cell list + seed: two processes agree on
+    it iff they would execute the same cells with the same faults."""
+    blob = json.dumps([c.as_dict() for c in cells], sort_keys=True)
+    return hashlib.sha256(f"{blob}|seed={seed}".encode()).hexdigest()[:16]
+
+
+def build_manifest(cells: Sequence[Cell], seed: int) -> dict:
+    return {
+        "fingerprint": manifest_fingerprint(cells, seed),
+        "seed": seed,
+        "n_cells": len(cells),
+        "cells": [c.cell_id for c in cells],
+    }
+
+
+def _combo_key(c: Cell) -> Tuple[str, str, str, str]:
+    return (c.routine, c.policy, c.dtype, c.backend)
+
+
+def shard_cells(cells: Sequence[Cell], shard_index: int,
+                shard_count: int) -> List[Cell]:
+    """Deterministic shard ``shard_index`` of ``shard_count``.
+
+    Partitioning is by combo group (first-appearance order, dealt round
+    robin): every (routine, policy, dtype, backend) jaxpr signature lands
+    whole on one shard, so the shard fleet compiles exactly as many XLA
+    programs as a single process would.
+    """
+    if not (0 <= shard_index < shard_count):
+        raise ValueError(
+            f"shard index {shard_index} outside [0, {shard_count})")
+    order: List[Tuple[str, str, str, str]] = []
+    groups: Dict[Tuple[str, str, str, str], List[Cell]] = {}
+    for c in cells:
+        k = _combo_key(c)
+        if k not in groups:
+            order.append(k)
+            groups[k] = []
+        groups[k].append(c)
+    mine: List[Cell] = []
+    for gi, k in enumerate(order):
+        if gi % shard_count == shard_index:
+            mine.extend(groups[k])
+    return mine
+
+
+# -- shard execution ----------------------------------------------------------
+def shard_path(out_dir: str, shard_index: int, shard_count: int) -> str:
+    return os.path.join(out_dir, "shards",
+                        f"shard-{shard_index}of{shard_count}.json")
+
+
+def _write_json_atomic(payload: dict, path: str) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def run_shard(cells: Sequence[Cell], *, seed: int, shard_index: int,
+              shard_count: int, out_dir: str,
+              grid_args: Optional[dict] = None,
+              with_timings: bool = False,
+              log=lambda msg: None) -> Tuple[str, int, int]:
+    """Execute shard ``shard_index`` of the manifest, resumably.
+
+    Returns ``(partial_path, n_executed, n_resumed)``.  If a partial file
+    with a matching (fingerprint, seed) already holds results for some of
+    this shard's cells, those cells are skipped and their results kept -
+    resume-after-interrupt costs only the missing cells (plus their
+    combos' recompiles).  A stale partial (different grid or seed) is
+    discarded wholesale.
+    """
+    fingerprint = manifest_fingerprint(cells, seed)
+    mine = shard_cells(cells, shard_index, shard_count)
+    path = shard_path(out_dir, shard_index, shard_count)
+
+    done: Dict[str, dict] = {}
+    stats = ExecStats()
+    if os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        if (prev.get("meta", {}).get("fingerprint") == fingerprint
+                and prev.get("meta", {}).get("seed") == seed):
+            done = dict(prev.get("results", {}))
+            stats = ExecStats.from_dict(prev.get("exec", {}))
+            log(f"shard {shard_index}/{shard_count}: resuming, "
+                f"{len(done)} cells already done")
+        else:
+            log(f"shard {shard_index}/{shard_count}: stale partial "
+                f"(grid/seed changed), discarding")
+
+    todo = [c for c in mine if c.cell_id not in done]
+    results = run_cells(todo, seed=seed, with_timings=with_timings,
+                        log=log, stats=stats)
+    for r in results:
+        done[r.cell.cell_id] = r.as_dict()
+
+    payload = {
+        "meta": {
+            "fingerprint": fingerprint,
+            "seed": seed,
+            "shard_index": shard_index,
+            "shard_count": shard_count,
+            "n_cells": len(mine),
+            "grid": grid_args or {},
+        },
+        "results": {c.cell_id: done[c.cell_id] for c in mine},
+        "exec": stats.as_dict(),
+    }
+    _write_json_atomic(payload, path)
+    return path, len(results), len(mine) - len(results)
+
+
+# -- merge --------------------------------------------------------------------
+def read_shard_grid(out_dir: str) -> Tuple[dict, int]:
+    """Recover the grid selection + seed the shard fleet actually ran.
+
+    Every CLI-written partial embeds its grid args (``meta.grid``) and
+    seed; all partials under ``out_dir`` must agree, so ``--merge`` can
+    rebuild the identical manifest with no other flags.  Raises if no
+    partials exist, one predates the grid field (API-written partials
+    pass grid_args explicitly), or two disagree.
+    """
+    paths = sorted(glob.glob(os.path.join(out_dir, "shards",
+                                          "shard-*.json")))
+    if not paths:
+        raise FileNotFoundError(f"no shard partials under "
+                                f"{out_dir}/shards/")
+    grid = seed = None
+    for p in paths:
+        with open(p) as f:
+            meta = json.load(f).get("meta", {})
+        g = meta.get("grid")
+        if not g:
+            raise ValueError(f"{p}: partial carries no grid args - "
+                             f"re-run the shard via the CLI")
+        if grid is None:
+            grid, seed = g, meta.get("seed")
+        elif g != grid or meta.get("seed") != seed:
+            raise ValueError(f"{p}: grid/seed disagrees with "
+                             f"{paths[0]} - mixed shard fleets?")
+    return grid, seed
+
+
+def merge_shards(cells: Sequence[Cell], *, seed: int,
+                 out_dir: Optional[str] = None,
+                 shard_paths: Optional[Sequence[str]] = None
+                 ) -> Tuple[List[dict], ExecStats, List[dict]]:
+    """Fold shard partials into manifest-ordered result dicts.
+
+    Accepts the shard files in ANY order (and any shard_count layout, as
+    long as the fingerprints match and coverage is exact).  Returns
+    ``(results, exec_stats, shard_metas)``; feeding ``results`` to
+    ``report.summarize`` + ``report.write_json`` yields a campaign.json
+    byte-identical to a single-process run of the same manifest.
+    """
+    if shard_paths is None:
+        if out_dir is None:
+            raise ValueError("need out_dir or shard_paths")
+        shard_paths = sorted(
+            glob.glob(os.path.join(out_dir, "shards", "shard-*.json")))
+    if not shard_paths:
+        raise FileNotFoundError(
+            f"no shard partials under {out_dir}/shards/")
+
+    fingerprint = manifest_fingerprint(cells, seed)
+    by_id: Dict[str, dict] = {}
+    stats = ExecStats()
+    metas: List[dict] = []
+    for p in shard_paths:
+        with open(p) as f:
+            shard = json.load(f)
+        meta = shard.get("meta", {})
+        if meta.get("fingerprint") != fingerprint:
+            raise ValueError(
+                f"{p}: fingerprint {meta.get('fingerprint')} does not "
+                f"match the manifest ({fingerprint}) - mixed grids/seeds")
+        for cid, res in shard.get("results", {}).items():
+            if cid in by_id and by_id[cid] != res:
+                raise ValueError(f"{p}: conflicting duplicate result for "
+                                 f"{cid}")
+            by_id[cid] = res
+        stats.merge(ExecStats.from_dict(shard.get("exec", {})))
+        metas.append(meta)
+
+    missing = [c.cell_id for c in cells if c.cell_id not in by_id]
+    if missing:
+        raise ValueError(
+            f"merge incomplete: {len(missing)} cells missing "
+            f"(e.g. {missing[:3]}) - did every shard run?")
+    extra = set(by_id) - {c.cell_id for c in cells}
+    if extra:
+        raise ValueError(f"merge has {len(extra)} unknown cells "
+                         f"(e.g. {sorted(extra)[:3]})")
+    return [by_id[c.cell_id] for c in cells], stats, metas
+
+
+# -- single-process convenience ----------------------------------------------
+def execute(cells: Sequence[Cell], *, seed: int = 0,
+            with_timings: bool = False,
+            log=lambda msg: None) -> Tuple[List[CellResult], ExecStats]:
+    """Run the whole manifest in-process (the shard_count == 1 case),
+    returning results plus the executor telemetry."""
+    stats = ExecStats()
+    results = run_cells(cells, seed=seed, with_timings=with_timings,
+                        log=log, stats=stats)
+    return results, stats

@@ -1,8 +1,10 @@
-"""Campaign sweep grid: routine x policy x dtype x shape x error model.
+"""Campaign sweep grid: routine x policy x dtype x backend x error model.
 
 ``build_cells`` enumerates the campaign as a list of plain-data ``Cell``
-records (JSON-trivial, shippable to workers); ``ROUTINES`` / ``POLICIES``
-are the registries that materialize a cell back into executable pieces.
+records (JSON-trivial, shippable to workers - the shard executor's
+manifest entries); ``ROUTINES`` / ``POLICIES`` are the registries that
+materialize a cell back into executable pieces.  The ``backend`` axis
+selects the kernel lowering (``FTPolicy.interpret``; kernels/backend.py).
 
 Each ``Routine`` wraps one protected FT-BLAS entry point behind a uniform
 four-method surface:
@@ -61,10 +63,23 @@ from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, COLLECTIVE_WIRE,
 
 DTYPES: Dict[str, jnp.dtype] = {"f32": jnp.float32, "bf16": jnp.bfloat16}
 
+# Backend axis: which lowering executes a cell's kernels (threaded through
+# ``FTPolicy.interpret``; see kernels/backend.py for what "compiled" means
+# on a platform without a Pallas compiler).
+BACKENDS = ("interpret", "compiled")
+
 # Per-dtype relative tolerance for oracle comparison, scaled by each
 # routine's typical output magnitude (ref_scale).  bf16 carries ~8 mantissa
 # bits, so clean results already drift at the percent level.
 TOL_REL = {"f32": 2e-3, "bf16": 0.12}
+
+# Per-backend headroom on the oracle tolerance: the compiled lowerings
+# accumulate in a different order than the interpret-mode tile loop (XLA
+# dot-general reduction / Mosaic tiling vs per-tile partial sums), so the
+# clean drift differs at the same ulp scale.  Injected deltas are anchored
+# to ref_scale, orders of magnitude above either bound, so the headroom
+# costs no detection sensitivity.
+BACKEND_TOL = {"interpret": 1.0, "compiled": 1.5}
 
 
 # -- axes ---------------------------------------------------------------------
@@ -153,8 +168,8 @@ class Routine:
     # one detect+correct-by-vote routine whose *detection* needs the error
     # to change the argmax - its StreamSpec pins the position.
 
-    def tol(self, dtype_name: str) -> float:
-        return TOL_REL[dtype_name] * self.ref_scale
+    def tol(self, dtype_name: str, backend: str = "interpret") -> float:
+        return TOL_REL[dtype_name] * BACKEND_TOL[backend] * self.ref_scale
 
 
 def _np64(x) -> np.ndarray:
@@ -641,6 +656,7 @@ class Cell:
     level: str
     policy: str
     dtype: str
+    backend: str          # "interpret" | "compiled"
     model: str            # "single" | "burst"
     stream_kind: str      # "dmr" | "abft"
     stream: int
@@ -649,6 +665,15 @@ class Cell:
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    @property
+    def logical_id(self) -> str:
+        """Cell identity with the backend component stripped: the two
+        backend variants of one logical cell share it, so the runner can
+        derive IDENTICAL injection draws for both (the parity gate compares
+        verdicts and counters under the same fault)."""
+        parts = self.cell_id.split("/")
+        return "/".join(parts[:3] + parts[4:])
 
 
 def _expectation(spec: StreamSpec, policy: FTPolicy,
@@ -662,15 +687,15 @@ def _expectation(spec: StreamSpec, policy: FTPolicy,
     return "recovered"              # detected AND output matches the oracle
 
 
-def _mk_cell(rt: Routine, pc: PolicyCase, dtype: str, model: str,
-             spec: StreamSpec) -> Cell:
+def _mk_cell(rt: Routine, pc: PolicyCase, dtype: str, backend: str,
+             model: str, spec: StreamSpec) -> Cell:
     protected = spec.protected_under(pc.policy)
     suffix = spec.label or spec.kind
     return Cell(
-        cell_id=f"{rt.name}/{pc.name}/{dtype}/{model}-{suffix}",
+        cell_id=f"{rt.name}/{pc.name}/{dtype}/{backend}/{model}-{suffix}",
         routine=rt.name, level=rt.level, policy=pc.name, dtype=dtype,
-        model=model, stream_kind=spec.kind, stream=spec.stream,
-        protected=protected,
+        backend=backend, model=model, stream_kind=spec.kind,
+        stream=spec.stream, protected=protected,
         expect=_expectation(spec, pc.policy, protected))
 
 
@@ -678,7 +703,8 @@ def build_cells(*, smoke: bool = True,
                 routines: Optional[Sequence[str]] = None,
                 policies: Optional[Sequence[str]] = None,
                 dtypes: Optional[Sequence[str]] = None,
-                models: Optional[Sequence[str]] = None) -> List[Cell]:
+                models: Optional[Sequence[str]] = None,
+                backends: Optional[Sequence[str]] = None) -> List[Cell]:
     """Enumerate campaign cells.
 
     Smoke grid: every routine x {off, hybrid-fused, hybrid-unfused,
@@ -695,6 +721,11 @@ def build_cells(*, smoke: bool = True,
     epilogue under fused-epilogue ABFT) generate no cells under it, and
     ablation-only policies (hybrid-sepilogue, hybrid-vcoll) generate
     cells only for routines with a stream they change.
+
+    ``backends`` selects which kernel lowerings execute the cells
+    (default: interpret only - the historical grid); selecting both
+    doubles the grid along the backend axis, which is how the
+    interpret-vs-compiled parity gate enumerates its cell pairs.
     """
     def _check(sel, known, what):
         bad = sorted(set(sel) - set(known))
@@ -711,6 +742,8 @@ def build_cells(*, smoke: bool = True,
                   if dtypes else ("f32", "bf16"))
     sel_models = (_check(models, ("single", "burst"), "error model")
                   if models else ("single", "burst"))
+    sel_backends = (_check(backends, BACKENDS, "backend")
+                    if backends else ("interpret",))
 
     # Stream domains don't depend on operand values except iamax's pin;
     # enumerate with a throwaway key (cells are plain data).
@@ -735,17 +768,20 @@ def build_cells(*, smoke: bool = True,
                     and not any(s.kind == "collective" for s in specs)):
                 continue
             for dtype in sel_dtypes:
-                if "single" in sel_models:
+                for backend in sel_backends:
+                    if "single" not in sel_models:
+                        continue
                     for spec in specs:
                         if not spec.exists_under(pc.policy):
                             continue  # hardware path folded away
                         if not spec.protected_under(pc.policy):
-                            # keep ONE control per routine: off/f32 on the
-                            # routine's primary stream.
+                            # keep ONE control per routine per backend:
+                            # off/f32 on the routine's primary stream.
                             if not (pname == "off" and dtype == "f32"
                                     and spec is specs[0]):
                                 continue
-                        cells.append(_mk_cell(rt, pc, dtype, "single", spec))
+                        cells.append(_mk_cell(rt, pc, dtype, backend,
+                                              "single", spec))
         # burst: both ABFT slots in one interval, recompute-fallback policy.
         if ("burst" in sel_models and name in L3_ABFT_ROUTINES
                 and (not policies or "hybrid-recompute" in policies)):
@@ -754,5 +790,7 @@ def build_cells(*, smoke: bool = True,
             for dtype in (("f32",) if smoke else sel_dtypes):
                 if dtype not in sel_dtypes:
                     continue
-                cells.append(_mk_cell(rt, pc, dtype, "burst", spec))
+                for backend in sel_backends:
+                    cells.append(_mk_cell(rt, pc, dtype, backend, "burst",
+                                          spec))
     return cells

@@ -3,44 +3,59 @@
 The JSON schema (consumed by tests and dashboards):
 
   {
-    "meta":    {seed, smoke, jax_version, n_cells, duration_s},
+    "meta":    {seed, smoke, backends, jax_version, n_cells, fingerprint},
     "summary": {cells, protected_cells, detection_rate, clean_false_positives,
                 recovered, detected, escaped, masked, failed, ok},
-    "cells":   [ {cell_id, routine, level, policy, dtype, model,
+    "cells":   [ {cell_id, routine, level, policy, dtype, backend, model,
                   stream_kind, stream, protected, expect, verdict,
                   detected, corrected, unrecoverable,
                   clean_false_positive, clean_ok, output_ok, output_err,
                   tol, clean_counters, inj_counters,
                   overhead_pct, time_ft_us, time_off_us} ],
-    "overheads": [ {routine, policy, time_ft_us, time_off_us,
+    "overheads": [ {routine, policy, backend, time_ft_us, time_off_us,
                     overhead_pct} ]
   }
 
 ``summary.ok`` is the campaign gate: True iff zero clean false positives,
 every protected cell detected its error, and every cell expected to recover
 matched the oracle.
+
+Determinism: ``campaign.json`` is BYTE-DETERMINISTIC for a given manifest
+and seed (no wall-clock fields; ``--time`` overhead rows are the one
+opt-in exception) - that is what lets ``--merge`` fold shard partials into
+a file bit-identical to a single-process run.  Wall-clock telemetry
+(compile counts, per-cell wall time) renders only in ``campaign.md``'s
+executor section, fed from ``runner.ExecStats``.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 
-from repro.campaign.runner import CellResult
+from repro.campaign.runner import CellResult, ExecStats
 
 VERDICTS = ("recovered", "detected", "escaped", "masked",
             "false-positive", "failed")
 
 
-def summarize(results: Sequence[CellResult], *, seed: int, smoke: bool,
-              duration_s: float = 0.0) -> dict:
-    protected = [r for r in results if r.cell.protected]
-    n_det = sum(1 for r in protected if r.detected >= 1)
-    by_verdict = {v: sum(1 for r in results if r.verdict == v)
+def _as_dicts(results: Sequence) -> List[dict]:
+    return [r.as_dict() if isinstance(r, CellResult) else dict(r)
+            for r in results]
+
+
+def summarize(results: Sequence, *, seed: int, smoke: bool,
+              fingerprint: Optional[str] = None) -> dict:
+    """Build the verdict report from CellResults OR plain result dicts
+    (the merge path round-trips through shard JSON)."""
+    cells = _as_dicts(results)
+    protected = [c for c in cells if c["protected"]]
+    n_det = sum(1 for c in protected if c["detected"] >= 1)
+    by_verdict = {v: sum(1 for c in cells if c["verdict"] == v)
                   for v in VERDICTS}
-    n_fp = sum(1 for r in results if r.clean_false_positive)
+    n_fp = sum(1 for c in cells if c["clean_false_positive"])
     # An empty grid (or one with no protected cells - e.g. an over-narrow
     # filter combination) verifies nothing and must not green the gate.
     ok = (len(protected) > 0
@@ -50,28 +65,31 @@ def summarize(results: Sequence[CellResult], *, seed: int, smoke: bool,
 
     overheads = []
     seen = set()
-    for r in results:
-        if r.overhead_pct is None:
+    for c in cells:
+        if c.get("overhead_pct") is None:
             continue
-        k = (r.cell.routine, r.cell.policy)
+        k = (c["routine"], c["policy"], c["backend"])
         if k in seen:
             continue
         seen.add(k)
         overheads.append({
-            "routine": r.cell.routine, "policy": r.cell.policy,
-            "time_ft_us": r.time_ft_us, "time_off_us": r.time_off_us,
-            "overhead_pct": r.overhead_pct})
+            "routine": c["routine"], "policy": c["policy"],
+            "backend": c["backend"],
+            "time_ft_us": c["time_ft_us"], "time_off_us": c["time_off_us"],
+            "overhead_pct": c["overhead_pct"]})
 
+    backends = sorted({c["backend"] for c in cells})
     return {
         "meta": {
             "seed": seed,
             "smoke": smoke,
+            "backends": backends,
             "jax_version": jax.__version__,
-            "n_cells": len(results),
-            "duration_s": round(duration_s, 2),
+            "n_cells": len(cells),
+            "fingerprint": fingerprint,
         },
         "summary": {
-            "cells": len(results),
+            "cells": len(cells),
             "protected_cells": len(protected),
             "detected_protected": n_det,
             "detection_rate": (n_det / len(protected)) if protected else 1.0,
@@ -79,7 +97,7 @@ def summarize(results: Sequence[CellResult], *, seed: int, smoke: bool,
             **by_verdict,
             "ok": ok,
         },
-        "cells": [r.as_dict() for r in results],
+        "cells": cells,
         "overheads": overheads,
     }
 
@@ -94,9 +112,44 @@ def write_json(report: dict, path: str) -> str:
 
 _SYMBOL = {"recovered": "✓", "detected": "d", "escaped": "✗",
            "masked": "·", "false-positive": "FP", "failed": "FAIL"}
+_BACKEND_LABEL = {"interpret": "interpret-mode", "compiled": "compiled"}
 
 
-def to_markdown(report: dict) -> str:
+def _exec_section(exec_stats: ExecStats, cells: List[dict]) -> List[str]:
+    """Executor telemetry: compile-cache effectiveness per backend plus
+    per-cell wall time.  The only wall-clock content of campaign.md."""
+    lines = ["", "## Executor", "",
+             "| backend | cells | XLA programs | cells/program | "
+             "compile (s) | cell wall mean/median (ms) | total (s) |",
+             "|---|---|---|---|---|---|---|"]
+    by_backend = {}
+    for c in cells:
+        by_backend.setdefault(c["backend"], []).append(c["cell_id"])
+    for b in sorted(by_backend):
+        ids = by_backend[b]
+        walls = sorted(exec_stats.cell_wall_ms[i] for i in ids
+                       if i in exec_stats.cell_wall_ms)
+        n_prog = exec_stats.compiles.get(b, 0)
+        comp_s = exec_stats.compile_s.get(b, 0.0)
+        if walls:
+            mean = sum(walls) / len(walls)
+            median = walls[len(walls) // 2]
+            total = sum(walls) / 1e3
+            timing = (f"{mean:.1f} / {median:.1f} | {total:.1f}")
+        else:
+            timing = "- | -"
+        lines.append(
+            f"| {b} | {len(ids)} | {n_prog} | "
+            f"{len(ids) / max(n_prog, 1):.1f} | {comp_s:.1f} | {timing} |")
+    lines.append("")
+    lines.append("(wall-clock figures vary run to run; every other part "
+                 "of this report - and all of campaign.json - is "
+                 "byte-deterministic for a given manifest and seed)")
+    return lines
+
+
+def to_markdown(report: dict,
+                exec_stats: Optional[ExecStats] = None) -> str:
     s = report["summary"]
     lines: List[str] = []
     lines.append("# Fault-injection campaign report")
@@ -104,7 +157,8 @@ def to_markdown(report: dict) -> str:
     m = report["meta"]
     lines.append(f"- grid: {'smoke' if m['smoke'] else 'full'}, "
                  f"{m['n_cells']} cells, seed {m['seed']}, "
-                 f"jax {m['jax_version']}, {m['duration_s']}s")
+                 f"backends {'+'.join(m['backends']) or '-'}, "
+                 f"jax {m['jax_version']}")
     lines.append(f"- **verdict: {'PASS' if s['ok'] else 'FAIL'}** - "
                  f"detection {s['detected_protected']}"
                  f"/{s['protected_cells']} protected cells "
@@ -119,9 +173,11 @@ def to_markdown(report: dict) -> str:
     lines.append("")
 
     cells = report["cells"]
+    multi_backend = len(m["backends"]) > 1
     policies, seen_p = [], set()
     for c in cells:
-        k = (c["policy"], c["dtype"], c["model"], c["stream_kind"])
+        k = (c["policy"], c["dtype"], c["backend"], c["model"],
+             c["stream_kind"])
         if k not in seen_p:
             seen_p.add(k)
             policies.append(k)
@@ -132,39 +188,46 @@ def to_markdown(report: dict) -> str:
             routines.append(c["routine"])
 
     def col_name(k):
-        return f"{k[0]}/{k[1]}/{k[2][0]}-{k[3]}"
+        base = f"{k[0]}/{k[1]}/{k[3][0]}-{k[4]}"
+        return f"{base}@{k[2][0]}" if multi_backend else base
 
     lines.append("| routine | " + " | ".join(col_name(p)
                                              for p in policies) + " |")
     lines.append("|---" * (len(policies) + 1) + "|")
-    index = {(c["routine"], c["policy"], c["dtype"], c["model"],
-              c["stream_kind"]): c for c in cells}
+    index = {(c["routine"], c["policy"], c["dtype"], c["backend"],
+              c["model"], c["stream_kind"]): c for c in cells}
     for rt in routines:
         row = [rt]
-        for (pol, dt, model, kind) in policies:
-            c = index.get((rt, pol, dt, model, kind))
+        for (pol, dt, bk, model, kind) in policies:
+            c = index.get((rt, pol, dt, bk, model, kind))
             row.append(_SYMBOL.get(c["verdict"], "?") if c else " ")
         lines.append("| " + " | ".join(row) + " |")
 
     if report["overheads"]:
+        labels = " + ".join(
+            _BACKEND_LABEL.get(b, b)
+            for b in sorted({o["backend"] for o in report["overheads"]}))
         lines.append("")
-        lines.append("## FT overhead (f32, clean path, interpret-mode "
+        lines.append(f"## FT overhead (f32, clean path, {labels} "
                      "kernels where fused)")
         lines.append("")
-        lines.append("| routine | policy | t_ft (us) | t_off (us) | "
-                     "overhead |")
-        lines.append("|---|---|---|---|---|")
+        lines.append("| routine | policy | backend | t_ft (us) | "
+                     "t_off (us) | overhead |")
+        lines.append("|---|---|---|---|---|---|")
         for o in report["overheads"]:
             lines.append(
-                f"| {o['routine']} | {o['policy']} | "
+                f"| {o['routine']} | {o['policy']} | {o['backend']} | "
                 f"{o['time_ft_us']:.0f} | {o['time_off_us']:.0f} | "
                 f"{o['overhead_pct']:+.1f}% |")
+    if exec_stats is not None:
+        lines.extend(_exec_section(exec_stats, cells))
     lines.append("")
     return "\n".join(lines)
 
 
-def write_markdown(report: dict, path: str) -> str:
+def write_markdown(report: dict, path: str,
+                   exec_stats: Optional[ExecStats] = None) -> str:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
-        f.write(to_markdown(report))
+        f.write(to_markdown(report, exec_stats))
     return path

@@ -2,11 +2,20 @@
 
   PYTHONPATH=src python -m repro.campaign.run --smoke --out /tmp/campaign
 
-Runs the sweep grid (routine x policy x dtype x error model), writes
-``campaign.json`` + ``campaign.md`` verdict reports, and exits nonzero if
-the campaign gate fails (any clean false positive, any missed detection on
-a protected cell, any violated expectation).  Cell naming, the policy
-axis, and the verdict-report schema are documented in docs/campaign.md.
+Runs the sweep grid (routine x policy x dtype x backend x error model),
+writes ``campaign.json`` + ``campaign.md`` verdict reports, and exits
+nonzero if the campaign gate fails (any clean false positive, any missed
+detection on a protected cell, any violated expectation).  Cell naming,
+the policy/backend axes, and the verdict-report schema are documented in
+docs/campaign.md.
+
+Scale-out (docs/campaign.md "Executor & backends"): ``--shard-index K
+--shard-count N`` executes only shard K of the deterministic cell
+manifest and writes a resumable partial under ``<out>/shards/``;
+``--merge`` folds all shard partials into a campaign.json byte-identical
+to a single-process run and applies the gate.  ``--backends compiled``
+runs every cell through the compiled kernel lowering
+(``FTPolicy.interpret=False``).
 
 ``--drill`` additionally runs the train-loop rate drill: a jitted
 ``lax.scan`` over steps with a Poisson errors-per-minute schedule feeding
@@ -48,6 +57,20 @@ def build_argparser() -> argparse.ArgumentParser:
                     help="comma-separated dtype filter (f32,bf16)")
     ap.add_argument("--models", default=None,
                     help="comma-separated error-model filter (single,burst)")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated backend filter "
+                         "(interpret,compiled; default interpret)")
+    ap.add_argument("--shard-index", type=int, default=None,
+                    help="execute only this shard of the cell manifest "
+                         "(with --shard-count; writes <out>/shards/...)")
+    ap.add_argument("--shard-count", type=int, default=None,
+                    help="total number of shards the manifest is split "
+                         "into")
+    ap.add_argument("--merge", action="store_true",
+                    help="fold the shard partials under <out>/shards/ "
+                         "into campaign.json/campaign.md and gate (the "
+                         "grid selection + seed are read from the "
+                         "partials; no other flags needed)")
     ap.add_argument("--time", dest="timings", action="store_true",
                     help="measure per-routine FT-vs-off overhead")
     ap.add_argument("--list", action="store_true",
@@ -58,6 +81,10 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--drill-steps", type=int, default=60)
     ap.add_argument("--drill-rate", type=float, default=300.0,
                     help="errors per minute for the drill schedule")
+    ap.add_argument("--drill-backend", default="interpret",
+                    choices=list(gridmod.BACKENDS),
+                    help="kernel lowering for the drill policies "
+                         "(compiled = fused kernels, interpret=False)")
     return ap
 
 
@@ -65,14 +92,74 @@ def _csv(v):
     return v.split(",") if v else None
 
 
-def run_campaign(args) -> dict:
-    from repro.campaign import report as repmod
-    from repro.campaign import runner as runmod
+def _grid_args(args) -> dict:
+    """The grid selection a shard embeds in its partial so ``--merge`` can
+    rebuild the identical manifest with no other flags."""
+    return {"smoke": args.smoke, "routines": args.routines,
+            "policies": args.policies, "dtypes": args.dtypes,
+            "models": args.models, "backends": args.backends}
 
-    cells = gridmod.build_cells(
-        smoke=args.smoke,
-        routines=_csv(args.routines), policies=_csv(args.policies),
-        dtypes=_csv(args.dtypes), models=_csv(args.models))
+
+def _cells_from_grid(grid: dict):
+    return gridmod.build_cells(
+        smoke=grid["smoke"],
+        routines=_csv(grid["routines"]), policies=_csv(grid["policies"]),
+        dtypes=_csv(grid["dtypes"]), models=_csv(grid["models"]),
+        backends=_csv(grid["backends"]))
+
+
+def _build_cells(args):
+    return _cells_from_grid(_grid_args(args))
+
+
+def _write_reports(args, results, stats, fingerprint, duration_s, *,
+                   seed, smoke) -> dict:
+    from repro.campaign import report as repmod
+
+    report = repmod.summarize(results, seed=seed, smoke=smoke,
+                              fingerprint=fingerprint)
+    jpath = repmod.write_json(report, f"{args.out}/campaign.json")
+    mpath = repmod.write_markdown(report, f"{args.out}/campaign.md",
+                                  exec_stats=stats)
+    s = report["summary"]
+    print(f"\ncampaign: {s['cells']} cells in {duration_s:.2f}s -> "
+          f"{'PASS' if s['ok'] else 'FAIL'}")
+    print(f"  detection {s['detected_protected']}/{s['protected_cells']} "
+          f"protected cells, {s['clean_false_positives']} clean false "
+          f"positives, {s['failed']} failed expectations")
+    if stats is not None and stats.compiles:
+        progs = " ".join(f"{b}:{n}" for b, n in sorted(
+            stats.compiles.items()))
+        print(f"  compile cache: {progs} XLA programs for {s['cells']} "
+              f"cells")
+    print(f"  reports: {jpath}  {mpath}")
+    return report
+
+
+def run_campaign(args) -> dict:
+    from repro.campaign import executor
+
+    if args.merge and args.shard_index is not None:
+        raise ValueError("--merge and --shard-index are exclusive")
+    if (args.shard_index is None) != (args.shard_count is None):
+        raise ValueError("--shard-index and --shard-count go together")
+
+    if args.merge:
+        # the partials record the grid + seed the fleet actually ran, so
+        # merge needs no grid flags (and ignores any that were passed)
+        t0 = time.time()
+        grid, seed = executor.read_shard_grid(args.out)
+        cells = _cells_from_grid(grid)
+        results, stats, metas = executor.merge_shards(
+            cells, seed=seed, out_dir=args.out)
+        print(f"merged {len(metas)} shard partials "
+              f"({len(results)} cells)")
+        fp = executor.manifest_fingerprint(cells, seed)
+        return _write_reports(args, results, stats, fp,
+                              time.time() - t0, seed=seed,
+                              smoke=grid["smoke"])
+
+    cells = _build_cells(args)
     if args.list:
         for c in cells:
             print(c.cell_id, "(protected)" if c.protected else "(control)")
@@ -81,21 +168,25 @@ def run_campaign(args) -> dict:
 
     log = (lambda m: None) if args.quiet else print
     t0 = time.time()
-    results = runmod.run_cells(cells, seed=args.seed,
-                               with_timings=args.timings, log=log)
-    report = repmod.summarize(results, seed=args.seed, smoke=args.smoke,
-                              duration_s=time.time() - t0)
-    jpath = repmod.write_json(report, f"{args.out}/campaign.json")
-    mpath = repmod.write_markdown(report, f"{args.out}/campaign.md")
-    s = report["summary"]
-    print(f"\ncampaign: {s['cells']} cells in "
-          f"{report['meta']['duration_s']}s -> "
-          f"{'PASS' if s['ok'] else 'FAIL'}")
-    print(f"  detection {s['detected_protected']}/{s['protected_cells']} "
-          f"protected cells, {s['clean_false_positives']} clean false "
-          f"positives, {s['failed']} failed expectations")
-    print(f"  reports: {jpath}  {mpath}")
-    return report
+
+    if args.shard_index is not None:
+        path, n_run, n_resumed = executor.run_shard(
+            cells, seed=args.seed, shard_index=args.shard_index,
+            shard_count=args.shard_count, out_dir=args.out,
+            grid_args=_grid_args(args), with_timings=args.timings,
+            log=log)
+        print(f"\nshard {args.shard_index}/{args.shard_count}: "
+              f"{n_run} cells executed, {n_resumed} resumed, in "
+              f"{time.time() - t0:.2f}s -> {path}")
+        # the gate is applied at --merge, over the full manifest
+        return {"summary": {"ok": True, "cells": n_run + n_resumed},
+                "shard": path}
+
+    results, stats = executor.execute(cells, seed=args.seed,
+                                      with_timings=args.timings, log=log)
+    fp = executor.manifest_fingerprint(cells, args.seed)
+    return _write_reports(args, results, stats, fp, time.time() - t0,
+                          seed=args.seed, smoke=args.smoke)
 
 
 # -- train-loop drill ---------------------------------------------------------
@@ -125,7 +216,14 @@ def run_drill(args) -> bool:
 
     # recompute_fallback: at hundreds of errors/min, multi-error intervals
     # occur; the paper's escalation (third calculation) must be armed.
-    policy = FTPolicy(mode="hybrid", fused=False, recompute_fallback=True)
+    # Backend: under --drill-backend compiled the drill seams run the
+    # FUSED kernels through the compiled lowering (interpret=False) - the
+    # production configuration; the interpret default keeps the historical
+    # unfused config (a fused interpret-mode drill is dominated by the
+    # Pallas interpreter, not by anything the drill measures).
+    compiled = args.drill_backend == "compiled"
+    policy = FTPolicy(mode="hybrid", fused=compiled,
+                      recompute_fallback=True, interpret=not compiled)
     B, S, K, N = 2, 16, 64, 96
     # Nominal 50ms steps: 300 err/min -> lam = 0.25 errors per step.
     sched = PoissonSchedule(
@@ -179,8 +277,9 @@ def run_drill(args) -> bool:
     # collective-seam drill below shares the same compiled step - the
     # optimizer/backward drills double as the verified collectives' clean
     # false-positive gate.
-    model_policy = FTPolicy(mode="hybrid", fused=False,
-                            verify_collectives=True)
+    model_policy = FTPolicy(mode="hybrid", fused=compiled,
+                            verify_collectives=True,
+                            interpret=not compiled)
     ctx = make_ctx(multi_pod=False, data_size=1, model_size=1,
                    policy=model_policy)
     params = model.init(jax.random.PRNGKey(0), 1)

@@ -1,9 +1,15 @@
 """Campaign execution: run cells under jax.jit, compare against oracles.
 
-One compiled callable per (routine, policy, dtype): the Injection spec is a
-pytree *argument*, so the clean run and every injected run of a combo share
-a single XLA program - exactly how a production fleet would keep an
-always-on injection seam at zero recompile cost.  Per-cell outcome:
+One compiled callable per (routine, policy, dtype, backend) jaxpr
+signature: the Injection spec is a pytree *argument*, so the clean run and
+every injected run of a combo share a single XLA program - exactly how a
+production fleet would keep an always-on injection seam at zero recompile
+cost.  The ``backend`` axis selects the kernel lowering
+(``FTPolicy.interpret``; see ``kernels/backend.py``), and every injection
+draw is keyed by the cell's LOGICAL identity (grid- and
+partition-independent), so any sharding of the cell list - and both
+backend variants of one logical cell - reproduce identical per-cell
+faults.  Per-cell outcome:
 
   clean run     counters must be all-zero (any hit = false positive) and
                 the output must match the float64 oracle.
@@ -80,14 +86,59 @@ class CellResult:
         return d
 
 
+@dataclasses.dataclass
+class ExecStats:
+    """Execution telemetry collected by the runner / shard executor.
+
+    Deterministic pieces (``compiles`` per backend, program count) feed the
+    compile-cache report; wall-clock pieces (``cell_wall_ms``,
+    ``compile_s``) are nondeterministic and therefore NEVER enter
+    ``campaign.json`` - they surface in ``campaign.md``'s executor section
+    and in the shard partial files only.
+    """
+    compiles: Dict[str, int] = dataclasses.field(default_factory=dict)
+    compile_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    cell_wall_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def record_compile(self, backend: str, seconds: float) -> None:
+        self.compiles[backend] = self.compiles.get(backend, 0) + 1
+        self.compile_s[backend] = self.compile_s.get(backend, 0.0) + seconds
+
+    def record_cell(self, cell_id: str, wall_ms: float) -> None:
+        self.cell_wall_ms[cell_id] = round(wall_ms, 3)
+
+    def merge(self, other: "ExecStats") -> "ExecStats":
+        for b, n in other.compiles.items():
+            self.compiles[b] = self.compiles.get(b, 0) + n
+        for b, s in other.compile_s.items():
+            self.compile_s[b] = self.compile_s.get(b, 0.0) + s
+        self.cell_wall_ms.update(other.cell_wall_ms)
+        return self
+
+    def as_dict(self) -> dict:
+        return {"compiles": self.compiles,
+                "compile_s": {k: round(v, 3)
+                              for k, v in self.compile_s.items()},
+                "cell_wall_ms": self.cell_wall_ms}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExecStats":
+        return cls(compiles=dict(d.get("compiles", {})),
+                   compile_s=dict(d.get("compile_s", {})),
+                   cell_wall_ms=dict(d.get("cell_wall_ms", {})))
+
+
 class _Combo:
-    """Compiled state shared by all cells of one (routine, policy, dtype)."""
+    """Compiled state shared by all cells of one
+    (routine, policy, dtype, backend) jaxpr signature."""
 
     def __init__(self, rt: Routine, policy_name: str, dtype_name: str,
-                 seed: int):
+                 backend: str, seed: int):
         self.rt = rt
-        self.policy = POLICIES[policy_name].policy
+        self.policy = POLICIES[policy_name].policy.replace(
+            interpret=(backend == "interpret"))
         self.dtype_name = dtype_name
+        self.backend = backend
         key = jax.random.fold_in(
             jax.random.PRNGKey(seed),
             zlib.crc32(f"{rt.name}/{dtype_name}".encode()) % (2 ** 31))
@@ -158,30 +209,53 @@ def _time_us(fn, ops, inj, reps: int = 5) -> float:
     return 1e6 * best
 
 
+def injection_key(seed: int, cell: Cell) -> jax.Array:
+    """Per-cell injection PRNG key, derived from the cell's LOGICAL
+    identity: independent of grid composition, shard partitioning, and
+    backend, so shards reproduce the single-process draws exactly and the
+    parity gate compares both backends under the identical fault."""
+    return jax.random.fold_in(
+        jax.random.PRNGKey(seed ^ 0x5EED),
+        zlib.crc32(cell.logical_id.encode()) % (2 ** 31))
+
+
 def run_cells(cells: Sequence[Cell], *, seed: int = 0,
               with_timings: bool = False,
-              log=lambda msg: None) -> List[CellResult]:
+              log=lambda msg: None,
+              stats: Optional[ExecStats] = None) -> List[CellResult]:
     """Execute every cell; returns one CellResult per cell.
 
-    Combos are compiled lazily and cached; timings (optional) compare each
-    f32 FT combo's clean latency against the same routine under policy
-    "off" - the campaign analogue of the paper's overhead tables.
+    Combos are compiled lazily and cached - the compile-cache layer: every
+    cell sharing a (routine, policy, dtype, backend) jaxpr signature
+    reuses one XLA program, and ``stats`` (optional) records how many
+    programs each backend actually compiled plus per-cell wall time.
+    Timings (optional) compare each f32 FT combo's clean latency against
+    the same routine under policy "off" - the campaign analogue of the
+    paper's overhead tables.
     """
-    combos: Dict[Tuple[str, str, str], _Combo] = {}
+    combos: Dict[Tuple[str, str, str, str], _Combo] = {}
 
-    def combo(rt_name: str, policy: str, dtype: str) -> _Combo:
-        k = (rt_name, policy, dtype)
+    def combo(rt_name: str, policy: str, dtype: str, backend: str) -> _Combo:
+        k = (rt_name, policy, dtype, backend)
         if k not in combos:
-            log(f"compile {rt_name}/{policy}/{dtype}")
-            combos[k] = _Combo(ROUTINES[rt_name], policy, dtype, seed)
+            log(f"compile {rt_name}/{policy}/{dtype}/{backend}")
+            t0 = time.perf_counter()
+            combos[k] = _Combo(ROUTINES[rt_name], policy, dtype, backend,
+                               seed)
+            if stats is not None:
+                stats.record_compile(backend, time.perf_counter() - t0)
         return combos[k]
 
     results: List[CellResult] = []
     for i, cell in enumerate(cells):
-        cb = combo(cell.routine, cell.policy, cell.dtype)
+        cb = combo(cell.routine, cell.policy, cell.dtype, cell.backend)
+        # wall clock starts AFTER the (possibly compiling) combo lookup:
+        # compile seconds live in stats.compile_s, cell_wall_ms measures
+        # execution only - the two ExecStats columns stay disjoint.
+        t_cell = time.perf_counter()
         rt = cb.rt
         spec = cb.spec_for(cell)
-        tol = rt.tol(cell.dtype)
+        tol = rt.tol(cell.dtype, cell.backend)
 
         clean_fp = (_counts(cb.clean_rep, _DETECT_KEYS)
                     + _counts(cb.clean_rep, _CORRECT_KEYS)
@@ -189,8 +263,7 @@ def run_cells(cells: Sequence[Cell], *, seed: int = 0,
         clean_err = float(np.max(np.abs(cb.clean_out - cb.oracle)))
         clean_ok = clean_err <= tol
 
-        key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5EED), i)
-        inj = _build_injection(cell, spec, rt, key)
+        inj = _build_injection(cell, spec, rt, injection_key(seed, cell))
         out, rep = cb.run_injected(inj)
         detected = _counts(rep, _DETECT_KEYS)
         corrected = _counts(rep, _CORRECT_KEYS)
@@ -209,6 +282,9 @@ def run_cells(cells: Sequence[Cell], *, seed: int = 0,
             output_ok=output_ok, output_err=output_err, tol=tol,
             clean_counters=cb.clean_rep, inj_counters=rep)
         results.append(res)
+        if stats is not None:
+            stats.record_cell(cell.cell_id,
+                              1e3 * (time.perf_counter() - t_cell))
         log(f"[{i + 1}/{len(cells)}] {cell.cell_id}: {verdict} "
             f"(det={detected} corr={corrected})")
 
@@ -220,27 +296,28 @@ def run_cells(cells: Sequence[Cell], *, seed: int = 0,
 def _attach_timings(results: List[CellResult], combo, log) -> None:
     """Per-routine FT-vs-off latency on the f32 combos already compiled."""
     none = Injection.none()
-    off_cache: Dict[str, float] = {}
+    off_cache: Dict[Tuple[str, str], float] = {}
     seen = set()
     for res in results:
         cell = res.cell
         if cell.dtype != "f32" or cell.policy == "off":
             continue
-        k = (cell.routine, cell.policy)
+        k = (cell.routine, cell.policy, cell.backend)
         if k in seen:
             continue
         seen.add(k)
-        cb = combo(cell.routine, cell.policy, "f32")
-        if cell.routine not in off_cache:
-            cb_off = combo(cell.routine, "off", "f32")
-            off_cache[cell.routine] = _time_us(cb_off.fn, cb_off.ops, none)
+        cb = combo(cell.routine, cell.policy, "f32", cell.backend)
+        off_k = (cell.routine, cell.backend)
+        if off_k not in off_cache:
+            cb_off = combo(cell.routine, "off", "f32", cell.backend)
+            off_cache[off_k] = _time_us(cb_off.fn, cb_off.ops, none)
         t_ft = _time_us(cb.fn, cb.ops, none)
-        t_off = off_cache[cell.routine]
+        t_off = off_cache[off_k]
         overhead = 100.0 * (t_ft - t_off) / max(t_off, 1e-9)
-        log(f"timing {cell.routine}/{cell.policy}: "
+        log(f"timing {cell.routine}/{cell.policy}/{cell.backend}: "
             f"{t_ft:.0f}us vs off {t_off:.0f}us ({overhead:+.1f}%)")
         for r2 in results:
-            if (r2.cell.routine, r2.cell.policy) == k \
+            if (r2.cell.routine, r2.cell.policy, r2.cell.backend) == k \
                     and r2.cell.dtype == "f32":
                 r2.time_ft_us, r2.time_off_us = t_ft, t_off
                 r2.overhead_pct = overhead

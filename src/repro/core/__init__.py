@@ -6,7 +6,7 @@ Public surface:
   dmr_compute          - duplicate/verify/vote combinator (dmr)
   checksum             - ABFT encode/verify/locate/correct algebra
   Injection            - jit-compatible soft-error injection (injection)
-  ft_psum / ft_pmean / ft_psum_scatter
+  ft_psum / ft_pmean / ft_psum_scatter / ft_psum_scatter_tree
                        - checksum-verified collectives (ft_collectives)
   report               - FT telemetry counters
 """
@@ -21,5 +21,6 @@ from repro.core.abft import (ft_matmul, ft_matmul_batched, ft_matmul_diff,
                              matmul_unfused, new_grad_probe, probe_report)
 from repro.core.dmr import dmr_compute, dmr_reduce_sum, DmrVerdict, dmr_report
 from repro.core.ft_dense import ft_dense, ft_dense_fused_gate, ft_bmm
-from repro.core.ft_collectives import ft_psum, ft_pmean, ft_psum_scatter
+from repro.core.ft_collectives import (ft_psum, ft_pmean, ft_psum_scatter,
+                                       ft_psum_scatter_tree)
 from repro.core import checksum, report

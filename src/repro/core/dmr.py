@@ -18,6 +18,13 @@ x86 mechanics -> TPU dataflow (see DESIGN.md Sec. 2):
 Exact equality is sound: identical float ops on identical inputs are
 bitwise-deterministic on both x86 and TPU, so any mismatch is an error.
 
+Backend note: this combinator is pure jnp, so it is BACKEND-INVARIANT -
+``FTPolicy.interpret`` never changes the program it emits (the campaign's
+interpret/compiled axis only swaps the Pallas kernel lowerings in
+``repro.kernels``; fused DMR goes through those, unfused DMR through
+here).  That is why the dmr-grad cells and the collective/optimizer rows
+carry the same evidence under either backend.
+
 Autodiff: the fence is ``lax.optimization_barrier``, which has no
 differentiation rule on the pinned jax floor - ``repro.compat`` registers
 an identity JVP/transpose shim (tangents and cotangents pass through

@@ -196,6 +196,103 @@ def ft_psum(tree, axis_name: AxisNames, *,
     return final, rep
 
 
+def ft_psum_scatter_tree(tree, axis_name: AxisNames, *,
+                         scatter_dimension: int = 0, tiled: bool = False,
+                         policy: Optional[FTPolicy] = None,
+                         injection: Optional[Injection] = None,
+                         injection_offset: int = 0) -> Tuple[object, dict]:
+    """Verified ``lax.psum_scatter`` over a WHOLE tree of leaves (ZeRO's
+    per-leaf fused sum+shard schedule) with batched reference checksums.
+
+    The scatter itself stays per leaf - that is the schedule ZeRO-1 is
+    built on - but every leaf's reference checksum rides ONE stacked
+    (L,)-pair psum up front and ONE stacked (L,) psum of the scattered
+    totals, exactly the way ``ft_psum`` batches an all-reduce tree.  The
+    clean path therefore costs two stacked scalar psums TOTAL instead of
+    two per leaf; the retry (re-scatter of every leaf + one stacked
+    re-verification psum) lives inside the mismatch branch.  Detection
+    stays per leaf: residuals, tolerances (at each leaf's wire-dtype
+    ulp), retry selection, and counters are all (L,)-vectors, so the
+    verdict for any single leaf is identical to an isolated
+    ``ft_psum_scatter`` call on it.
+
+    ``injection_offset``: flat index of the FIRST leaf's scattered output
+    within the caller's collective-seam address space; subsequent leaves
+    follow at running offsets, matching ``ft_psum``'s flat-concatenation
+    convention (one slot position addresses exactly one leaf's wire).
+    Scatter seam note: positions index the LOCAL scattered slice, and the
+    perturb runs in SPMD, so one armed slot corrupts element ``pos`` of
+    every shard's (distinct) slice - ``world`` logical elements of the
+    gathered result, one per wire, unlike ``ft_psum`` where the
+    replicated payload makes the same construction a single logical
+    corruption.  The per-leaf residual then carries ``world`` deltas,
+    which only widens the detection margin; single-wire addressing would
+    need a ``world``-times-larger (global) address space and is not what
+    the PR-4 campaign cells calibrate against.
+    """
+    policy = policy or default_policy()
+    if injection is not None:
+        injection = injection.for_seam(SEAM_COLLECTIVE)
+    leaves, tdef = jax.tree.flatten(tree)
+
+    def scat(v):
+        return lax.psum_scatter(v, axis_name,
+                                scatter_dimension=scatter_dimension,
+                                tiled=tiled)
+
+    def hurt(v, streams, offset):
+        return (v if injection is None
+                else injection.perturb(v, stream=streams, offset=offset))
+
+    def offsets_of(outs):
+        offs, off = [], injection_offset
+        for o in outs:
+            offs.append(off)
+            off += o.size
+        return offs
+
+    def scat_all(vs, streams):
+        outs = [scat(v) for v in vs]
+        return [hurt(o, streams, off)
+                for o, off in zip(outs, offsets_of(outs))]
+
+    if not policy.verify_collectives:
+        return (jax.tree.unflatten(tdef, scat_all(leaves, _ALL_WIRE)),
+                ftreport.empty_report())
+
+    world = axis_world(axis_name)
+    local_sum, local_abs = _leaf_sums(leaves)
+    # One fused (L,)-vector psum carries every leaf's checksum + magnitude.
+    ref_sum, ref_abs = lax.psum((local_sum, local_abs), axis_name)
+    outs = scat_all(leaves, _ALL_WIRE)
+    tol = _leaf_tols(leaves, world, ref_abs, policy)
+    # ...and one fused (L,) psum verifies every scattered total.
+    got1 = lax.psum(_leaf_signed_sums(outs), axis_name)
+    res1 = jnp.abs(got1 - ref_sum)
+    bad1 = res1 > tol
+
+    def retry(vs):
+        r = scat_all([lax.optimization_barrier(v) for v in vs], _STICKY)
+        got2 = lax.psum(_leaf_signed_sums(r), axis_name)
+        return r, jnp.abs(got2 - ref_sum)
+
+    def keep(vs):
+        return outs, res1
+
+    retried, res2 = lax.cond(jnp.any(bad1), retry, keep, leaves)
+    # Keep the better attempt PER LEAF (clean leaves keep their first
+    # scatter bit-exactly even when a neighbor triggered the retry).
+    use_retry = bad1 & (res2 <= res1)
+    final = [jnp.where(use_retry[i], b, a)
+             for i, (a, b) in enumerate(zip(outs, retried))]
+    still_bad = bad1 & (jnp.minimum(res1, res2) > tol)
+    rep = ftreport.make_report(
+        collective_detected=jnp.sum(bad1).astype(jnp.int32),
+        collective_retried=jnp.sum(bad1 & ~still_bad).astype(jnp.int32),
+        collective_uncorrected=jnp.sum(still_bad).astype(jnp.int32))
+    return jax.tree.unflatten(tdef, final), rep
+
+
 def ft_psum_scatter(x: jax.Array, axis_name: AxisNames, *,
                     scatter_dimension: int = 0, tiled: bool = False,
                     policy: Optional[FTPolicy] = None,
@@ -211,57 +308,15 @@ def ft_psum_scatter(x: jax.Array, axis_name: AxisNames, *,
     Works for any wire dtype - the bf16 ZeRO configuration checksums the
     bf16 payload in f32 and sizes the tolerance by the bf16 ulp.
 
-    ``injection_offset``: flat index of this call's scattered output
-    within the caller's larger collective-seam address space - a caller
-    issuing one scatter per leaf (``optim.adamw.zero_apply``) passes the
-    running offset so an injection position addresses exactly one leaf,
-    matching ``ft_psum``'s flat-concatenation convention.
+    The single-leaf case of ``ft_psum_scatter_tree``; callers with many
+    leaves (``optim.adamw.zero_apply``) use the tree form so all
+    reference checksums batch into one stacked psum.
     """
-    policy = policy or default_policy()
-    if injection is not None:
-        injection = injection.for_seam(SEAM_COLLECTIVE)
-
-    def scat(v):
-        return lax.psum_scatter(v, axis_name,
-                                scatter_dimension=scatter_dimension,
-                                tiled=tiled)
-
-    def hurt(v, streams):
-        return (v if injection is None
-                else injection.perturb(v, stream=streams,
-                                       offset=injection_offset))
-
-    if not policy.verify_collectives:
-        return hurt(scat(x), _ALL_WIRE), ftreport.empty_report()
-
-    world = axis_world(axis_name)
-    local_sum = jnp.sum(x.astype(jnp.float32))
-    local_abs = jnp.sum(jnp.abs(x).astype(jnp.float32))
-    ref_sum, ref_abs = lax.psum((local_sum, local_abs), axis_name)
-    out = hurt(scat(x), _ALL_WIRE)
-    tol = collective_tol(x.size, world, ref_abs, policy.tol_factor,
-                         _leaf_eps(x))
-    got1 = lax.psum(jnp.sum(out.astype(jnp.float32)), axis_name)
-    res1 = jnp.abs(got1 - ref_sum)
-    bad = res1 > tol
-
-    def retry(v):
-        r = hurt(scat(lax.optimization_barrier(v)), _STICKY)
-        got2 = lax.psum(jnp.sum(r.astype(jnp.float32)), axis_name)
-        return r, jnp.abs(got2 - ref_sum)
-
-    def keep(v):
-        return out, res1
-
-    retried, res2 = lax.cond(bad, retry, keep, x)
-    use_retry = bad & (res2 <= res1)
-    final = jnp.where(use_retry, retried, out)
-    still_bad = bad & (jnp.minimum(res1, res2) > tol)
-    rep = ftreport.make_report(
-        collective_detected=bad.astype(jnp.int32),
-        collective_retried=(bad & ~still_bad).astype(jnp.int32),
-        collective_uncorrected=still_bad.astype(jnp.int32))
-    return final, rep
+    out, rep = ft_psum_scatter_tree(
+        [x], axis_name, scatter_dimension=scatter_dimension, tiled=tiled,
+        policy=policy, injection=injection,
+        injection_offset=injection_offset)
+    return out[0], rep
 
 
 def ft_pmean(tree, axis_name: AxisNames, *,

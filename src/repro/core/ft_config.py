@@ -54,7 +54,15 @@ class FTPolicy:
         forward-only protection; gradients compute unverified).
       verify_collectives: checksum-verify cross-chip reductions
         (beyond-paper extension, Sec. 3.3 of DESIGN.md).
-      interpret: run Pallas kernels in interpret mode (CPU container).
+      interpret: the kernel BACKEND axis.  True runs Pallas kernels in
+        interpret mode (portable; the CPU-container default).  False is
+        the "compiled" backend: kernels lower through the platform's
+        Pallas compiler (Mosaic/Triton), or - on platforms without one -
+        through the XLA-compiled jnp lowerings in ``kernels/ops.py``
+        (same math/injection/counters; see ``kernels/backend.py``).
+        The campaign sweeps this axis and parity-gates it
+        (tests/test_campaign_backends.py); ``launch/train.py --backend``
+        and ``campaign.run --drill-backend`` flip it end to end.
     """
 
     mode: str = "hybrid"

@@ -13,6 +13,12 @@ forward product (gated by ``policy.protect_grads``).  ``injection`` may
 therefore carry SEAM_BWD_* slots striking the backward GEMMs, and
 ``grad_probe`` (see ``core.abft.new_grad_probe``) recovers the backward
 FT counters as its gradient.
+
+The kernel BACKEND rides the same policy: ``policy.interpret`` flows
+through ``ft_matmul_diff`` into every kernel wrapper, so a single
+``policy.replace(interpret=False)`` switches a whole model - forward and
+cotangent GEMMs alike - onto the compiled lowering (Mosaic on TPU, the
+XLA jnp lowering elsewhere; ``kernels/backend.py``).
 """
 from __future__ import annotations
 

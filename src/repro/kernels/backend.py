@@ -1,0 +1,59 @@
+"""Kernel backend resolution: interpret-mode Pallas vs compiled lowering.
+
+``FTPolicy.interpret`` selects the campaign/executor "backend" axis:
+
+  interpret  Pallas kernels run through the Pallas interpreter
+             (``pl.pallas_call(..., interpret=True)``): the kernel body is
+             re-traced as a grid-steps scan with explicit block plumbing.
+             Portable everywhere, but the emitted XLA program is a
+             per-grid-step loop - the slow path that dominates the
+             campaign smoke on CPU.
+
+  compiled   ``interpret=False``.  On platforms with a Pallas compiler
+             (TPU -> Mosaic, GPU -> Triton) the kernel lowers to a real
+             device kernel - the code path a production deployment runs.
+             On platforms WITHOUT one (the CPU container: jax raises
+             "Only interpret mode is supported on CPU backend"), the
+             kernel *wrappers* in ``kernels/ops.py`` lower to their
+             XLA-compiled jnp equivalents instead: same math, same
+             injection semantics and counters, but a single dense XLA
+             program with no Python-level grid interpreter in the loop.
+             That keeps the backend axis meaningful (and measurably
+             faster per cell) on every platform while staying honest
+             about what ran - reports label the backend, never pretend
+             a Mosaic kernel executed on a CPU.
+
+The capability decision is by platform (pure Python, so it is safe inside
+an outer ``jax.jit`` trace - an executed probe kernel would be staged into
+the caller's jaxpr): jax's Pallas lowering supports ``interpret=False``
+exactly on TPU (Mosaic) and GPU (Triton), and raises "Only interpret mode
+is supported on CPU backend" on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+BACKENDS = ("interpret", "compiled")
+
+
+@functools.lru_cache(maxsize=None)
+def compiled_pallas_supported() -> bool:
+    """True iff ``pl.pallas_call(..., interpret=False)`` can lower on the
+    default jax backend (TPU/GPU yes, CPU no)."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def use_xla_fallback(interpret: bool) -> bool:
+    """Should a kernel wrapper take the XLA-compiled jnp lowering?
+
+    Only when the caller asked for the compiled backend AND the platform
+    has no Pallas compiler; ``interpret=True`` always means the Pallas
+    interpreter, so interpret-mode semantics never change under our feet.
+    """
+    return (not interpret) and (not compiled_pallas_supported())
+
+
+def backend_name(interpret: bool) -> str:
+    return "interpret" if interpret else "compiled"

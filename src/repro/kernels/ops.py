@@ -5,6 +5,13 @@ invariant to zero rows/cols, and a zero-padded C0 contributes nothing to
 the beta-adjusted references), injection-position remapping into padded
 coordinates, and kernel-counter -> FTReport conversion.  Every wrapper has a
 pure-jnp oracle in kernels/ref.py.
+
+Backend dispatch (``kernels/backend.py``): ``interpret=True`` always runs
+the Pallas interpreter; ``interpret=False`` lowers to the platform's Pallas
+compiler (Mosaic/Triton) when one exists, and otherwise to the
+XLA-compiled jnp lowerings below - the same math, injection semantics and
+counters as the kernels, emitted as one dense XLA program instead of a
+per-grid-step interpreter loop.
 """
 from __future__ import annotations
 
@@ -13,14 +20,17 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import report as ftreport
-from repro.core.checksum import ChecksumRefs
-from repro.core.injection import Injection
+from repro.core.checksum import ChecksumRefs, encode_refs
+from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, DMR_STREAM_1,
+                                  DMR_STREAM_2, Injection)
 from repro.kernels import abft_gemm as _ag
 from repro.kernels import dmr_ew as _ew
 from repro.kernels import dmr_gemv as _gv
 from repro.kernels import dmr_reduce as _rd
+from repro.kernels.backend import use_xla_fallback
 
 LANE = 128
 
@@ -61,6 +71,35 @@ def _remap_matrix_pos(rows: jax.Array, m_logical: int, n_logical: int,
 
 
 # -- fused-epilogue ABFT GEMM -------------------------------------------------
+def _abft_gemm_batched_xla(A, B, alpha, beta, C0, injection):
+    """XLA lowering of the fused-epilogue ABFT contract (compiled backend
+    on platforms without a Pallas compiler).
+
+    Mirrors the kernel's observable semantics exactly: the injection lands
+    on the epilogue-scaled accumulator (logical flat (nb*M*N) positions,
+    both ABFT streams) BEFORE the actual row/col sums are taken, and the
+    reference checksums are beta-adjusted.  Accumulation order differs
+    from the tile-blocked kernel (XLA's dot-general reduction vs per-tile
+    partials), which is why the campaign carries a per-backend tolerance
+    factor.
+    """
+    inj = injection if injection is not None else Injection.none()
+    acc_t = _ag._acc_dtype(A.dtype)
+    C = jnp.asarray(alpha, acc_t) * jnp.matmul(
+        A.astype(acc_t), B.astype(acc_t))
+    if C0 is not None:
+        C = C + jnp.asarray(beta, acc_t) * C0.astype(acc_t)
+    C = inj.perturb(C, stream=(ABFT_ACC, ABFT_ACC_2))
+    if C0 is None:
+        refs = jax.vmap(
+            lambda a, b: encode_refs(a, b, alpha=alpha, beta=beta))(A, B)
+    else:
+        refs = jax.vmap(
+            lambda a, b, c: encode_refs(a, b, alpha=alpha, beta=beta,
+                                        C0=c))(A, B, C0)
+    return C, C.sum(axis=2), C.sum(axis=1), refs
+
+
 @functools.partial(jax.jit, static_argnames=(
     "bm", "bn", "bk", "with_abs", "interpret"))
 def abft_gemm_batched(A: jax.Array, B: jax.Array, *,
@@ -81,6 +120,8 @@ def abft_gemm_batched(A: jax.Array, B: jax.Array, *,
     Injection positions index the logical flattened (nb*M*N) output, so a
     fault can target any batch slice.
     """
+    if use_xla_fallback(interpret):
+        return _abft_gemm_batched_xla(A, B, alpha, beta, C0, injection)
     nb, M, K = A.shape
     _, _, N = B.shape
     bm, bn, bk = min(bm, _ceil_to(M, 8)), min(bn, _ceil_to(N, LANE)), \
@@ -139,13 +180,117 @@ def _as_lanes(x: jax.Array, bx: int = 8) -> Tuple[jax.Array, int]:
     return jnp.pad(x, (0, Rp * LANE - n)).reshape(Rp, LANE), n
 
 
+def _cnt_rows(detected, corrected, unrec) -> jax.Array:
+    """(1, 4) i32 counter block matching the kernels' cnt_ref layout."""
+    return jnp.stack([detected.astype(jnp.int32),
+                      corrected.astype(jnp.int32),
+                      unrec.astype(jnp.int32),
+                      jnp.zeros((), jnp.int32)]).reshape(1, 4)
+
+
+def _vote_2of3(y1, y2, y3, mismatch):
+    agree13 = y1 == y3
+    agree23 = y2 == y3
+    y = jnp.where(~mismatch, y1,
+                  jnp.where(agree13, y1, jnp.where(agree23, y2, y3)))
+    corrected = jnp.sum((mismatch & (agree13 | agree23)).astype(jnp.int32))
+    unrec = jnp.sum((mismatch & ~agree13 & ~agree23).astype(jnp.int32))
+    return y, corrected, unrec
+
+
+def _dmr_ew_xla(op, inputs, alpha, injection, vote):
+    """XLA lowering of ``dmr_ew_call``: whole-(R, LANE)-array DMR with the
+    kernels' injection semantics (flat padded positions, stream 1 hits the
+    primary evaluation, stream 2 the fenced duplicate)."""
+    inj = injection if injection is not None else Injection.none()
+    y1 = op(inputs, alpha)
+    y2 = op(lax.optimization_barrier(inputs), alpha)
+    y1 = inj.perturb(y1, stream=DMR_STREAM_1)
+    y2 = inj.perturb(y2, stream=DMR_STREAM_2)
+    mismatch = y1 != y2
+    detected = jnp.sum(mismatch.astype(jnp.int32))
+    if vote:
+        y3 = op(lax.optimization_barrier(inputs), alpha)
+        y, corrected, unrec = _vote_2of3(y1, y2, y3, mismatch)
+    else:
+        y, corrected, unrec = y1, jnp.zeros((), jnp.int32), detected
+    return y, _cnt_rows(detected, corrected, unrec)
+
+
+def _dmr_reduce_xla(op, inputs, injection, vote, bx: int = 8):
+    """XLA lowering of ``dmr_reduce_call``: per-(bx, LANE)-block partials
+    computed twice; injection positions index the block (= partial)."""
+    inj = injection if injection is not None else Injection.none()
+    R = inputs[0].shape[0]
+    g = R // bx
+
+    def partials(ins):
+        blocks = tuple(x.reshape(g, bx, LANE) for x in ins)
+        return jax.vmap(lambda *bs: op(bs))(*blocks)
+
+    p1 = partials(inputs)
+    p2 = partials(lax.optimization_barrier(inputs))
+    p1 = inj.perturb(p1, stream=DMR_STREAM_1)
+    p2 = inj.perturb(p2, stream=DMR_STREAM_2)
+    mismatch = p1 != p2
+    detected = jnp.sum(mismatch.astype(jnp.int32))
+    if vote:
+        p3 = partials(lax.optimization_barrier(inputs))
+        p, corrected, unrec = _vote_2of3(p1, p2, p3, mismatch)
+    else:
+        p, corrected, unrec = p1, jnp.zeros((), jnp.int32), detected
+    return p.reshape(g, 1), _cnt_rows(detected, corrected, unrec)
+
+
+def _dmr_gemv_xla(A, x, injection, bk, vote):
+    """XLA lowering of ``dmr_gemv_call``: per-k-block (M, gk) partials
+    computed twice; an injected delta lands on y element ``pos``'s first
+    k-partial, exactly where the kernel's (i, k == 0) guard puts it."""
+    inj = injection if injection is not None else Injection.none()
+    M, K = A.shape
+    gk = K // bk
+    acc_t = jnp.float64 if A.dtype == jnp.float64 else jnp.float32
+    Ak = A.astype(acc_t).reshape(M, gk, bk)
+    xk = x.astype(acc_t).reshape(gk, bk)
+
+    def partials(a, v):
+        return jnp.einsum("mgb,gb->mg", a, v,
+                          preferred_element_type=acc_t)
+
+    p1 = partials(Ak, xk)
+    af, xf = lax.optimization_barrier((Ak, xk))
+    p2 = partials(af, xf)
+    rows = lax.broadcasted_iota(jnp.int32, (M, gk), 0)
+    col0 = lax.broadcasted_iota(jnp.int32, (M, gk), 1) == 0
+    for s in range(Injection.N_SLOTS):
+        hit = (inj.active[s] & (rows == inj.pos[s]) & col0)
+        d = inj.delta[s].astype(acc_t)
+        p1 = p1 + jnp.where(hit & (inj.stream[s] == DMR_STREAM_1), d, 0.0)
+        p2 = p2 + jnp.where(hit & (inj.stream[s] == DMR_STREAM_2), d, 0.0)
+    mismatch = p1 != p2
+    detected = jnp.sum(mismatch.astype(jnp.int32))
+    if vote:
+        a3, x3 = lax.optimization_barrier((Ak, xk))
+        p3 = partials(a3, x3)
+        p, corrected, unrec = _vote_2of3(p1, p2, p3, mismatch)
+    else:
+        p, corrected, unrec = p1, jnp.zeros((), jnp.int32), detected
+    return (p.sum(axis=1, keepdims=True),
+            _cnt_rows(detected, corrected, unrec))
+
+
 @functools.partial(jax.jit, static_argnames=("vote", "interpret"))
 def dmr_scal(alpha, x: jax.Array, *, injection: Optional[Injection] = None,
              vote: bool = True, interpret: bool = True):
     xv, n = _as_lanes(x)
-    y, cnt = _ew.dmr_ew_call(_ew.scal_op, (xv,), jnp.asarray(alpha, x.dtype),
-                             _inj_rows(injection), vote=vote,
-                             interpret=interpret)
+    if use_xla_fallback(interpret):
+        y, cnt = _dmr_ew_xla(_ew.scal_op, (xv,),
+                             jnp.asarray(alpha, x.dtype), injection, vote)
+    else:
+        y, cnt = _ew.dmr_ew_call(_ew.scal_op, (xv,),
+                                 jnp.asarray(alpha, x.dtype),
+                                 _inj_rows(injection), vote=vote,
+                                 interpret=interpret)
     return y.reshape(-1)[:n], _counts_report(cnt)
 
 
@@ -155,10 +300,14 @@ def dmr_axpy(alpha, x: jax.Array, y: jax.Array, *,
              vote: bool = True, interpret: bool = True):
     xv, n = _as_lanes(x)
     yv, _ = _as_lanes(y)
-    out, cnt = _ew.dmr_ew_call(_ew.axpy_op, (xv, yv),
-                               jnp.asarray(alpha, x.dtype),
-                               _inj_rows(injection), vote=vote,
-                               interpret=interpret)
+    if use_xla_fallback(interpret):
+        out, cnt = _dmr_ew_xla(_ew.axpy_op, (xv, yv),
+                               jnp.asarray(alpha, x.dtype), injection, vote)
+    else:
+        out, cnt = _ew.dmr_ew_call(_ew.axpy_op, (xv, yv),
+                                   jnp.asarray(alpha, x.dtype),
+                                   _inj_rows(injection), vote=vote,
+                                   interpret=interpret)
     return out.reshape(-1)[:n], _counts_report(cnt)
 
 
@@ -169,8 +318,12 @@ def dmr_dot(x: jax.Array, y: jax.Array, *,
     """dot(x, y); injection pos indexes the *block partial* (interval id)."""
     xv, _ = _as_lanes(x)
     yv, _ = _as_lanes(y)
-    p, cnt = _rd.dmr_reduce_call(_rd.dot_op, (xv, yv), _inj_rows(injection),
-                                 vote=vote, interpret=interpret)
+    if use_xla_fallback(interpret):
+        p, cnt = _dmr_reduce_xla(_rd.dot_op, (xv, yv), injection, vote)
+    else:
+        p, cnt = _rd.dmr_reduce_call(_rd.dot_op, (xv, yv),
+                                     _inj_rows(injection), vote=vote,
+                                     interpret=interpret)
     return p.sum(), _counts_report(cnt)
 
 
@@ -178,8 +331,12 @@ def dmr_dot(x: jax.Array, y: jax.Array, *,
 def dmr_nrm2(x: jax.Array, *, injection: Optional[Injection] = None,
              vote: bool = True, interpret: bool = True):
     xv, _ = _as_lanes(x)
-    p, cnt = _rd.dmr_reduce_call(_rd.sumsq_op, (xv,), _inj_rows(injection),
-                                 vote=vote, interpret=interpret)
+    if use_xla_fallback(interpret):
+        p, cnt = _dmr_reduce_xla(_rd.sumsq_op, (xv,), injection, vote)
+    else:
+        p, cnt = _rd.dmr_reduce_call(_rd.sumsq_op, (xv,),
+                                     _inj_rows(injection), vote=vote,
+                                     interpret=interpret)
     return jnp.sqrt(p.sum()), _counts_report(cnt)
 
 
@@ -196,6 +353,9 @@ def dmr_gemv(A: jax.Array, x: jax.Array, *,
     Mp, Kp = _ceil_to(M, bm), _ceil_to(K, bk)
     Ap = jnp.pad(A, ((0, Mp - M), (0, Kp - K)))
     xp = jnp.pad(x, (0, Kp - K)).reshape(Kp, 1)
-    y, cnt = _gv.dmr_gemv_call(Ap, xp, _inj_rows(injection), bm=bm, bk=bk,
-                               vote=vote, interpret=interpret)
+    if use_xla_fallback(interpret):
+        y, cnt = _dmr_gemv_xla(Ap, xp, injection, bk, vote)
+    else:
+        y, cnt = _gv.dmr_gemv_call(Ap, xp, _inj_rows(injection), bm=bm,
+                                   bk=bk, vote=vote, interpret=interpret)
     return y[:M, 0].astype(A.dtype), _counts_report(cnt)

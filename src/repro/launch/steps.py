@@ -48,31 +48,38 @@ def make_ctx(*, multi_pod: bool, data_size: int, model_size: int,
 
 
 # -- train --------------------------------------------------------------------
-def _ft_psum_leaf_subset(leaves, idx, axis, ctx: ShardCtx, injection):
+def _ft_psum_leaf_subset(leaves, idx, axis, ctx: ShardCtx, injection,
+                         injection_offset: int = 0):
     """Reduce ``leaves[i] for i in idx`` over ``axis`` as ONE verified
     ``ft_psum`` interval (per-leaf checksums ride a single stacked scalar
     psum).  Injection positions index the flat concatenation of the
-    REDUCED subset - each gradient-tree reduction of a step owns its own
-    payload address space; the grad-norm scalars are offset past it (see
-    ``_train_step``).  Returns (new leaves list, FTReport)."""
+    REDUCED subset starting at ``injection_offset`` - each gradient-path
+    reduction of a step owns a DISJOINT slice of the collective-seam
+    address space (see ``_train_step``), so one armed slot fires on
+    exactly one wire.  Returns (new leaves list, FTReport)."""
     if not idx:
         return list(leaves), ftreport.empty_report()
     reduced, rep = ft_psum([leaves[i] for i in idx], axis,
-                           policy=ctx.policy, injection=injection)
+                           policy=ctx.policy, injection=injection,
+                           injection_offset=injection_offset)
     leaves = list(leaves)
     for i, r in zip(idx, reduced):
         leaves[i] = r
     return leaves, rep
 
 
-def _reduce_replicated_grads(grads, pspecs, ctx: ShardCtx, injection=None):
+def _reduce_replicated_grads(grads, pspecs, ctx: ShardCtx, injection=None,
+                             injection_offset: int = 0):
     """Model-axis psum for grads of params replicated over "model".
 
     shard_map AD yields per-shard partials; for a parameter that exists on
     every model shard the total derivative is the sum of partials (without
     this, replicas would apply different updates and drift).  With
     ``ctx.policy.verify_collectives`` the whole replicated-leaf batch is
-    verified and retried as a unit.  Returns (grads, FTReport).
+    verified and retried as a unit.  ``injection_offset`` places this
+    reduction's wire payload past the data-axis reduction + grad-norm
+    ranges so the two address spaces cannot alias.  Returns
+    (grads, FTReport).
     """
     def has_model(spec):
         for entry in spec:
@@ -86,7 +93,8 @@ def _reduce_replicated_grads(grads, pspecs, ctx: ShardCtx, injection=None):
                                is_leaf=lambda x: isinstance(x, P))
     rep_idx = [i for i, s in enumerate(leaves_s) if not has_model(s)]
     leaves_g, rep = _ft_psum_leaf_subset(leaves_g, rep_idx,
-                                         ctx.model_axis, ctx, injection)
+                                         ctx.model_axis, ctx, injection,
+                                         injection_offset)
     return jax.tree.unflatten(tdef, leaves_g), rep
 
 
@@ -191,10 +199,18 @@ def make_train_step(model: Model, ctx: ShardCtx, opt_cfg: adamw.AdamWConfig,
         # Every gradient-path collective below goes through the verified
         # primitives; with ctx.policy.verify_collectives False they lower
         # to the bare lax.psum / lax.psum_scatter bit-identically.
+        # Collective-seam address map (one slot, one wire): the data-axis
+        # reduction owns [0, n) of the seam space (n = scattered payload
+        # for ZeRO, full tree otherwise), the grad-norm scalars sit just
+        # past it (n or n, n+1), and the model-axis replicated-leaf psum
+        # below starts at n_grads_total + 2 - past every downstream
+        # range, since n <= n_grads_total.
         coll_rep = ftreport.empty_report()
+        n_grads_total = sum(g.size for g in jax.tree.leaves(grads))
         if pspecs is not None:
-            grads, r = _reduce_replicated_grads(grads, pspecs, ctx,
-                                                injection=injection)
+            grads, r = _reduce_replicated_grads(
+                grads, pspecs, ctx, injection=injection,
+                injection_offset=n_grads_total + 2)
             coll_rep = ftreport.merge(coll_rep, r)
         if zero:
             cdt = jnp.bfloat16 if model.cfg.zero_collective_dtype == "bf16" \

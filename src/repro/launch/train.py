@@ -44,6 +44,12 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ft", default="hybrid",
                     choices=list(ft_config.MODES))
+    ap.add_argument("--backend", default="interpret",
+                    choices=["interpret", "compiled"],
+                    help="kernel lowering for fused FT kernels: compiled "
+                         "sets FTPolicy.interpret=False (Mosaic on TPU; "
+                         "the XLA jnp lowering elsewhere) and switches "
+                         "the policy to the fused production kernels")
     ap.add_argument("--verify-collectives", action="store_true",
                     help="checksum-verify the gradient collectives "
                          "(ft_psum/ft_psum_scatter; no-op with --ft off)")
@@ -61,7 +67,9 @@ def main(argv=None) -> int:
         cfg = cfg.smoke()
     model = build_model(cfg)
     mesh = smoke_mesh()
-    policy = ft_config.FTPolicy(mode=args.ft, fused=False,
+    compiled = args.backend == "compiled"
+    policy = ft_config.FTPolicy(mode=args.ft, fused=compiled,
+                                interpret=not compiled,
                                 verify_collectives=args.verify_collectives) \
         if args.ft != "off" else ft_config.OFF
     ctx = make_ctx(multi_pod=False, data_size=1, model_size=1, policy=policy)

@@ -24,7 +24,7 @@ from jax import lax
 
 from repro.core import report as ftreport
 from repro.core.dmr import dmr_compute, dmr_report
-from repro.core.ft_collectives import ft_psum, ft_psum_scatter
+from repro.core.ft_collectives import ft_psum, ft_psum_scatter_tree
 from repro.core.ft_config import FTPolicy, OFF
 from repro.core.injection import (DMR_STREAM_1, DMR_STREAM_2, SEAM_FWD,
                                   Injection)
@@ -204,11 +204,12 @@ def zero_apply(params, grads, state, cfg: AdamWConfig, ctx, *,
     flat concatenation of the per-leaf scattered outputs, so one slot
     addresses exactly one leaf's wire payload).
 
-    Cost note: the scatter is per leaf by construction (the pre-existing
-    schedule), so verification adds two scalar psums per leaf on the
-    clean path - a constant factor on an already per-leaf collective
-    count, but not the single stacked reference psum ``ft_psum`` achieves
-    for all-reduce trees (batching the scatters is a ROADMAP item).
+    Cost note: the scatter is per leaf by construction (ZeRO's schedule),
+    but verification is BATCHED: all leaves go through one
+    ``ft_psum_scatter_tree`` call whose reference checksums ride a single
+    stacked (L,) psum pair - two scalar collectives total on the clean
+    path, the same shape ``ft_psum`` achieves for all-reduce trees -
+    while detection/tolerance/retry stay per leaf.
     """
     coll_inj = injection          # collective seam wants the raw spec
     if injection is not None:
@@ -227,22 +228,35 @@ def zero_apply(params, grads, state, cfg: AdamWConfig, ctx, *,
     bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
     bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
 
-    def upd(p, g, m_loc, v_loc, wire_offset):
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+
+    # Phase 1: sum over dp + scatter each shard's slice, one collective per
+    # leaf (optionally bf16: halves the ZeRO wire bytes; hillclimb H3),
+    # verified as ONE batch - the stacked per-leaf checksums ride a single
+    # psum pair.  SUM, not mean: the loss is pmean'd over data inside
+    # train_loss, so per-shard partials already carry the 1/dp factor.
+    def wire_leaf(p, g):
+        n_pad = _pad_len(p.size, dp_size)
+        gf = jnp.pad(g.astype(collective_dtype).reshape(-1)
+                     * jnp.asarray(scale, collective_dtype),
+                     (0, n_pad - p.size))
+        return gf.reshape(dp_size, -1)
+
+    g_locs, r_coll = ft_psum_scatter_tree(
+        [wire_leaf(p, g) for p, g in zip(flat_p, flat_g)], axes,
+        scatter_dimension=0, tiled=False, policy=policy,
+        injection=coll_inj, injection_offset=0)
+    rep = ftreport.merge(rep, r_coll)
+
+    # Phase 2: the DMR-protected Level-1 update chain on the local slices.
+    def upd(p, g_loc, m_loc, v_loc):
         n = p.size
         n_pad = _pad_len(n, dp_size)
         m_loc = m_loc.reshape(-1)          # (1, n_pad/dp) -> flat
         v_loc = v_loc.reshape(-1)
-        gf = jnp.pad(g.astype(collective_dtype).reshape(-1)
-                     * jnp.asarray(scale, collective_dtype), (0, n_pad - n))
-        # sum over dp + scatter my slice, one collective (optionally bf16:
-        # halves the ZeRO wire bytes; hillclimb H3).  SUM, not mean: the
-        # loss is pmean'd over data inside train_loss, so per-shard
-        # partials already carry the 1/dp factor.  Verified per leaf: the
-        # checksum rides the bf16/f32 wire payload itself.
-        g_loc, r_coll = ft_psum_scatter(gf.reshape(dp_size, -1), axes,
-                                        scatter_dimension=0, tiled=False,
-                                        policy=policy, injection=coll_inj,
-                                        injection_offset=wire_offset)
         g_loc = g_loc.astype(jnp.float32)
         pf = jnp.pad(p.astype(jnp.float32).reshape(-1), (0, n_pad - n))
         p_loc = lax.dynamic_slice_in_dim(
@@ -265,18 +279,11 @@ def zero_apply(params, grads, state, cfg: AdamWConfig, ctx, *,
         p_new = lax.all_gather(out[0].astype(
             collective_dtype if p.dtype != jnp.float32 else jnp.float32),
             axes, axis=0, tiled=True)[:n].reshape(p.shape)
-        return (p_new.astype(p.dtype), out[1][None, :], out[2][None, :],
-                ftreport.merge(r, r_coll))
+        return p_new.astype(p.dtype), out[1][None, :], out[2][None, :], r
 
-    flat_p, tdef = jax.tree.flatten(params)
-    flat_g = jax.tree.leaves(grads)
-    flat_m = jax.tree.leaves(state["m"])
-    flat_v = jax.tree.leaves(state["v"])
     new_p, new_m, new_v = [], [], []
-    wire_offset = 0               # flat collective-seam address space
-    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
-        np_, nm, nv, r = upd(p, g, m, v, wire_offset)
-        wire_offset += _pad_len(p.size, dp_size) // dp_size
+    for p, g_loc, m, v in zip(flat_p, g_locs, flat_m, flat_v):
+        np_, nm, nv, r = upd(p, g_loc, m, v)
         new_p.append(np_)
         new_m.append(nm)
         new_v.append(nv)

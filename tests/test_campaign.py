@@ -3,6 +3,7 @@ clean runs and 100% detection of injected single errors on every protected
 routine x policy x dtype cell, with oracle-matching outputs wherever the
 policy can correct (ISSUE acceptance criteria)."""
 import json
+import random
 
 import jax
 import jax.numpy as jnp
@@ -11,6 +12,7 @@ import pytest
 
 from repro.campaign import (PoissonSchedule, build_cells, exponent_delta,
                             run_cells, summarize, to_markdown, write_json)
+from repro.campaign import executor
 from repro.campaign.grid import ROUTINES, SMOKE_POLICIES
 from repro.core.ft_config import FTPolicy
 from repro.core.ft_dense import ft_dense
@@ -27,7 +29,7 @@ def smoke_results():
 @pytest.fixture(scope="module")
 def smoke_report(smoke_results):
     _, results = smoke_results
-    return summarize(results, seed=0, smoke=True, duration_s=1.0)
+    return summarize(results, seed=0, smoke=True)
 
 
 def test_grid_covers_every_protected_routine(smoke_results):
@@ -107,6 +109,157 @@ def test_controls_prove_injection_corrupts(smoke_results):
     controls = [r for r in results if not r.cell.protected]
     assert controls
     assert any(r.verdict == "escaped" for r in controls)
+
+
+# -- shard executor -----------------------------------------------------------
+# A small sub-grid keeps the shard round trips cheap; byte-identity of the
+# merged report is what the Makefile's sharded campaign-smoke relies on.
+@pytest.fixture(scope="module")
+def shard_cells_small():
+    return build_cells(smoke=True,
+                       routines=["gemm", "axpy", "ft_dense"],
+                       policies=["off", "hybrid-fused", "hybrid-unfused"])
+
+
+@pytest.fixture(scope="module")
+def shard_report_bytes(shard_cells_small, tmp_path_factory):
+    """Single-process campaign.json bytes for the sub-grid (the merge
+    comparisons' ground truth)."""
+    cells = shard_cells_small
+    results, stats = executor.execute(cells, seed=0)
+    fp = executor.manifest_fingerprint(cells, 0)
+    report = summarize(results, seed=0, smoke=True, fingerprint=fp)
+    path = write_json(report,
+                      str(tmp_path_factory.mktemp("single") /
+                          "campaign.json"))
+    return open(path, "rb").read()
+
+
+@pytest.fixture(scope="module")
+def shard_run_dir(shard_cells_small, tmp_path_factory):
+    """The 4-shard fleet, executed once for the whole module; tests that
+    mutate partials work on copies."""
+    out = tmp_path_factory.mktemp("shards4")
+    for i in range(4):
+        _, _, n_resumed = executor.run_shard(
+            shard_cells_small, seed=0, shard_index=i, shard_count=4,
+            out_dir=str(out))
+        assert n_resumed == 0
+    return out
+
+
+def _merged_bytes(cells, out_dir, tmp_path, shard_paths=None):
+    results, stats, _ = executor.merge_shards(
+        cells, seed=0, out_dir=str(out_dir), shard_paths=shard_paths)
+    fp = executor.manifest_fingerprint(cells, 0)
+    report = summarize(results, seed=0, smoke=True, fingerprint=fp)
+    path = write_json(report, str(tmp_path / "merged.json"))
+    return open(path, "rb").read(), stats
+
+
+def test_shard_partition_exact_and_combo_whole(shard_cells_small):
+    """Shards cover the manifest exactly once, and never split a
+    (routine, policy, dtype, backend) combo group (that would duplicate
+    XLA compilations across the fleet)."""
+    cells = shard_cells_small
+    shards = [executor.shard_cells(cells, i, 4) for i in range(4)]
+    ids = [c.cell_id for s in shards for c in s]
+    assert sorted(ids) == sorted(c.cell_id for c in cells)
+    assert len(set(ids)) == len(ids)
+    combo = lambda c: (c.routine, c.policy, c.dtype, c.backend)  # noqa: E731
+    owner = {}
+    for i, s in enumerate(shards):
+        for c in s:
+            assert owner.setdefault(combo(c), i) == i, combo(c)
+
+
+def test_shard_merge_is_byte_identical_any_order(shard_cells_small,
+                                                 shard_report_bytes,
+                                                 shard_run_dir, tmp_path):
+    cells = shard_cells_small
+    paths = [executor.shard_path(str(shard_run_dir), i, 4)
+             for i in range(4)]
+    random.Random(7).shuffle(paths)     # merge order must not matter
+    merged, stats = _merged_bytes(cells, shard_run_dir, tmp_path,
+                                  shard_paths=paths)
+    assert merged == shard_report_bytes
+    # compile work was split, not duplicated: the shard fleet compiled
+    # exactly as many programs as a single process would have
+    n_combos = len({(c.routine, c.policy, c.dtype, c.backend)
+                    for c in cells})
+    assert sum(stats.compiles.values()) == n_combos
+
+
+def test_shard_resume_after_partial(shard_cells_small, shard_report_bytes,
+                                    shard_run_dir, tmp_path):
+    """An interrupted shard (partial file with missing cells) re-runs only
+    the missing cells and the merge still reproduces the ground truth."""
+    import shutil
+    cells = shard_cells_small
+    out = tmp_path / "work"
+    shutil.copytree(shard_run_dir, out)
+    # simulate an interrupt: drop half of shard 1's results
+    p1 = executor.shard_path(str(out), 1, 4)
+    shard = json.loads(open(p1).read())
+    kept = dict(list(shard["results"].items())[::2])
+    dropped = len(shard["results"]) - len(kept)
+    assert dropped > 0
+    shard["results"] = kept
+    with open(p1, "w") as f:
+        json.dump(shard, f)
+    _, n_run, n_resumed = executor.run_shard(
+        cells, seed=0, shard_index=1, shard_count=4, out_dir=str(out))
+    assert n_run == dropped and n_resumed == len(kept)
+    merged, _ = _merged_bytes(cells, out, tmp_path)
+    assert merged == shard_report_bytes
+
+
+def test_shard_stale_partial_discarded(shard_cells_small, shard_run_dir,
+                                       tmp_path):
+    """A partial written for a different grid/seed must not leak results
+    into the merge - the fingerprint gate refuses it."""
+    cells = shard_cells_small
+    with pytest.raises(ValueError, match="fingerprint"):
+        executor.merge_shards(cells, seed=1, out_dir=str(shard_run_dir))
+    # a different grid likewise
+    with pytest.raises(ValueError, match="fingerprint"):
+        executor.merge_shards(cells[:-1], seed=0,
+                              out_dir=str(shard_run_dir))
+
+
+def test_merge_refuses_incomplete_coverage(shard_cells_small,
+                                           shard_run_dir):
+    cells = shard_cells_small
+    paths = [executor.shard_path(str(shard_run_dir), i, 4)
+             for i in range(3)]         # shard 3 "never ran"
+    with pytest.raises(ValueError, match="missing"):
+        executor.merge_shards(cells, seed=0, shard_paths=paths)
+
+
+def test_read_shard_grid_recovers_cli_selection(tmp_path):
+    """--merge rebuilds the manifest from the partials' embedded grid
+    args + seed, so a flag-free merge works; disagreeing fleets and
+    grid-less (API-written) partials are refused."""
+    import os
+    grid = {"smoke": True, "routines": "gemm", "policies": None,
+            "dtypes": None, "models": None, "backends": "compiled"}
+
+    def write(idx, meta):
+        p = executor.shard_path(str(tmp_path), idx, 2)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "w") as f:
+            json.dump({"meta": meta, "results": {}, "exec": {}}, f)
+
+    write(0, {"fingerprint": "x", "seed": 7, "grid": grid})
+    write(1, {"fingerprint": "x", "seed": 7, "grid": grid})
+    got_grid, got_seed = executor.read_shard_grid(str(tmp_path))
+    assert got_grid == grid and got_seed == 7
+    write(1, {"fingerprint": "x", "seed": 8, "grid": grid})
+    with pytest.raises(ValueError, match="disagrees"):
+        executor.read_shard_grid(str(tmp_path))
+    write(1, {"fingerprint": "x", "seed": 7})
+    with pytest.raises(ValueError, match="no grid"):
+        executor.read_shard_grid(str(tmp_path))
 
 
 # -- error models -------------------------------------------------------------

@@ -1,0 +1,149 @@
+"""Interpret-vs-compiled backend parity for the campaign engine.
+
+The backend axis threads ``FTPolicy.interpret`` from the cell grid through
+``core.ft_dense`` / ``core.abft`` into the kernel wrappers: "interpret"
+runs the Pallas interpreter, "compiled" the platform's compiled lowering
+(Mosaic on TPU; the XLA jnp lowering in ``kernels/ops.py`` on platforms
+without a Pallas compiler - see ``kernels/backend.py``).  Because the
+runner derives every injection draw from the cell's LOGICAL identity, the
+two backend variants of one logical cell face the IDENTICAL fault, so the
+parity gate can demand identical verdicts and identical counter totals -
+not just "both pass".
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.campaign import build_cells, executor, summarize
+from repro.campaign.grid import BACKEND_TOL, ROUTINES
+from repro.campaign.runner import injection_key
+from repro.core.ft_config import FTPolicy
+
+# One routine per kernel family, both fused-kernel dtypes: axpy (dmr_ew),
+# dot (dmr_reduce), gemv (dmr_gemv), gemm (abft_gemm + epilogue streams),
+# ft_bmm (native batch grid + pinned nonzero slice).
+PARITY_ROUTINES = ["axpy", "dot", "gemv", "gemm", "ft_bmm"]
+PARITY_POLICIES = ["off", "hybrid-fused"]
+
+_COUNTER_KEYS = ("detected", "corrected", "unrecoverable")
+
+
+@pytest.fixture(scope="module")
+def parity_results():
+    cells = build_cells(smoke=True, routines=PARITY_ROUTINES,
+                        policies=PARITY_POLICIES,
+                        backends=["interpret", "compiled"])
+    results, stats = executor.execute(cells, seed=0)
+    return cells, results, stats
+
+
+def _by_logical(results):
+    pairs = {}
+    for r in results:
+        pairs.setdefault(r.cell.logical_id, {})[r.cell.backend] = r
+    return pairs
+
+
+def test_grid_pairs_every_cell_across_backends(parity_results):
+    cells, results, _ = parity_results
+    assert {c.backend for c in cells} == {"interpret", "compiled"}
+    pairs = _by_logical(results)
+    assert pairs
+    for lid, by_bk in pairs.items():
+        assert set(by_bk) == {"interpret", "compiled"}, lid
+
+
+def test_identical_faults_reach_identical_verdicts(parity_results):
+    _, results, _ = parity_results
+    for lid, by_bk in _by_logical(results).items():
+        a, b = by_bk["interpret"], by_bk["compiled"]
+        assert a.verdict == b.verdict, (
+            lid, a.verdict, b.verdict, a.output_err, b.output_err)
+
+
+def test_identical_counter_totals_on_both_backends(parity_results):
+    _, results, _ = parity_results
+    for lid, by_bk in _by_logical(results).items():
+        a, b = by_bk["interpret"], by_bk["compiled"]
+        for k in _COUNTER_KEYS:
+            assert getattr(a, k) == getattr(b, k), (lid, k)
+        assert a.clean_counters == b.clean_counters, lid
+        assert a.inj_counters == b.inj_counters, lid
+
+
+def test_compiled_subgrid_gate_is_green(parity_results):
+    """The acceptance gate on the compiled half alone: zero clean false
+    positives and zero missed detections through the compiled lowering."""
+    _, results, _ = parity_results
+    compiled = [r for r in results if r.cell.backend == "compiled"]
+    assert compiled
+    report = summarize(compiled, seed=0, smoke=True)
+    s = report["summary"]
+    assert s["clean_false_positives"] == 0
+    assert s["detected_protected"] == s["protected_cells"] > 0
+    assert s["failed"] == 0
+    assert s["ok"] is True
+    assert report["meta"]["backends"] == ["compiled"]
+
+
+def test_compile_cache_one_program_per_combo(parity_results):
+    """The compile-cache layer compiles exactly one XLA program per
+    (routine, policy, dtype, backend) jaxpr signature and records it per
+    backend, and every cell got a wall-time sample."""
+    cells, results, stats = parity_results
+    for backend in ("interpret", "compiled"):
+        n_combos = len({(c.routine, c.policy, c.dtype) for c in cells
+                        if c.backend == backend})
+        assert stats.compiles[backend] == n_combos
+    assert set(stats.cell_wall_ms) == {c.cell_id for c in cells}
+
+
+def test_injection_key_is_backend_and_partition_independent():
+    cells = build_cells(smoke=True, routines=["gemm"],
+                        policies=["hybrid-fused"],
+                        backends=["interpret", "compiled"])
+    by_lid = {}
+    for c in cells:
+        by_lid.setdefault(c.logical_id, []).append(c)
+    assert all(len(v) == 2 for v in by_lid.values())
+    for lid, (a, b) in by_lid.items():
+        assert a.cell_id != b.cell_id
+        np.testing.assert_array_equal(
+            np.asarray(injection_key(0, a)), np.asarray(injection_key(0, b)))
+    # distinct logical cells draw distinct faults
+    keys = {tuple(np.asarray(injection_key(0, v[0])).tolist())
+            for v in by_lid.values()}
+    assert len(keys) == len(by_lid)
+
+
+def test_backend_tolerance_headroom_is_wired():
+    """Per-backend ulp handling: the compiled lowering accumulates in a
+    different order, so its oracle tolerance carries headroom - without
+    ever approaching the injected-delta scale (detection safety)."""
+    rt = ROUTINES["gemm"]
+    t_i = rt.tol("f32", "interpret")
+    t_c = rt.tol("f32", "compiled")
+    assert t_c == pytest.approx(t_i * BACKEND_TOL["compiled"])
+    assert t_c < rt.base_scale  # smallest injected rung still detectable
+
+
+def test_policy_interpret_flag_reaches_kernel_dispatch():
+    """`interpret=False` must actually change the lowering: on platforms
+    without a Pallas compiler the wrappers take the XLA path (no
+    pallas_call in the jaxpr); with one they emit pallas_call."""
+    import jax.numpy as jnp
+    from repro.core.ft_dense import ft_dense
+    from repro.kernels.backend import compiled_pallas_supported
+
+    x = jnp.ones((2, 8, 32), jnp.float32)
+    w = jnp.ones((32, 48), jnp.float32)
+    texts = {}
+    for interp in (True, False):
+        pol = FTPolicy(mode="hybrid", fused=True, interpret=interp)
+        texts[interp] = str(jax.make_jaxpr(
+            lambda a, b: ft_dense(a, b, policy=pol))(x, w))
+    assert "pallas_call" in texts[True]
+    if compiled_pallas_supported():
+        assert "pallas_call" in texts[False]
+    else:
+        assert "pallas_call" not in texts[False]

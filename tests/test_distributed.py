@@ -288,6 +288,96 @@ print("VERIFIED STEP OK")
     assert "VERIFIED STEP OK" in out
 
 
+def test_psum_scatter_tree_leaf_sweep_and_batched_checksums():
+    """The batched ZeRO scatter (``ft_psum_scatter_tree``): detection
+    behavior is pinned per leaf - sweeping a transient wire fault over
+    every leaf yields exactly one detection + one healing retry each,
+    with every OTHER leaf bit-equal to its clean scatter - while the
+    clean path's all-reduce count stays CONSTANT in the leaf count (the
+    stacked reference psums; previously two scalar psums per leaf)."""
+    out = _run(COMMON + """
+from repro.core.ft_collectives import ft_psum_scatter, ft_psum_scatter_tree
+from repro.core.ft_config import FTPolicy
+from repro.core.injection import (Injection, SEAM_COLLECTIVE,
+                                  COLLECTIVE_WIRE, COLLECTIVE_WIRE_STICKY)
+pol = FTPolicy(mode="hybrid", verify_collectives=True)
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+RSPEC = {k: P() for k in ftreport.FIELDS}
+sizes = (16, 48, 32)
+leaves = tuple(jax.random.normal(jax.random.PRNGKey(i), (4, n), jnp.float32)
+               for i, n in enumerate(sizes))
+
+def tree_fn(t, inj):
+    return ft_psum_scatter_tree(t, "data", scatter_dimension=0,
+                                tiled=False, policy=pol, injection=inj)
+fn = jax.jit(jax.shard_map(tree_fn, mesh=mesh,
+    in_specs=(tuple(P() for _ in leaves), P()),
+    out_specs=(tuple(P("data") for _ in leaves), RSPEC), check_vma=False))
+
+clean, rep = fn(leaves, Injection.none())
+assert int(rep["collective_detected"]) == 0, ftreport.to_py(rep)
+for x, y in zip(leaves, clean):
+    np.testing.assert_allclose(np.asarray(y, np.float64).reshape(4, -1),
+                               4.0 * np.asarray(x, np.float64),
+                               rtol=1e-5, atol=1e-4)
+
+# leaf sweep: one transient fault per leaf in turn; the faulty leaf is
+# detected + retried + healed, the untouched leaves stay BIT-equal to
+# their clean scatter (per-leaf keep-better selection)
+off = 0
+for li, n in enumerate(sizes):
+    inj = Injection.at(stream=COLLECTIVE_WIRE, pos=off + n // 2,
+                       delta=4096.0, seam=SEAM_COLLECTIVE)
+    y, rep = fn(leaves, inj)
+    assert int(rep["collective_detected"]) == 1, (li, ftreport.to_py(rep))
+    assert int(rep["collective_retried"]) == 1
+    assert int(rep["collective_uncorrected"]) == 0
+    for lj in range(len(sizes)):
+        np.testing.assert_array_equal(np.asarray(y[lj]),
+                                      np.asarray(clean[lj]))
+    off += n
+
+# sticky faults in TWO leaves at once: both detected, both uncorrected
+inj = Injection.at(stream=COLLECTIVE_WIRE_STICKY, pos=3,
+                   delta=4096.0, seam=SEAM_COLLECTIVE)
+inj = inj.add(stream=COLLECTIVE_WIRE_STICKY, pos=sizes[0] + 5,
+              delta=4096.0, slot=1, seam=SEAM_COLLECTIVE)
+y, rep = fn(leaves, inj)
+assert int(rep["collective_detected"]) == 2
+assert int(rep["collective_uncorrected"]) == 2
+np.testing.assert_array_equal(np.asarray(y[2]), np.asarray(clean[2]))
+
+# the single-leaf wrapper is the L=1 case of the tree (same counters)
+def one_fn(v, inj):
+    return ft_psum_scatter(v, "data", scatter_dimension=0, tiled=False,
+                           policy=pol, injection=inj)
+f1 = jax.jit(jax.shard_map(one_fn, mesh=mesh, in_specs=(P(), P()),
+    out_specs=(P("data"), RSPEC), check_vma=False))
+_, rep1 = f1(leaves[0], Injection.at(stream=COLLECTIVE_WIRE, pos=2,
+                                     delta=4096.0, seam=SEAM_COLLECTIVE))
+assert int(rep1["collective_detected"]) == 1
+assert int(rep1["collective_retried"]) == 1
+
+# clean-path collective count is constant in L: the per-leaf reference
+# checksums ride ONE stacked psum pair (plus the retry branch), so the
+# all-reduce count in the lowered step must not grow from L=2 to L=6
+def count_ar(L):
+    ls = tuple(jax.random.normal(jax.random.PRNGKey(i), (4, 16),
+                                 jnp.float32) for i in range(L))
+    f = jax.jit(jax.shard_map(lambda t: ft_psum_scatter_tree(
+        t, "data", scatter_dimension=0, tiled=False, policy=pol),
+        mesh=mesh, in_specs=(tuple(P() for _ in ls),),
+        out_specs=(tuple(P("data") for _ in ls), RSPEC),
+        check_vma=False))
+    hlo = f.lower(ls).compile().as_text()
+    return hlo.count("all-reduce-start") + hlo.count(" all-reduce(")
+assert count_ar(2) == count_ar(6), (count_ar(2), count_ar(6))
+print("TREE SCATTER OK", count_ar(2))
+""")
+    assert "TREE SCATTER OK" in out
+
+
 def test_elastic_remesh_reshards_params():
     out = _run(COMMON + """
 from repro.runtime import plan_remesh, make_mesh_from_plan, reshard
