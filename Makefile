@@ -7,7 +7,7 @@ CAMPAIGN_OUT ?= /tmp/ftblas_campaign
 SHARDS ?= 4
 
 .PHONY: test campaign-smoke campaign-compiled-smoke campaign-full drill \
-        bench-smoke docs-check ci
+        bench-smoke bench-gate bench-baseline bench-full tune docs-check ci
 
 test:            ## tier-1 test suite (ROADMAP contract)
 	$(PY) -m pytest -x -q
@@ -41,7 +41,20 @@ drill:           ## Poisson errors-per-minute train-loop drill
 bench-smoke:     ## per-routine FT overhead timings via the campaign engine
 	$(PY) benchmarks/campaign_overhead.py
 
+bench-gate:      ## fresh-measure the smoke manifest, gate vs BENCH_smoke.json
+	$(PY) -m benchmarks.gate
+
+bench-baseline:  ## re-emit the committed baseline (after grid/budget edits)
+	$(PY) -m benchmarks.manifest --measure --out BENCH_smoke.json
+
+bench-full:      ## full benchmark manifest (manual; wider shapes/dtypes)
+	$(PY) -m benchmarks.manifest --grid full --measure \
+	    --out /tmp/BENCH_full.json
+
+tune:            ## autotune fused-ABFT kernel tiles into the disk cache
+	$(PY) -m repro.kernels.autotune --shapes 1x128x128x128,8x128x128x128
+
 docs-check:      ## docs/*.md cross-links + architecture.md module names
 	$(PY) tools/check_docs.py
 
-ci: test campaign-smoke campaign-compiled-smoke bench-smoke docs-check
+ci: test campaign-smoke campaign-compiled-smoke bench-gate docs-check

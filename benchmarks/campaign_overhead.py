@@ -29,6 +29,12 @@ backend, ``FTPolicy.interpret=False``), comparing mean per-cell wall time
 from the executor's compile-cache stats - the number that makes the
 sharded compiled smoke cheaper per cell than the interpret sweep.
 Emitted as a fourth ``BENCH JSON`` line.
+
+The raw timing harnesses (``time_gemm_epilogue`` / ``time_train_step`` /
+``time_verified_collectives``) are parametrized and reused by the
+regression-gated benchmark manifest (``benchmarks/manifest.py`` /
+``benchmarks/gate.py``): the manifest enumerates the cells, these
+functions produce the per-policy times.
 """
 from __future__ import annotations
 
@@ -51,32 +57,45 @@ def _bench_us(fn, *args, reps: int = 5) -> float:
     return 1e6 * best
 
 
-def bench_epilogue_fusion() -> dict:
-    """Fused vs separate alpha/beta epilogue on the full GEMM contract."""
+def time_gemm_epilogue(n: int = 128, *, interpret: bool = True,
+                       dtype=None, seed: int = 0) -> dict:
+    """Per-policy times (us) for the full GEMM contract
+    ``C = alpha*A@B + beta*C0``: no FT, fused epilogue, separate
+    epilogue.  ``interpret`` selects the kernel lowering (the manifest's
+    backend axis); operands are deterministic from ``seed``."""
     import jax
     import jax.numpy as jnp
 
     from repro.blas import level3
     from repro.core.ft_config import FTPolicy
 
-    n = 128
-    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
-    A = jax.random.normal(k1, (n, n), jnp.float32)
-    B = jax.random.normal(k2, (n, n), jnp.float32)
-    C = jax.random.normal(k3, (n, n), jnp.float32)
+    dtype = dtype or jnp.float32
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    A = jax.random.normal(k1, (n, n), dtype)
+    B = jax.random.normal(k2, (n, n), dtype)
+    C = jax.random.normal(k3, (n, n), dtype)
 
     policies = {
         "off": FTPolicy(mode="off"),
         "fused_epilogue": FTPolicy(mode="hybrid", fused=True,
-                                   fuse_epilogue=True),
+                                   fuse_epilogue=True,
+                                   interpret=interpret),
         "separate_epilogue": FTPolicy(mode="hybrid", fused=True,
-                                      fuse_epilogue=False),
+                                      fuse_epilogue=False,
+                                      interpret=interpret),
     }
     times = {}
     for name, pol in policies.items():
         fn = jax.jit(lambda a, b, c, _p=pol: level3.gemm(
             1.1, a, b, 0.5, c, policy=_p)[0])
         times[name] = _bench_us(fn, A, B, C)
+    return times
+
+
+def bench_epilogue_fusion() -> dict:
+    """Fused vs separate alpha/beta epilogue on the full GEMM contract."""
+    n = 128
+    times = time_gemm_epilogue(n)
     t_off = max(times["off"], 1e-9)
     return {
         "bench": "gemm_epilogue_fusion",
@@ -92,8 +111,10 @@ def bench_epilogue_fusion() -> dict:
     }
 
 
-def bench_train_step() -> dict:
-    """Fwd-only vs fwd+bwd ABFT overhead on one MLP train step.
+def time_train_step(B: int = 64, D: int = 256, H: int = 256, *,
+                    seed: int = 7) -> dict:
+    """Per-policy times (us) for one MLP train step: no FT, forward-only
+    ABFT (``protect_grads=False``), forward AND backward ABFT.
 
     The unfused (pure-jnp) ABFT path keeps the comparison meaningful on
     CPU - interpret-mode Pallas kernels would swamp the FT overhead with
@@ -106,8 +127,7 @@ def bench_train_step() -> dict:
     from repro.core.ft_config import FTPolicy
     from repro.core.ft_dense import ft_dense
 
-    B, D, H = 64, 256, 256
-    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
     x = jax.random.normal(k1, (B, D), jnp.float32)
     w1 = jax.random.normal(k2, (D, H), jnp.float32) / (D ** 0.5)
     w2 = jax.random.normal(k3, (H, D), jnp.float32) / (H ** 0.5)
@@ -137,6 +157,13 @@ def bench_train_step() -> dict:
     for name, pol in policies.items():
         step = make_step(pol)
         times[name] = _bench_us(step, (w1, w2), x)
+    return times
+
+
+def bench_train_step() -> dict:
+    """Fwd-only vs fwd+bwd ABFT overhead on one MLP train step."""
+    B, D, H = 64, 256, 256
+    times = time_train_step(B, D, H)
     t_off = max(times["off"], 1e-9)
     return {
         "bench": "train_step_abft_overhead",
@@ -151,13 +178,16 @@ def bench_train_step() -> dict:
     }
 
 
-def bench_verified_collectives() -> dict:
-    """Bare vs checksummed gradient collectives on a shard_map'd axis.
+def time_verified_collectives(*, seed: int = 3) -> dict:
+    """Per-policy times (us) for a gradient-tree all-reduce + ZeRO-style
+    psum_scatter: ``bare`` (lax primitives) vs ``verified``
+    (``ft_psum`` / ``ft_psum_scatter`` under ``verify_collectives``).
 
     Single-device in CI (the collective lowers to a copy, so the delta
     IS the verification arithmetic - the worst case for relative
     overhead); on a real mesh the wire time amortizes the same checksum
-    work.
+    work.  The extra ``_meta`` keys carry device/payload facts for the
+    derived rows.
     """
     import jax
     import jax.numpy as jnp
@@ -172,10 +202,10 @@ def bench_verified_collectives() -> dict:
                          axis_types=(jax.sharding.AxisType.Auto,))
     rspec = {k: P() for k in ftreport.FIELDS}
     # a gradient-tree-shaped payload: a few leaves of mixed sizes
-    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
     tree = {f"w{i}": jax.random.normal(k, (256, 64), jnp.float32)
             for i, k in enumerate(keys)}
-    scat = jax.random.normal(jax.random.PRNGKey(4),
+    scat = jax.random.normal(jax.random.PRNGKey(seed + 1),
                              (n_dev, 4096), jnp.float32)
     vc = FTPolicy(mode="hybrid", verify_collectives=True)
 
@@ -191,14 +221,25 @@ def bench_verified_collectives() -> dict:
             out_specs=(jax.tree.map(lambda _: P(), tree), P("data"),
                        rspec), check_vma=False))
 
-    t_bare = _bench_us(make(OFF), tree, scat)
-    t_ver = _bench_us(make(vc), tree, scat)
     n_elems = sum(x.size for x in jax.tree.leaves(tree)) + scat.size
     return {
+        "bare": _bench_us(make(OFF), tree, scat),
+        "verified": _bench_us(make(vc), tree, scat),
+        "_meta": {"devices": n_dev, "elements": n_elems,
+                  "leaves": len(tree) + 1},
+    }
+
+
+def bench_verified_collectives() -> dict:
+    """Bare vs checksummed gradient collectives on a shard_map'd axis."""
+    times = time_verified_collectives()
+    t_bare, t_ver = times["bare"], times["verified"]
+    meta = times["_meta"]
+    return {
         "bench": "verified_collective_overhead",
-        "devices": n_dev,
-        "elements": n_elems,
-        "leaves": len(tree) + 1,
+        "devices": meta["devices"],
+        "elements": meta["elements"],
+        "leaves": meta["leaves"],
         "us_bare": round(t_bare, 1),
         "us_verified": round(t_ver, 1),
         "overhead_pct_verified": round(

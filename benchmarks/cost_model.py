@@ -61,6 +61,25 @@ def _ft_matmul_extra(m, k, n, ft: str):
     return ref_flops + 2 * (m * n) * 2, extra_hbm
 
 
+def matmul_costs(m: int, k: int, n: int, *, ft: str = "off",
+                 dtype_bytes: int = F32, n_mm: int = 1) -> Dict[str, float]:
+    """Analytic FLOPs / HBM bytes for a standalone GEMM microbench cell.
+
+    The benchmark manifest (``benchmarks/manifest.py``) attaches these to
+    every cell so each measured time carries its roofline context: the
+    base ``2mkn`` product plus the FT extra work of the cell's policy
+    (``_ft_matmul_extra`` - the same accounting the model-scale roofline
+    uses), and the three-operand stream as the HBM floor.  ``n_mm``
+    scales both for cells that time several chained GEMMs (e.g. a train
+    step's fwd+bwd products).
+    """
+    ef, eh = _ft_matmul_extra(m, k, n, ft)
+    return {
+        "flops": n_mm * (2.0 * m * k * n + ef),
+        "hbm_bytes": n_mm * ((m * k + k * n + m * n) * dtype_bytes + eh),
+    }
+
+
 class _B:
     """Per-scope accumulators (see module docstring)."""
 

@@ -1,0 +1,130 @@
+"""Benchmark regression gate (``make bench-gate``).
+
+Compares a FRESH measurement of the smoke benchmark manifest against the
+committed baseline (``BENCH_smoke.json`` at the repo root) and fails CI
+when FT overhead regresses past a cell's stated budget.
+
+Absolute microseconds are not portable across machines, so the gate does
+NOT compare wall times host-to-host.  What it checks:
+
+  1. grid integrity - the manifest rebuilt from the baseline's
+     (grid, seed) must fingerprint-match the committed one.  Editing the
+     grid, budgets, or seed without re-emitting the baseline fails here.
+  2. overhead budgets - every budgeted cell's FRESH ``overhead_pct``
+     (FT vs the paired off/bare cell, both timed in the same run on the
+     same host) must stay within its ``budget_pct``.  The ratio is the
+     portable quantity: it measures the FT arithmetic against the same
+     baseline arithmetic, compiled the same way, on the same machine.
+
+The check itself is a pure function (``check``) over (baseline, fresh
+results), so tests can drive PASS/FAIL with synthetic numbers; the CLI's
+``--inflate-pct`` applies a synthetic regression to every budgeted cell
+before checking - the "demonstrably fails" path:
+
+  python -m benchmarks.gate                     # fresh measure + gate
+  python -m benchmarks.gate --inflate-pct 1e9   # must FAIL
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import manifest as bm                         # noqa: E402
+
+
+def load_baseline(path: str = bm.BASELINE_PATH) -> dict:
+    with open(path) as f:
+        baseline = json.load(f)
+    if baseline.get("schema") != bm.SCHEMA_BASELINE:
+        raise ValueError(f"{path}: schema {baseline.get('schema')!r} != "
+                         f"{bm.SCHEMA_BASELINE!r}")
+    return baseline
+
+
+def check(baseline: dict, fresh: Dict[str, dict]) -> List[str]:
+    """Pure gate: returns the violation list (empty == PASS).
+
+    ``fresh`` is a ``manifest.measure``-shaped results dict for the
+    baseline's manifest.
+    """
+    errors: List[str] = []
+    man = baseline.get("manifest", {})
+    rebuilt = bm.build_manifest(man.get("grid", "smoke"),
+                                man.get("seed", 0))
+    if rebuilt["fingerprint"] != man.get("fingerprint"):
+        errors.append(
+            f"manifest drift: rebuilt fingerprint "
+            f"{rebuilt['fingerprint']} != committed "
+            f"{man.get('fingerprint')} - grid/budgets/seed changed "
+            f"without re-emitting the baseline")
+        return errors                      # cells are not comparable
+
+    base_results = baseline.get("results", {})
+    for cd in man.get("cells", []):
+        cid, budget = cd["id"], cd.get("budget_pct")
+        if budget is None:
+            continue
+        r = fresh.get(cid)
+        if r is None or r.get("overhead_pct") is None:
+            errors.append(f"{cid}: no fresh overhead measurement")
+            continue
+        ov = r["overhead_pct"]
+        committed = (base_results.get(cid) or {}).get("overhead_pct")
+        if ov > budget:
+            errors.append(
+                f"{cid}: overhead {ov:.2f}% exceeds budget "
+                f"{budget:.0f}% (committed baseline: {committed}%)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=bm.BASELINE_PATH)
+    ap.add_argument("--out", default="",
+                    help="also write the fresh run (baseline schema) here")
+    ap.add_argument("--inflate-pct", type=float, default=0.0,
+                    help="add a synthetic regression of this many "
+                         "overhead points to every budgeted cell before "
+                         "gating (demonstrates/tests the FAIL path)")
+    args = ap.parse_args(argv)
+
+    baseline = load_baseline(args.baseline)
+    man = baseline["manifest"]
+    print(f"[gate] baseline {os.path.relpath(args.baseline)}: "
+          f"grid={man['grid']} seed={man['seed']} "
+          f"fingerprint={man['fingerprint']} "
+          f"({man['n_cells']} cells)", file=sys.stderr)
+
+    fresh = bm.measure(man, log=lambda m: print(m, file=sys.stderr))
+    if args.inflate_pct:
+        fresh = {cid: dict(r, overhead_pct=(
+            None if r["overhead_pct"] is None
+            else r["overhead_pct"] + args.inflate_pct))
+            for cid, r in fresh.items()}
+        print(f"[gate] applied synthetic +{args.inflate_pct:g} overhead "
+              f"points to every measured cell", file=sys.stderr)
+    if args.out:
+        bm.write_json(bm.baseline_payload(man, fresh), args.out)
+
+    errors = check(baseline, fresh)
+    n_budgeted = sum(1 for c in man["cells"]
+                     if c.get("budget_pct") is not None)
+    for e in errors:
+        print(f"bench-gate: {e}", file=sys.stderr)
+    if errors:
+        print(f"bench-gate: FAIL ({len(errors)} violations over "
+              f"{n_budgeted} budgeted cells)", file=sys.stderr)
+        return 1
+    print(f"bench-gate: OK ({n_budgeted} budgeted cells within budget, "
+          f"fingerprint {man['fingerprint']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

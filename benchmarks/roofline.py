@@ -44,8 +44,22 @@ def load_artifact(arch, shape, multi_pod=False):
     return None
 
 
+def classify_bound(t_c: float, t_m: float, t_n: float):
+    """(bound_seconds, bottleneck_name) with a deterministic tie-break.
+
+    The old ``{t_c: "compute", ...}[bound]`` dict collapsed exactly-equal
+    terms to whichever was inserted last; ties now resolve in the fixed
+    order compute > memory > collective (first term attaining the max).
+    """
+    terms = (("compute", t_c), ("memory", t_m), ("collective", t_n))
+    bound = max(t for _, t in terms)
+    dom = next(name for name, t in terms if t == bound)
+    return bound, dom
+
+
 def analyze_cell(arch: str, shape, *, ft: str = "off", ms=16, dp=16):
     cfg = get_config(arch)
+    cell = None
     for c, skip in cfg.cells():
         if c.name == shape:
             if skip:
@@ -53,12 +67,15 @@ def analyze_cell(arch: str, shape, *, ft: str = "off", ms=16, dp=16):
                         "reason": skip}
             cell = c
             break
+    if cell is None:
+        valid = sorted(c.name for c, _ in cfg.cells())
+        raise ValueError(f"unknown shape {shape!r} for arch {arch!r}; "
+                         f"valid shapes: {valid}")
     costs = cell_costs(cfg, cell, ms=ms, dp=dp, ft=ft)
     t_c = costs.flops / PEAK
     t_m = costs.hbm / HBM_BW
     t_n = costs.wire / ICI_BW
-    bound = max(t_c, t_m, t_n)
-    dom = {t_c: "compute", t_m: "memory", t_n: "collective"}[bound]
+    bound, dom = classify_bound(t_c, t_m, t_n)
     rec = {
         "arch": arch, "shape": shape, "status": "ok", "ft": ft,
         "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_n,

@@ -12,9 +12,35 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
+    import json
+
+    from benchmarks import manifest as bench_manifest
     from benchmarks import paper_figs, roofline
 
     rows = paper_figs.main()
+
+    print("\n== Benchmark manifest (regression-gated; make bench-gate) ==")
+    man = bench_manifest.build_manifest()
+    print(f"smoke grid: {man['n_cells']} cells, "
+          f"fingerprint {man['fingerprint']}")
+    if os.path.exists(bench_manifest.BASELINE_PATH):
+        with open(bench_manifest.BASELINE_PATH) as f:
+            baseline = json.load(f)
+        bman = baseline.get("manifest", {})
+        drift = "" if bman.get("fingerprint") == man["fingerprint"] \
+            else "  [DRIFT vs committed baseline - re-emit it]"
+        print(f"committed BENCH_smoke.json: fingerprint "
+              f"{bman.get('fingerprint')}{drift}")
+        for cd in bman.get("cells", []):
+            if cd.get("budget_pct") is None:
+                continue
+            r = baseline.get("results", {}).get(cd["id"], {})
+            print(f"  {cd['id']}: committed overhead "
+                  f"{r.get('overhead_pct')}% (budget "
+                  f"{cd['budget_pct']:.0f}%)")
+    else:
+        print("no committed BENCH_smoke.json "
+              "(python -m benchmarks.manifest --measure emits one)")
 
     print("\n== Roofline summary (from dry-run artifacts + cost model) ==")
     rl = roofline.table("off")

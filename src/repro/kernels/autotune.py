@@ -1,0 +1,221 @@
+"""Tile-size autotuner for the fused ABFT GEMM kernel.
+
+``abft_gemm_call`` takes (bm, bn, bk) block sizes; the right choice is
+backend- and shape-dependent (VMEM footprint vs grid-step count on TPU,
+interpreter loop count in interpret mode).  This module searches a small
+candidate set per (backend, dtype, bucketed shape) and caches the winner
+ON DISK - the same lifecycle as the XLA program cache: the first tuned
+run pays the search, every later process (and every later session) reads
+the file.  Lookup is cheap pure-Python dict/file access, so it is safe
+inside an outer ``jax.jit`` trace, exactly like
+``backend.compiled_pallas_supported``.
+
+Contract:
+
+  ``tile_for(...)``   lookup-or-default ONLY.  It never searches: an
+                      untuned shape silently gets ``DEFAULT_TILES`` so
+                      library call sites (``kernels/ops.py``) stay
+                      deterministic and never pay a surprise search.
+  ``autotune(...)``   the explicit search (``make tune`` / tests).  Times
+                      each candidate through ``ops.abft_gemm_batched``
+                      with the usual warmup + best-of-N discipline and
+                      persists the winner.
+
+Shapes are bucketed to the next power of two per dimension so one search
+covers a family of nearby shapes; the cache key carries the backend name,
+dtype and batch count.  Cache path: ``$FTBLAS_TUNE_CACHE`` if set, else
+``~/.cache/ftblas/tiles-<platform>.json``.  Writes are atomic
+(tmp + rename) so concurrent tuners cannot tear the file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+DEFAULT_TILES: Tuple[int, int, int] = (128, 128, 128)
+
+# Small on purpose: every candidate costs one kernel compile.  128-lane
+# alignment is a hard kernel constraint for bn/bk; bm may drop to the
+# 8-sublane granularity.
+CANDIDATE_TILES: Tuple[Tuple[int, int, int], ...] = (
+    (128, 128, 128),
+    (64, 128, 128),
+    (32, 128, 128),
+    (128, 128, 256),
+    (256, 128, 128),
+)
+
+_SCHEMA = "ftblas-tiles-v1"
+_memo: Dict[str, dict] = {}
+_loaded_path: Optional[str] = None
+
+
+def cache_path() -> str:
+    env = os.environ.get("FTBLAS_TUNE_CACHE")
+    if env:
+        return env
+    import jax
+    platform = jax.default_backend()
+    return os.path.join(os.path.expanduser("~"), ".cache", "ftblas",
+                        f"tiles-{platform}.json")
+
+
+def _bucket(x: int) -> int:
+    """Next power of two >= x (min 8): one tuning entry covers the whole
+    bucket, so nearby shapes share tiles instead of each paying a search."""
+    b = 8
+    while b < x:
+        b *= 2
+    return b
+
+
+def cache_key(nb: int, m: int, n: int, k: int, dtype, backend: str) -> str:
+    import numpy as np
+    name = str(np.dtype(dtype))   # "float32" for np/jnp types AND strings
+    return (f"{backend}|{name}|nb{_bucket(nb)}"
+            f"|m{_bucket(m)}|n{_bucket(n)}|k{_bucket(k)}")
+
+
+def _load() -> Dict[str, dict]:
+    global _loaded_path
+    path = cache_path()
+    if _loaded_path == path and _memo:
+        return _memo
+    _memo.clear()
+    _loaded_path = path
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if payload.get("schema") == _SCHEMA:
+                _memo.update(payload.get("entries", {}))
+        except (json.JSONDecodeError, OSError):
+            pass                      # corrupt cache == empty cache
+    return _memo
+
+
+def _save(entries: Dict[str, dict]) -> str:
+    path = cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"schema": _SCHEMA, "entries": entries}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def invalidate() -> None:
+    """Drop the in-process memo (tests / after an external cache write)."""
+    global _loaded_path
+    _memo.clear()
+    _loaded_path = None
+
+
+def tile_for(nb: int, m: int, n: int, k: int, dtype,
+             backend: str) -> Tuple[int, int, int]:
+    """Tuned (bm, bn, bk) for a fused ABFT GEMM, or ``DEFAULT_TILES``.
+
+    Lookup only - never searches (see module docstring)."""
+    entry = _load().get(cache_key(nb, m, n, k, dtype, backend))
+    if entry and isinstance(entry.get("tiles"), list) \
+            and len(entry["tiles"]) == 3:
+        return tuple(int(t) for t in entry["tiles"])
+    return DEFAULT_TILES
+
+
+def _default_timer(nb, m, n, k, dtype, interpret, tiles, reps):
+    """Best-of-``reps`` wall time (us) of one abft_gemm_batched call with
+    explicit tiles, after a compile warmup."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    A = jax.random.normal(k1, (nb, m, k), jnp.dtype(dtype))
+    B = jax.random.normal(k2, (nb, k, n), jnp.dtype(dtype))
+    bm, bn, bk = tiles
+
+    def call():
+        return ops.abft_gemm_batched(A, B, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret)
+
+    jax.block_until_ready(call())     # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        best = min(best, time.perf_counter() - t0)
+    return 1e6 * best
+
+
+def autotune(nb: int, m: int, n: int, k: int, dtype, *,
+             interpret: bool = True,
+             candidates: Optional[Sequence[Tuple[int, int, int]]] = None,
+             reps: int = 3, timer=None) -> dict:
+    """Search the candidate tiles for one (backend, dtype, shape bucket),
+    persist the winner to the disk cache, return the cache entry.
+
+    ``timer(nb, m, n, k, dtype, interpret, tiles, reps) -> us`` is
+    injectable so tests can exercise the cache round-trip without paying
+    kernel compiles."""
+    from repro.kernels.backend import backend_name, use_xla_fallback
+
+    backend = backend_name(interpret)
+    timer = timer or _default_timer
+    if candidates is None:
+        candidates = CANDIDATE_TILES
+    if use_xla_fallback(interpret):
+        # The XLA jnp lowering has no tile axis: record the default so the
+        # cache stays honest about what "tuned" means on this platform.
+        candidates = (DEFAULT_TILES,)
+    timings = {}
+    for tiles in candidates:
+        timings["x".join(map(str, tiles))] = round(
+            timer(nb, m, n, k, dtype, interpret, tiles, reps), 2)
+    best = min(timings, key=timings.get)
+    entry = {
+        "tiles": [int(t) for t in best.split("x")],
+        "us": timings[best],
+        "timings_us": timings,
+        "reps": reps,
+    }
+    entries = dict(_load())
+    entries[cache_key(nb, m, n, k, dtype, backend)] = entry
+    _save(entries)
+    invalidate()
+    return entry
+
+
+def main(argv=None) -> int:
+    """``python -m repro.kernels.autotune``: tune the shapes the model
+    seams and benchmarks actually hit."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shapes", default="1x128x128x128",
+                    help="comma list of nb x M x N x K")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--backend", default="interpret",
+                    choices=["interpret", "compiled"])
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    interpret = args.backend == "interpret"
+    for spec in args.shapes.split(","):
+        nb, m, n, k = (int(s) for s in spec.split("x"))
+        entry = autotune(nb, m, n, k, args.dtype, interpret=interpret,
+                         reps=args.reps)
+        print(f"[tune] {args.backend} {args.dtype} {spec}: "
+              f"tiles={'x'.join(map(str, entry['tiles']))} "
+              f"{entry['us']:.1f}us  (candidates: {entry['timings_us']})")
+    print(f"[tune] cache: {cache_path()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -57,3 +57,19 @@ def use_xla_fallback(interpret: bool) -> bool:
 
 def backend_name(interpret: bool) -> str:
     return "interpret" if interpret else "compiled"
+
+
+def tile_config(nb: int, m: int, n: int, k: int, dtype,
+                interpret: bool):
+    """Autotuned (bm, bn, bk) for a fused ABFT GEMM of this shape on this
+    backend, falling back to the kernel defaults when untuned.
+
+    Pure-Python lookup against the on-disk tile cache
+    (``kernels/autotune.py``) - never a search, and safe inside an outer
+    ``jax.jit`` trace for the same reason ``compiled_pallas_supported``
+    is: shapes are static at trace time and the decision touches no
+    tracers.
+    """
+    from repro.kernels import autotune
+    return autotune.tile_for(nb, m, n, k, dtype,
+                             backend_name(interpret))

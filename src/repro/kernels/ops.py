@@ -100,13 +100,12 @@ def _abft_gemm_batched_xla(A, B, alpha, beta, C0, injection):
     return C, C.sum(axis=2), C.sum(axis=1), refs
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "bm", "bn", "bk", "with_abs", "interpret"))
 def abft_gemm_batched(A: jax.Array, B: jax.Array, *,
                       alpha=1.0, beta=0.0,
                       C0: Optional[jax.Array] = None,
                       injection: Optional[Injection] = None,
-                      bm: int = 128, bn: int = 128, bk: int = 128,
+                      bm: Optional[int] = None, bn: Optional[int] = None,
+                      bk: Optional[int] = None,
                       with_abs: bool = True, interpret: bool = True
                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                  ChecksumRefs]:
@@ -119,7 +118,34 @@ def abft_gemm_batched(A: jax.Array, B: jax.Array, *,
     logical (unpadded) shapes: C (nb, M, N), sums/refs (nb, M) / (nb, N).
     Injection positions index the logical flattened (nb*M*N) output, so a
     fault can target any batch slice.
+
+    Tile sizes default to the autotuned configuration for this
+    (backend, dtype, shape) when one exists in the on-disk tile cache
+    (``kernels/autotune.py``; lookup-only, 128^3 otherwise); explicit
+    ``bm``/``bn``/``bk`` always win.
     """
+    if bm is None or bn is None or bk is None:
+        from repro.kernels.backend import tile_config
+        nb_, M_, K_ = A.shape
+        tuned = tile_config(nb_, M_, B.shape[2], K_, A.dtype, interpret)
+        bm = tuned[0] if bm is None else bm
+        bn = tuned[1] if bn is None else bn
+        bk = tuned[2] if bk is None else bk
+    return _abft_gemm_batched_tiled(
+        A, B, alpha=alpha, beta=beta, C0=C0, injection=injection,
+        bm=bm, bn=bn, bk=bk, with_abs=with_abs, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bm", "bn", "bk", "with_abs", "interpret"))
+def _abft_gemm_batched_tiled(A: jax.Array, B: jax.Array, *,
+                             alpha=1.0, beta=0.0,
+                             C0: Optional[jax.Array] = None,
+                             injection: Optional[Injection] = None,
+                             bm: int = 128, bn: int = 128, bk: int = 128,
+                             with_abs: bool = True, interpret: bool = True
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                        ChecksumRefs]:
     if use_xla_fallback(interpret):
         return _abft_gemm_batched_xla(A, B, alpha, beta, C0, injection)
     nb, M, K = A.shape
@@ -154,17 +180,17 @@ def abft_gemm_batched(A: jax.Array, B: jax.Array, *,
     return C[:, :M, :N], rowsum_act, colsum_act, refs
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "bm", "bn", "bk", "with_abs", "interpret"))
 def abft_gemm(A: jax.Array, B: jax.Array, *,
               alpha=1.0, beta=0.0, C0: Optional[jax.Array] = None,
               injection: Optional[Injection] = None,
-              bm: int = 128, bn: int = 128, bk: int = 128,
+              bm: Optional[int] = None, bn: Optional[int] = None,
+              bk: Optional[int] = None,
               with_abs: bool = True, interpret: bool = True
               ) -> Tuple[jax.Array, jax.Array, jax.Array, ChecksumRefs]:
     """2-D fused-epilogue checksum matmul: the nb == 1 case of the batched
     grid.  Returns (C, rowsum_act, colsum_act, refs) in accumulation dtype
-    with logical (unpadded) (M, N) / (M,) / (N,) shapes."""
+    with logical (unpadded) (M, N) / (M,) / (N,) shapes.  Tile resolution
+    as in ``abft_gemm_batched`` (autotune cache or 128^3 defaults)."""
     C, rowsum_act, colsum_act, refs = abft_gemm_batched(
         A[None], B[None], alpha=alpha, beta=beta,
         C0=None if C0 is None else C0[None], injection=injection,

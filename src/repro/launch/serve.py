@@ -5,6 +5,17 @@ the prompt (single-token steps against the cache - exactly the lowered
 ``serve_step``), then generation, with per-step FT counters.  Soft-error
 drills (--inject-every) corrupt one accumulator mid-decode; the ABFT/DMR
 layers detect+correct and the stream continues bit-identically.
+
+Serving runs the FUSED production kernels (the paper's Sec. 5.2
+configuration); ``--backend`` selects the lowering exactly as in
+``launch/train.py``: ``compiled`` (default - the deployment path; Mosaic
+on TPU, the XLA jnp lowering on platforms without a Pallas compiler)
+or ``interpret`` (the Pallas interpreter, for parity debugging).
+
+The per-step totals fold the FULL verdict: ABFT + DMR + collective
+detections, corrections/retries AND the ``*_uncorrected`` counters - an
+uncorrected fault can never print as a clean run (the driver exits
+nonzero if one surfaces).
 """
 from __future__ import annotations
 
@@ -32,13 +43,25 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--ft", default="hybrid", choices=list(ft_config.MODES))
+    ap.add_argument("--backend", default="compiled",
+                    choices=["interpret", "compiled"],
+                    help="kernel lowering for the fused FT kernels: "
+                         "compiled sets FTPolicy.interpret=False (Mosaic "
+                         "on TPU; the XLA jnp lowering elsewhere), "
+                         "interpret runs the Pallas interpreter")
+    ap.add_argument("--inject-every", type=int, default=0,
+                    help="inject one accumulator soft error every N "
+                         "decode steps (drill); the stream must continue "
+                         "and the counters must show the corrections")
     ap.add_argument("--cache-len", type=int, default=64)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).smoke()
     model = build_model(cfg)
     mesh = smoke_mesh()
-    policy = ft_config.FTPolicy(mode=args.ft, fused=False) \
+    compiled = args.backend == "compiled"
+    policy = ft_config.FTPolicy(mode=args.ft, fused=True,
+                                interpret=not compiled) \
         if args.ft != "off" else ft_config.OFF
     ctx = make_ctx(multi_pod=False, data_size=1, model_size=1, policy=policy)
 
@@ -59,24 +82,39 @@ def main(argv=None) -> int:
     cspecs = jax.tree.map(lambda _: P(), cache)
     rspec = {k: P() for k in ftreport.FIELDS}
 
-    serve = make_serve_step(model, ctx)
+    drill = args.inject_every > 0
+    if drill and args.ft == "off":
+        ap.error("--inject-every needs an FT policy (--ft off injects "
+                 "into an unprotected stream; nothing would correct it)")
+    serve = make_serve_step(model, ctx, injection_seam=drill)
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype(np.int32)
 
+    in_specs = (pspecs, cspecs, P("data", None), P())
+    if drill:
+        ispec = jax.tree.map(lambda _: P(), Injection.none())
+        in_specs = in_specs + (ispec,)
     step_fn = jax.jit(jax.shard_map(
-        serve, mesh=mesh,
-        in_specs=(pspecs, cspecs, P("data", None), P()),
+        serve, mesh=mesh, in_specs=in_specs,
         out_specs=(P("data", None), cspecs, rspec),
         check_vma=False))
 
     tok = prompt[:, :1]
     out_tokens = [tok]
-    totals = {"det": 0, "corr": 0}
+    totals = {k: 0 for k in ftreport.FIELDS}
+    n_injected = 0
     t0 = time.time()
     for pos in range(args.prompt_len + args.gen_len - 1):
-        nxt, cache, rep = step_fn(params, cache, tok, jnp.int32(pos))
-        totals["det"] += int(rep["abft_detected"] + rep["dmr_detected"])
-        totals["corr"] += int(rep["abft_corrected"] + rep["dmr_corrected"])
+        step_args = (params, cache, tok, jnp.int32(pos))
+        if drill:
+            fire = (pos + 1) % args.inject_every == 0
+            inj = Injection.at(stream=ABFT_ACC, pos=int(pos) % 7,
+                               delta=1e3) if fire else Injection.none()
+            n_injected += int(fire)
+            step_args = step_args + (inj,)
+        nxt, cache, rep = step_fn(*step_args)
+        for k in ftreport.FIELDS:
+            totals[k] += int(rep[k])
         if pos + 1 < args.prompt_len:
             tok = prompt[:, pos + 1:pos + 2]      # teacher-force the prompt
         else:
@@ -84,10 +122,34 @@ def main(argv=None) -> int:
             out_tokens.append(tok)
     dt = time.time() - t0
     gen = np.concatenate(out_tokens, axis=1)
+
+    detected = (totals["abft_detected"] + totals["dmr_detected"]
+                + totals["collective_detected"])
+    corrected = (totals["abft_corrected"] + totals["dmr_corrected"]
+                 + totals["collective_retried"])
+    uncorrected = (totals["abft_unrecoverable"]
+                   + totals["dmr_unrecoverable"]
+                   + totals["collective_uncorrected"])
     print(f"[serve] {args.arch}: generated {gen.shape} tokens in {dt:.1f}s "
-          f"({1e3 * dt / (args.prompt_len + args.gen_len):.0f} ms/tok)")
+          f"({1e3 * dt / (args.prompt_len + args.gen_len):.0f} ms/tok) "
+          f"backend={args.backend}")
     print(f"[serve] sample stream: {gen[0].tolist()}")
-    print(f"[serve] ft detected={totals['det']} corrected={totals['corr']}")
+    print(f"[serve] ft detected={detected} corrected={corrected} "
+          f"uncorrected={uncorrected}")
+    print("[serve] counters " + " ".join(
+        f"{k}={totals[k]}" for k in ftreport.FIELDS if totals[k]))
+    if drill:
+        print(f"[serve] drill: {n_injected} injected / "
+              f"{totals['abft_detected']} detected / "
+              f"{totals['abft_corrected']} corrected")
+        if totals["abft_detected"] < n_injected \
+                or totals["abft_corrected"] < n_injected:
+            print("[serve] DRILL FAILED: injected faults were not all "
+                  "detected+corrected")
+            return 1
+    if uncorrected:
+        print("[serve] UNCORRECTED FAULTS SURVIVED - not a clean run")
+        return 1
     return 0
 
 

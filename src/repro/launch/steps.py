@@ -325,14 +325,29 @@ def _greedy_pick(logits_loc: jax.Array, ctx: ShardCtx) -> jax.Array:
     return lax.pmin(cand.astype(jnp.int32), ctx.model_axis)
 
 
-def make_serve_step(model: Model, ctx: ShardCtx):
-    def serve_step(params, cache, tokens, pos):
+def make_serve_step(model: Model, ctx: ShardCtx, *,
+                    injection_seam: bool = False):
+    """``injection_seam=True`` adds a fifth traced argument -
+    ``serve_step(params, cache, tokens, pos, injection)`` - so a decode
+    drill (``launch/serve.py --inject-every``) can corrupt one accumulator
+    mid-stream: the Injection spec rides into the model through
+    ``ShardCtx.injection`` and lands on the forward-seam matmuls of that
+    decode step exactly as in the train-step seam."""
+    def _serve_step(params, cache, tokens, pos, injection):
+        ctx_step = ctx if injection is None else dataclasses.replace(
+            ctx, injection=injection)
         logits, cache, rep = model.decode_step(params, cache, tokens, pos,
-                                               ctx)
+                                               ctx_step)
         nxt = _greedy_pick(logits[:, -1, :], ctx)[:, None]     # (B_loc, 1)
         rep = jax.tree.map(
             lambda x: lax.psum(x, ctx.data_axis + (ctx.model_axis,)), rep)
         return nxt, cache, rep
+
+    if injection_seam:
+        return _serve_step
+
+    def serve_step(params, cache, tokens, pos):
+        return _serve_step(params, cache, tokens, pos, None)
 
     return serve_step
 

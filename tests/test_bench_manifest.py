@@ -1,0 +1,181 @@
+"""Benchmark manifest + regression gate + tile autotuner contracts.
+
+The perf evidence chain is only trustworthy if (a) the manifest is
+byte-deterministic (the gate detects grid drift by fingerprint), (b) the
+gate's pure ``check`` actually fails on an injected regression, and
+(c) the autotuner cache round-trips through disk without a surprise
+search on the library path.  All tests here are cheap: the gate tests
+drive ``check`` with the committed baseline's own numbers, and the
+autotuner tests inject a fake timer so no kernel ever compiles.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import gate, manifest as bm  # noqa: E402
+from benchmarks.roofline import classify_bound  # noqa: E402
+from repro.kernels import autotune  # noqa: E402
+
+BASELINE = bm.BASELINE_PATH
+
+
+# -- manifest determinism ----------------------------------------------------
+def test_fingerprint_deterministic_and_seed_sensitive():
+    cells = bm.build_cells("smoke")
+    assert bm.manifest_fingerprint(cells, 0) == \
+        bm.manifest_fingerprint(bm.build_cells("smoke"), 0)
+    assert bm.manifest_fingerprint(cells, 0) != \
+        bm.manifest_fingerprint(cells, 1)
+    # full grid is a strict superset -> different fingerprint
+    assert bm.manifest_fingerprint(bm.build_cells("full"), 0) != \
+        bm.manifest_fingerprint(cells, 0)
+
+
+def test_manifest_bytes_byte_identical():
+    assert bm.manifest_bytes("smoke", 0) == bm.manifest_bytes("smoke", 0)
+
+
+def test_cell_ids_unique_and_base_policy_present():
+    cells = bm.build_cells("full")
+    ids = [c.cell_id for c in cells]
+    assert len(ids) == len(set(ids))
+    groups = {}
+    for c in cells:
+        groups.setdefault((c.bench, c.shape, c.dtype, c.backend),
+                          []).append(c.policy)
+    for (bench, *_), policies in groups.items():
+        assert bm.BASE_POLICY[bench] in policies
+
+
+def test_committed_baseline_matches_rebuilt_manifest():
+    """The committed BENCH_smoke.json's manifest section must be exactly
+    what ``python -m benchmarks.manifest`` re-emits today - this is the
+    acceptance criterion the gate's drift check rests on."""
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    man = baseline["manifest"]
+    rebuilt = bm.build_manifest(man["grid"], man["seed"])
+    assert man == rebuilt
+    # every cell has a result row, budgeted or not
+    for cd in man["cells"]:
+        assert cd["id"] in baseline["results"]
+
+
+# -- gate --------------------------------------------------------------------
+def _baseline():
+    return gate.load_baseline(BASELINE)
+
+
+def test_gate_passes_on_committed_results():
+    baseline = _baseline()
+    assert gate.check(baseline, baseline["results"]) == []
+
+
+def test_gate_fails_on_inflated_overhead():
+    baseline = _baseline()
+    inflated = {cid: dict(r, overhead_pct=(
+        None if r["overhead_pct"] is None else r["overhead_pct"] + 1e9))
+        for cid, r in baseline["results"].items()}
+    errors = gate.check(baseline, inflated)
+    n_budgeted = sum(1 for c in baseline["manifest"]["cells"]
+                     if c.get("budget_pct") is not None)
+    assert n_budgeted > 0
+    assert len(errors) == n_budgeted
+    assert all("exceeds budget" in e for e in errors)
+
+
+def test_gate_fails_on_missing_measurement():
+    baseline = _baseline()
+    errors = gate.check(baseline, {})
+    assert errors and all("no fresh overhead" in e for e in errors)
+
+
+def test_gate_detects_manifest_drift():
+    baseline = _baseline()
+    tampered = json.loads(json.dumps(baseline))
+    tampered["manifest"]["fingerprint"] = "0" * 16
+    errors = gate.check(tampered, baseline["results"])
+    assert len(errors) == 1 and "manifest drift" in errors[0]
+
+
+# -- autotuner cache ---------------------------------------------------------
+@pytest.fixture
+def tune_cache(tmp_path, monkeypatch):
+    path = tmp_path / "tiles.json"
+    monkeypatch.setenv("FTBLAS_TUNE_CACHE", str(path))
+    autotune.invalidate()
+    yield str(path)
+    autotune.invalidate()
+
+
+def test_tile_for_defaults_when_untuned(tune_cache):
+    assert autotune.tile_for(1, 128, 128, 128, "float32", "interpret") == \
+        autotune.DEFAULT_TILES
+
+
+def test_autotune_cache_round_trip(tune_cache):
+    # fake timer: (64, 128, 128) is the "fastest" candidate
+    def timer(nb, m, n, k, dtype, interpret, tiles, reps):
+        return 1.0 if tiles == (64, 128, 128) else 100.0
+
+    entry = autotune.autotune(1, 128, 128, 128, "float32",
+                              interpret=True, timer=timer)
+    assert entry["tiles"] == [64, 128, 128]
+    assert os.path.exists(tune_cache)
+
+    # in-process lookup, then a cold lookup after dropping the memo
+    assert autotune.tile_for(1, 128, 128, 128, "float32", "interpret") == \
+        (64, 128, 128)
+    autotune.invalidate()
+    assert autotune.tile_for(1, 128, 128, 128, "float32", "interpret") == \
+        (64, 128, 128)
+
+    # bucketing: a nearby shape (100 <= 128 bucket) shares the entry,
+    # a different bucket does not
+    assert autotune.tile_for(1, 100, 128, 128, "float32", "interpret") == \
+        (64, 128, 128)
+    assert autotune.tile_for(1, 256, 128, 128, "float32", "interpret") == \
+        autotune.DEFAULT_TILES
+    # different backend never sees interpret's entry
+    assert autotune.tile_for(1, 128, 128, 128, "float32", "compiled") == \
+        autotune.DEFAULT_TILES
+
+
+def test_autotune_corrupt_cache_is_empty_cache(tune_cache):
+    with open(tune_cache, "w") as f:
+        f.write("{not json")
+    autotune.invalidate()
+    assert autotune.tile_for(1, 128, 128, 128, "float32", "interpret") == \
+        autotune.DEFAULT_TILES
+
+
+def test_backend_tile_config_uses_cache(tune_cache):
+    from repro.kernels import backend as kbackend
+
+    def timer(nb, m, n, k, dtype, interpret, tiles, reps):
+        return 1.0 if tiles == (32, 128, 128) else 100.0
+
+    autotune.autotune(1, 128, 128, 128, "float32", interpret=True,
+                      timer=timer)
+    interpret_tiles = kbackend.tile_config(1, 128, 128, 128, "float32",
+                                           True)
+    assert interpret_tiles == (32, 128, 128)
+
+
+# -- roofline hardening ------------------------------------------------------
+def test_classify_bound_deterministic_tie_break():
+    # exact tie: compute listed first wins
+    assert classify_bound(1.0, 1.0, 0.0) == (1.0, "compute")
+    assert classify_bound(1.0, 1.0, 1.0) == (1.0, "compute")
+    assert classify_bound(0.5, 1.0, 1.0) == (1.0, "memory")
+    assert classify_bound(0.1, 0.2, 0.9) == (0.9, "collective")
+
+
+def test_analyze_cell_unknown_shape_raises():
+    from benchmarks.roofline import analyze_cell
+    with pytest.raises(ValueError, match="unknown shape"):
+        analyze_cell("llama3_8b", "no-such-shape", ft="off")
