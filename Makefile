@@ -28,7 +28,7 @@ campaign-smoke:  ## fault-injection campaign, sharded CI sub-grid
 # through the compiled lowering: FTPolicy.interpret=False end to end.
 campaign-compiled-smoke:  ## compiled-backend campaign gate
 	$(PY) -m repro.campaign.run --smoke --quiet --backends compiled \
-	    --routines axpy,dot,gemv,gemm,trsm,ft_dense,ft_bmm,ft_dense_grad \
+	    --routines axpy,dot,gemv,gemm,trsm,ft_dense,ft_bmm,ft_dense_grad,attn,attn_grad,attn_decode \
 	    --out $(CAMPAIGN_OUT)_compiled
 
 campaign-full:   ## full grid: all policies (incl. novote/abft/dmr-fused)

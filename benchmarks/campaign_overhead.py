@@ -30,8 +30,16 @@ from the executor's compile-cache stats - the number that makes the
 sharded compiled smoke cheaper per cell than the interpret sweep.
 Emitted as a fourth ``BENCH JSON`` line.
 
+And an ATTENTION mode: causal flash attention unprotected vs the fused
+single-kernel ABFT path (both contractions checksummed inside ONE
+pallas_call) vs the per-chunk unfused scheme (each score/context chunk
+product through a separate verified GEMM) - the fusion's claim is that
+checksumming inside the resident-accumulator scan beats re-driving the
+layered two-call path.  Emitted as another ``BENCH JSON`` line.
+
 The raw timing harnesses (``time_gemm_epilogue`` / ``time_train_step`` /
-``time_verified_collectives``) are parametrized and reused by the
+``time_attention`` / ``time_verified_collectives``) are parametrized
+and reused by the
 regression-gated benchmark manifest (``benchmarks/manifest.py`` /
 ``benchmarks/gate.py``): the manifest enumerates the cells, these
 functions produce the per-policy times.
@@ -178,6 +186,58 @@ def bench_train_step() -> dict:
     }
 
 
+def time_attention(nb: int = 2, s: int = 128, dh: int = 32, *,
+                   interpret: bool = True, seed: int = 11) -> dict:
+    """Per-policy times (us) for causal flash attention: no FT (plain
+    online-softmax flash), fused single-kernel ABFT (``ft_attention``
+    under a fused hybrid policy - ONE pallas_call with both contractions
+    checksummed in-kernel), and the unfused per-chunk path (every score /
+    context chunk product through a separate verified GEMM, the two-call
+    ``ft_bmm``-style scheme the fusion replaces).  ``interpret`` selects
+    the kernel lowering (manifest backend axis)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.ft_attention import ft_attention
+    from repro.core.ft_config import FTPolicy
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (nb, s, dh), jnp.float32)
+    k = jax.random.normal(k2, (nb, s, dh), jnp.float32)
+    v = jax.random.normal(k3, (nb, s, dh), jnp.float32)
+
+    policies = {
+        "off": FTPolicy(mode="off", interpret=interpret),
+        "fused": FTPolicy(mode="hybrid", fused=True, interpret=interpret),
+        "unfused": FTPolicy(mode="hybrid", fused=False,
+                            interpret=interpret),
+    }
+    times = {}
+    for name, pol in policies.items():
+        fn = jax.jit(lambda q_, k_, v_, _p=pol: ft_attention(
+            q_, k_, v_, causal=True, policy=_p)[0])
+        times[name] = _bench_us(fn, q, k, v)
+    return times
+
+
+def bench_attention() -> dict:
+    """Fused single-kernel vs per-chunk unfused ABFT attention."""
+    nb, s, dh = 2, 128, 32
+    times = time_attention(nb, s, dh, interpret=False)
+    t_off = max(times["off"], 1e-9)
+    return {
+        "bench": "attention_abft_overhead",
+        "shape": [nb, s, dh],
+        "us_off": round(times["off"], 1),
+        "us_fused": round(times["fused"], 1),
+        "us_unfused": round(times["unfused"], 1),
+        "overhead_pct_fused": round(
+            100.0 * (times["fused"] - t_off) / t_off, 2),
+        "overhead_pct_unfused": round(
+            100.0 * (times["unfused"] - t_off) / t_off, 2),
+    }
+
+
 def time_verified_collectives(*, seed: int = 3) -> dict:
     """Per-policy times (us) for a gradient-tree all-reduce + ZeRO-style
     psum_scatter: ``bare`` (lax primitives) vs ``verified``
@@ -301,6 +361,13 @@ def main() -> None:
     print(f"campaign_train_step_fwd_bwd,{ts['us_fwd_bwd']},"
           f"overhead_pct={ts['overhead_pct_fwd_bwd']:.2f}")
     print("BENCH JSON " + json.dumps(ts))
+
+    at = bench_attention()
+    print(f"campaign_attention_fused,{at['us_fused']},"
+          f"overhead_pct={at['overhead_pct_fused']:.2f}")
+    print(f"campaign_attention_unfused,{at['us_unfused']},"
+          f"overhead_pct={at['overhead_pct_unfused']:.2f}")
+    print("BENCH JSON " + json.dumps(at))
 
     cv = bench_verified_collectives()
     print(f"campaign_collective_bare,{cv['us_bare']},overhead_pct=0.00")

@@ -20,7 +20,7 @@ key order, fixed float formatting - ``python -m benchmarks.manifest``
 re-emits it byte-identically from the same seed, which is what lets the
 gate detect grid drift by fingerprint.  Measurements (``--measure``)
 drive the existing timing harnesses in ``campaign_overhead.py``
-(``time_gemm_epilogue`` / ``time_train_step`` /
+(``time_gemm_epilogue`` / ``time_train_step`` / ``time_attention`` /
 ``time_verified_collectives``: compile warmup + best-of-5 discipline)
 and land in a separate ``results`` section keyed by cell id.
 
@@ -59,7 +59,7 @@ BASELINE_PATH = os.path.join(REPO_ROOT, "BENCH_smoke.json")
 # against this cell's time from the SAME fresh run - absolute us are not
 # portable across hosts, relative overhead of the same arithmetic is.
 BASE_POLICY = {"gemm_epilogue": "off", "train_step": "off",
-               "collective": "bare"}
+               "attn": "off", "collective": "bare"}
 
 # Harness-internal key for each manifest policy name.
 POLICY_KEYS = {
@@ -67,6 +67,8 @@ POLICY_KEYS = {
                       "hybrid-sepilogue": "separate_epilogue"},
     "train_step": {"off": "off", "abft-fwd": "fwd_only",
                    "abft-fwd-bwd": "fwd_bwd"},
+    "attn": {"off": "off", "hybrid-fused": "fused",
+             "hybrid-unfused": "unfused"},
     "collective": {"bare": "bare", "verified": "verified"},
 }
 
@@ -116,6 +118,13 @@ _SMOKE_BUDGETS = {
     ("gemm_epilogue", "hybrid-sepilogue", "compiled"): 1000.0,
     ("train_step", "abft-fwd", "xla"): 400.0,
     ("train_step", "abft-fwd-bwd", "xla"): 1100.0,
+    # fused attention carries the TIGHTER compiled budget: checksumming
+    # inside the single-kernel scan must stay cheaper than re-driving the
+    # per-chunk two-call path (observed ~250% vs ~290% on a quiet host).
+    ("attn", "hybrid-fused", "compiled"): 800.0,
+    ("attn", "hybrid-unfused", "compiled"): 1000.0,
+    ("attn", "hybrid-fused", "interpret"): 1800.0,
+    ("attn", "hybrid-unfused", "interpret"): 900.0,
     ("collective", "verified", "xla"): 450.0,
 }
 
@@ -148,6 +157,17 @@ def build_cells(grid: str = "smoke") -> List[BenchCell]:
             "train_step", "ft_dense", (64, 256, 256), "f32", policy, "xla",
             _budget("train_step", policy, "xla")))
 
+    def attn_group(shape: Tuple[int, int, int], dtype: str, backend: str):
+        for policy in ("off", "hybrid-fused", "hybrid-unfused"):
+            cells.append(BenchCell(
+                "attn", "flash_attention", shape, dtype, policy, backend,
+                _budget("attn", policy, backend)))
+
+    attn_group((2, 128, 32), "f32", "interpret")
+    attn_group((2, 128, 32), "f32", "compiled")
+    if grid == "full":
+        attn_group((4, 256, 64), "f32", "compiled")
+
     for policy in ("bare", "verified"):
         cells.append(BenchCell(
             "collective", "psum_tree", (69632,), "f32", policy, "xla",
@@ -169,9 +189,21 @@ def _roofline_context(cell: BenchCell) -> dict:
               # the separate epilogue re-touches the O(MN) product like
               # the unfused scheme's checksum passes
               "hybrid-sepilogue": "unfused",
-              "abft-fwd": "unfused", "abft-fwd-bwd": "unfused"}
+              "abft-fwd": "unfused", "abft-fwd-bwd": "unfused",
+              "hybrid-unfused": "unfused"}
 
-    if cell.bench == "gemm_epilogue":
+    if cell.bench == "attn":
+        # two contractions per batch*heads slice: scores (s, dh, s) and
+        # context (s, s, dh); the fused kernel's checksum terms ride the
+        # same matmul_costs ft models as the GEMM family.
+        nb, s, dh = cell.shape
+        ft = ft_map[cell.policy]
+        costs = {"flops": 0.0, "hbm_bytes": 0.0}
+        for (m, k_, n_) in ((s, dh, s), (s, s, dh)):
+            c = matmul_costs(m, k_, n_, ft=ft)
+            costs["flops"] += nb * c["flops"]
+            costs["hbm_bytes"] += nb * c["hbm_bytes"]
+    elif cell.bench == "gemm_epilogue":
         n_, _, k_ = cell.shape
         costs = matmul_costs(n_, k_, cell.shape[2],
                              ft=ft_map[cell.policy])
@@ -242,6 +274,10 @@ def _group_times(bench: str, shape: Tuple[int, ...], dtype: str,
                                     dtype=dt, seed=seed)
     elif bench == "train_step":
         raw = co.time_train_step(*shape, seed=seed + 7)
+    elif bench == "attn":
+        raw = co.time_attention(*shape,
+                                interpret=(backend == "interpret"),
+                                seed=seed + 11)
     elif bench == "collective":
         raw = co.time_verified_collectives(seed=seed + 3)
     else:

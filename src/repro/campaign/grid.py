@@ -56,10 +56,11 @@ from repro.core.dmr import dmr_compute, dmr_report
 from repro.core.ft_collectives import ft_psum, ft_psum_scatter
 from repro.core.ft_config import FTPolicy
 from repro.core.ft_dense import ft_bmm, ft_dense
+from repro.core.ft_attention import ft_attention, ft_decode_attention
 from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, COLLECTIVE_WIRE,
                                   COLLECTIVE_WIRE_STICKY, DMR_STREAM_1,
-                                  DMR_STREAM_2, SEAM_BWD_DA, SEAM_BWD_DB,
-                                  SEAM_COLLECTIVE, SEAM_FWD)
+                                  DMR_STREAM_2, SEAM_ATTN, SEAM_BWD_DA,
+                                  SEAM_BWD_DB, SEAM_COLLECTIVE, SEAM_FWD)
 
 DTYPES: Dict[str, jnp.dtype] = {"f32": jnp.float32, "bf16": jnp.bfloat16}
 
@@ -133,6 +134,9 @@ class StreamSpec:
     # flat dA / dB); protection additionally requires policy.protect_grads.
     # SEAM_COLLECTIVE = the error strikes a verified collective's wire
     # payload; protection requires policy.verify_collectives.
+    # SEAM_ATTN = the error strikes the attention score / context product
+    # (core.ft_attention, which protects whenever the policy checksums
+    # matmuls - the attn routines call it directly, so no extra flag).
     detect_only: bool = False      # detection without correction is the
     # BEST possible outcome for this stream (e.g. a sticky wire fault that
     # survives the retry) - the cell's expectation is "detected".
@@ -147,7 +151,8 @@ class StreamSpec:
             return False
         if self.kind == "collective":
             return policy.verify_collectives
-        if self.seam != SEAM_FWD and not policy.protect_grads:
+        if (self.seam in (SEAM_BWD_DA, SEAM_BWD_DB)
+                and not policy.protect_grads):
             return False
         if self.kind == "dmr":
             return policy.dmr_on
@@ -189,6 +194,12 @@ TRSM_M, TRSM_N = 48, 24   # 48 % 32 != 0 -> padded panel loop
 DENSE_B, DENSE_S, DENSE_K, DENSE_N = 2, 8, 40, 56
 BMM_B, BMM_M, BMM_K, BMM_N = 3, 16, 40, 24
 COLL_N = 96               # per-shard payload of the collective seams
+# attention: 2x2 chunk grid (qc = kc = 8) so faults can cross chunk
+# boundaries; ATTN_NB = batch*heads slices on the kernel's batch grid.
+ATTN_NB, ATTN_S, ATTN_DH = 4, 16, 8
+ATTN_QC = ATTN_KC = 8
+ATTN_DB, ATTN_DH_HEADS, ATTN_DS = 2, 2, 16   # decode: B, H, S_cache
+ATTN_DPOS = 11                               # decode position (4 masked)
 
 
 def _normal(key, shape, dtype):
@@ -531,6 +542,151 @@ def _routines() -> Dict[str, Routine]:
                        seam=SEAM_BWD_DB, label="abft-bwd-db")),
         base_scale=float(4 * np.sqrt(DENSE_N)),
         ref_scale=float(4 * np.sqrt(DENSE_N))))
+
+    # ---- attention seams (core.ft_attention; docs/abft-math.md Sec. 7) ----
+    # The attn routines call ft_attention / ft_decode_attention DIRECTLY
+    # (the models layer gates on policy.protect_attention; the core entry
+    # protects whenever the policy checksums matmuls), so the abft streams
+    # below are protected under every abft_on policy - fused exercises the
+    # in-kernel flash verify/correct, unfused the per-chunk layered path.
+    # Positions are PINNED inside the valid causal triangle: a fault on a
+    # fully-masked score position never reaches the output (the fused
+    # kernel skips dead chunk pairs outright), so the off-policy control
+    # would show no corruption.
+    def _attn_make(key, dt):
+        k1, k2, k3 = jax.random.split(key, 3)
+        shp = (ATTN_NB, ATTN_S, ATTN_DH)
+        return (_normal(k1, shp, dt), _normal(k2, shp, dt),
+                _normal(k3, shp, dt))
+
+    def _attn_run(ops, pol, inj):
+        y, rep = ft_attention(ops[0], ops[1], ops[2], causal=True,
+                              q_chunk=ATTN_QC, kv_chunk=ATTN_KC,
+                              policy=pol, injection=inj)
+        return y.astype(jnp.float32).ravel(), rep
+
+    def _attn_oracle_parts(ops):
+        q, k, v = (_f(o) for o in ops)
+        s = np.einsum("bqd,bkd->bqk", q, k) / np.sqrt(ATTN_DH)
+        s = np.where(np.tril(np.ones((ATTN_S, ATTN_S), bool)), s, -np.inf)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p = p / p.sum(-1, keepdims=True)
+        return q, k, v, p
+
+    def _attn_oracle(ops):
+        _, _, v, p = _attn_oracle_parts(ops)
+        return np.einsum("bqk,bkd->bqd", p, v).ravel()
+
+    # score fault crosses a chunk boundary: row 9 (q-chunk 1) x col 2
+    # (kv-chunk 0), slice 3 - the correction must survive the subsequent
+    # online-softmax rescale steps.  ctx fault: first-KV-chunk convention.
+    _ATTN_SCORE_PIN = 3 * ATTN_S * ATTN_S + 9 * ATTN_S + 2
+    _ATTN_CTX_PIN = 1 * ATTN_S * ATTN_DH + 3 * ATTN_DH + 4
+
+    add(Routine(
+        "attn", "model",
+        make=_attn_make,
+        run=_attn_run,
+        oracle=_attn_oracle,
+        streams=lambda ops: (
+            StreamSpec("abft", ABFT_ACC, ATTN_NB * ATTN_S * ATTN_S,
+                       pin_pos=_ATTN_SCORE_PIN, seam=SEAM_ATTN,
+                       label="abft-score"),
+            StreamSpec("abft", ABFT_ACC_2, ATTN_NB * ATTN_S * ATTN_DH,
+                       pin_pos=_ATTN_CTX_PIN, seam=SEAM_ATTN,
+                       label="abft-ctx")),
+        base_scale=4.0, ref_scale=1.0))
+
+    # differentiated attention: backward faults strike the cotangent GEMMs
+    # of the flash custom_vjp (SEAM_BWD_DA -> flat dQ, SEAM_BWD_DB -> flat
+    # dV); counters surface through the grad probe.  Pins stay below the
+    # unfused per-chunk dA/dB domains so one position is valid on both the
+    # fused and the layered backward paths.
+    gseed_attn = ((np.arange(ATTN_NB * ATTN_S * ATTN_DH, dtype=np.float32)
+                   % 5 - 2) / 2.0).reshape(ATTN_NB, ATTN_S, ATTN_DH)
+
+    def _attn_grad_run(ops, pol, inj):
+        q, k, v = ops
+
+        def loss(q_, k_, v_, probe):
+            y, rep = ft_attention(q_, k_, v_, causal=True,
+                                  q_chunk=ATTN_QC, kv_chunk=ATTN_KC,
+                                  policy=pol, injection=inj,
+                                  grad_probe=probe)
+            return jnp.sum(y.astype(jnp.float32)
+                           * jnp.asarray(gseed_attn)), rep
+
+        (_, rep_fwd), (dq, dk, dv, dprobe) = jax.value_and_grad(
+            loss, argnums=(0, 1, 2, 3), has_aux=True)(
+                q, k, v, abftmod.new_grad_probe())
+        rep = ftreport.merge(rep_fwd, abftmod.probe_report(dprobe))
+        return jnp.concatenate([dq.astype(jnp.float32).ravel(),
+                                dk.astype(jnp.float32).ravel(),
+                                dv.astype(jnp.float32).ravel()]), rep
+
+    def _attn_grad_oracle(ops):
+        q, k, v, p = _attn_oracle_parts(ops)
+        g = _np64(gseed_attn)
+        out = np.einsum("bqk,bkd->bqd", p, v)
+        dv = np.einsum("bqk,bqd->bkd", p, g)
+        dp = np.einsum("bqd,bkd->bqk", g, v)
+        ds = p * (dp - (g * out).sum(-1)[..., None]) / np.sqrt(ATTN_DH)
+        dq = np.einsum("bqk,bkd->bqd", ds, k)
+        dk = np.einsum("bqk,bqd->bkd", ds, q)
+        return np.concatenate([dq.ravel(), dk.ravel(), dv.ravel()])
+
+    add(Routine(
+        "attn_grad", "model",
+        make=_attn_make,
+        run=_attn_grad_run,
+        oracle=_attn_grad_oracle,
+        streams=lambda ops: (
+            StreamSpec("abft", ABFT_ACC, ATTN_NB * ATTN_S * ATTN_DH,
+                       pin_pos=7, seam=SEAM_BWD_DA, label="abft-bwd-dq"),
+            StreamSpec("abft", ABFT_ACC, ATTN_NB * ATTN_S * ATTN_DH,
+                       pin_pos=11, seam=SEAM_BWD_DB, label="abft-bwd-dv")),
+        base_scale=4.0, ref_scale=2.0))
+
+    # decode attention: one query token against a (B, S, H, dh) cache -
+    # the flash-decode kernel's score (B, H, S) / context (B, H, dh)
+    # domains.  The score pin sits on an unmasked cache slot (<= ATTN_DPOS).
+    def _attn_decode_make(key, dt):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return (_normal(k1, (ATTN_DB, ATTN_DH_HEADS, ATTN_DH), dt),
+                _normal(k2, (ATTN_DB, ATTN_DS, ATTN_DH_HEADS, ATTN_DH), dt),
+                _normal(k3, (ATTN_DB, ATTN_DS, ATTN_DH_HEADS, ATTN_DH), dt))
+
+    def _attn_decode_run(ops, pol, inj):
+        acc, m, l, rep = ft_decode_attention(
+            ops[0], ops[1], ops[2], scale=float(1.0 / np.sqrt(ATTN_DH)),
+            pos=ATTN_DPOS, base=0, policy=pol, injection=inj)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(jnp.float32).ravel(), rep
+
+    def _attn_decode_oracle(ops):
+        q, k, v = (_f(o) for o in ops)
+        s = np.einsum("bhd,bkhd->bhk", q, k) / np.sqrt(ATTN_DH)
+        s = np.where((np.arange(ATTN_DS) <= ATTN_DPOS)[None, None, :],
+                     s, -np.inf)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p = p / p.sum(-1, keepdims=True)
+        return np.einsum("bhk,bkhd->bhd", p, v).ravel()
+
+    add(Routine(
+        "attn_decode", "model",
+        make=_attn_decode_make,
+        run=_attn_decode_run,
+        oracle=_attn_decode_oracle,
+        streams=lambda ops: (
+            StreamSpec("abft", ABFT_ACC,
+                       ATTN_DB * ATTN_DH_HEADS * ATTN_DS,
+                       pin_pos=1 * ATTN_DH_HEADS * ATTN_DS + 1 * ATTN_DS + 5,
+                       seam=SEAM_ATTN, label="abft-score"),
+            StreamSpec("abft", ABFT_ACC_2,
+                       ATTN_DB * ATTN_DH_HEADS * ATTN_DH,
+                       pin_pos=1 * ATTN_DH + 3,
+                       seam=SEAM_ATTN, label="abft-ctx")),
+        base_scale=4.0, ref_scale=1.0))
 
     # ``dmr_grad`` gates the optimization_barrier JVP/transpose shim
     # (repro.compat): jax.grad THROUGH the DMR combinator must run - no

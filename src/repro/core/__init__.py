@@ -8,6 +8,8 @@ Public surface:
   Injection            - jit-compatible soft-error injection (injection)
   ft_psum / ft_pmean / ft_psum_scatter / ft_psum_scatter_tree
                        - checksum-verified collectives (ft_collectives)
+  ft_attention / ft_decode_attention
+                       - flash-attention verification interval (ft_attention)
   report               - FT telemetry counters
 """
 from repro.core.ft_config import (FTPolicy, OFF, HYBRID, HYBRID_UNFUSED,
@@ -20,6 +22,8 @@ from repro.core.abft import (ft_matmul, ft_matmul_batched, ft_matmul_diff,
                              ft_matmul_bwd_gemms, matmul_fused,
                              matmul_unfused, new_grad_probe, probe_report)
 from repro.core.dmr import dmr_compute, dmr_reduce_sum, DmrVerdict, dmr_report
+from repro.core.ft_attention import (ft_attention, ft_decode_attention,
+                                     _softmax_scale)
 from repro.core.ft_dense import ft_dense, ft_dense_fused_gate, ft_bmm
 from repro.core.ft_collectives import (ft_psum, ft_pmean, ft_psum_scatter,
                                        ft_psum_scatter_tree)

@@ -1,0 +1,349 @@
+"""ABFT-protected attention - the flash-attention verification interval.
+
+``ft_attention`` runs the two attention contractions (scores ``S = QK^T``
+and context ``O = softmax(S)V``) as ABFT verification intervals, with the
+same policy dispatch as ``ft_matmul``:
+
+  abft_on & fused   : ONE flash-attention pallas_call per prefill
+                      (kernels/flash_attn.py) - online-softmax scan with
+                      in-kernel checksum verify/correct on BOTH
+                      contractions.  The score tile is verified two-sided
+                      pre-softmax (the exp nonlinearity destroys linear
+                      correctability downstream); each context
+                      contribution is verified two-sided pre-merge; the
+                      rescaled running accumulator is covered by a
+                      covariant ROW reference whose final check is
+                      detect-only (docs/abft-math.md Sec. 7).
+  abft_on & unfused : the paper-style "third-party" layering - each
+                      (q-chunk, kv-chunk) step runs its two products
+                      through ``ft_matmul_diff``, two verification
+                      intervals per step, softmax merge in plain XLA.
+  otherwise         : the bare fused online-softmax path (pure jnp, same
+                      dataflow and injection addressing, no verification)
+                      - the campaign's control behaviour.
+
+Differentiability mirrors ``ft_matmul_diff``: a ``custom_vjp`` whose
+backward rule recomputes the score matrix from residuals and routes all
+cotangent GEMMs (dV = P_n^T g, dP = g V^T, dQ = dS K, dK = dS^T Q) through
+``ft_matmul_batched`` under the same policy (gated by ``protect_grads``),
+with backward counters escaping through the grad-probe cotangent.
+
+Injection addressing (``SEAM_ATTN``): ABFT_ACC slots index the flat
+logical (nb, Sq, Skv) raw score tensor; ABFT_ACC_2 slots the flat
+(nb, Sq, dh) context accumulator (first-KV-chunk contribution, the fused
+kernel's convention).  Backward slots keep the dense-GEMM convention:
+SEAM_BWD_DA addresses flat dQ, SEAM_BWD_DB flat dV (dK and the
+recompute/dP products run uninjected so the two backward address spaces
+stay disjoint).  ``ft_decode_attention`` covers the single-token decode
+products, returning the UNNORMALIZED accumulator plus (m, l) so the
+sequence-shard flash combine stays with the caller.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import report as ftreport
+from repro.core.abft import (_mT, _probe_cotangent, ft_matmul_batched,
+                             ft_matmul_diff, new_grad_probe)
+from repro.core.ft_config import FTPolicy, default_policy
+from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, SEAM_ATTN,
+                                  SEAM_BWD_DA, SEAM_BWD_DB, SEAM_FWD,
+                                  Injection)
+
+NEG_INF = -1e30
+
+
+def _softmax_scale(dh) -> jax.Array:
+    """The canonical attention softmax scale: ``1/sqrt(head_dim)`` as an
+    f32 multiply.  Prefill and decode (models/attention.py) both divide
+    scores through this ONE helper so the two paths stay bit-identical."""
+    return 1.0 / jnp.sqrt(jnp.float32(dh))
+
+
+def _counts_report(cnt: jax.Array) -> dict:
+    return ftreport.make_report(abft_detected=cnt[0], abft_corrected=cnt[1],
+                                abft_unrecoverable=cnt[2])
+
+
+# -- differentiable fused path -------------------------------------------------
+# cfg = (policy, causal, qc, kc): hashable statics.  scale rides as a
+# traced f32 scalar (the models layer computes it under jit), injection as
+# the float seam-row table, backward counters through the grad probe -
+# the exact ``_ft_mm_diff`` telemetry contract (core/abft.py).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_diff(cfg, q, k, v, scale_arr, inj_rows, grad_probe):
+    policy, causal, qc, kc = cfg
+    from repro.kernels import ops as kops  # lazy: kernels import core
+    inj = Injection.from_seam_rows(inj_rows).for_seam(SEAM_ATTN)
+    out, m, l, cnt = kops.flash_attention(
+        q, k, v, scale=scale_arr, causal=causal, q_chunk=qc, kv_chunk=kc,
+        injection=inj, protected=policy.abft_on,
+        tol_factor=policy.tol_factor,
+        max_corrections=policy.max_corrections, interpret=policy.interpret)
+    rep = _counts_report(cnt)
+    return (out, m, l), {f: c.astype(jnp.float32) for f, c in rep.items()}
+
+
+def _flash_diff_fwd(cfg, q, k, v, scale_arr, inj_rows, grad_probe):
+    out = _flash_diff(cfg, q, k, v, scale_arr, inj_rows, grad_probe)
+    (o, m, l), _ = out
+    return out, (q, k, v, o, m, l, scale_arr, inj_rows)
+
+
+def _flash_diff_bwd(cfg, res, ct):
+    policy, causal, _, _ = cfg
+    q, k, v, out, m, l, scale_arr, inj_rows = res
+    g = ct[0][0].astype(jnp.float32)  # ct[0] = (out, m, l) cotangents
+    inj = Injection.from_seam_rows(inj_rows)
+    bwd_policy = (policy if policy.protect_grads
+                  else policy.replace(mode="off"))
+    none = Injection.none()
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = scale_arr.astype(jnp.float32)
+
+    # Recompute the probabilities from the (m, l) residuals: one verified
+    # GEMM, then the masked exp in plain XLA (memory-bound epilogue).
+    s_raw, rep_s = ft_matmul_batched(qf, _mT(kf), policy=bwd_policy,
+                                     injection=none,
+                                     out_dtype=jnp.float32)
+    sq, skv = s_raw.shape[-2], s_raw.shape[-1]
+    if causal:
+        qpos = lax.broadcasted_iota(jnp.int32, (sq, skv), 0)
+        kpos = lax.broadcasted_iota(jnp.int32, (sq, skv), 1)
+        valid = qpos >= kpos
+    else:
+        valid = jnp.ones((sq, skv), jnp.bool_)
+    sm = jnp.where(valid, s_raw * scale, NEG_INF)
+    p = jnp.where(valid, jnp.exp(sm - m[..., None]), 0.0)
+    pn = p / jnp.maximum(l, 1e-30)[..., None]
+
+    dV, rep_dv = ft_matmul_batched(_mT(pn), g, policy=bwd_policy,
+                                   injection=inj.for_seam(SEAM_BWD_DB),
+                                   out_dtype=jnp.float32)
+    dP, rep_dp = ft_matmul_batched(g, _mT(vf), policy=bwd_policy,
+                                   injection=none, out_dtype=jnp.float32)
+    D = (g * out).sum(-1)
+    ds = pn * (dP - D[..., None]) * scale
+    dQ, rep_dq = ft_matmul_batched(ds, kf, policy=bwd_policy,
+                                   injection=inj.for_seam(SEAM_BWD_DA),
+                                   out_dtype=jnp.float32)
+    dK, rep_dk = ft_matmul_batched(_mT(ds), qf, policy=bwd_policy,
+                                   injection=none, out_dtype=jnp.float32)
+    rep = ftreport.merge(rep_s, rep_dv, rep_dp, rep_dq, rep_dk)
+    return (dQ.astype(q.dtype), dK.astype(k.dtype), dV.astype(v.dtype),
+            jnp.zeros_like(scale_arr), jnp.zeros_like(inj_rows),
+            _probe_cotangent(rep))
+
+
+_flash_diff.defvjp(_flash_diff_fwd, _flash_diff_bwd)
+
+
+# -- unfused (third-party layered) path ---------------------------------------
+def _chunk_injection(inj: Injection, *, stream: int, rows_total: int,
+                     cols_total: int, row0: int, col0: int, mc: int,
+                     nc: int, gate: bool) -> Injection:
+    """Project SEAM_ATTN slots onto one chunk product's address space.
+
+    A slot whose global (batch, row, col) - decoded from the flat logical
+    (nb, rows_total, cols_total) domain - falls inside this chunk is
+    re-armed as a forward-seam slot with the chunk-local flat position
+    (``ft_matmul_diff`` applies it inside its verification interval);
+    slots outside stay disarmed.  SEAM_BWD_* slots pass through
+    untranslated (``ft_matmul_diff`` projects seams internally), so one
+    mixed spec drives the whole unfused chunk loop.  ``gate``: python
+    bool disarming the attn slots (the ABFT_ACC_2 first-KV-chunk
+    convention)."""
+    sz = max(rows_total * cols_total, 1)
+    pb = inj.pos // sz
+    rem = inj.pos % sz
+    r = rem // max(cols_total, 1)
+    c = rem % max(cols_total, 1)
+    inside = ((r >= row0) & (r < row0 + mc) & (c >= col0) & (c < col0 + nc))
+    attn = (inj.active & (inj.seam == SEAM_ATTN) & (inj.stream == stream)
+            & inside & bool(gate))
+    bwd = inj.active & ((inj.seam == SEAM_BWD_DA)
+                        | (inj.seam == SEAM_BWD_DB))
+    local = pb * (mc * nc) + (r - row0) * nc + (c - col0)
+    pos = jnp.where(attn, jnp.clip(local, 0, None), inj.pos)
+    seam = jnp.where(attn, SEAM_FWD, inj.seam)
+    return Injection(attn | bwd, inj.stream, pos, inj.delta, seam)
+
+
+def _unfused_attention(q, k, v, *, causal, scale, qc, kc, policy,
+                       injection, grad_probe):
+    """Per-chunk two-interval attention: each (q-chunk, kv-chunk) step is
+    a score ``ft_matmul_diff`` + a context ``ft_matmul_diff``, online
+    softmax merged between them in plain XLA.  Python-unrolled (the
+    unfused policy is the test/bench A-B baseline, not the scale path)."""
+    nb, sq, dh = q.shape
+    skv = k.shape[1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    rep_total = ftreport.empty_report()
+    out_chunks = []
+    for row0 in range(0, sq, qc):
+        mc = min(qc, sq - row0)
+        qi = qf[:, row0:row0 + mc]
+        acc = jnp.zeros((nb, mc, dh), jnp.float32)
+        m = jnp.full((nb, mc), NEG_INF, jnp.float32)
+        lsum = jnp.zeros((nb, mc), jnp.float32)
+        for j, col0 in enumerate(range(0, skv, kc)):
+            nc = min(kc, skv - col0)
+            if causal and col0 > row0 + mc - 1:
+                continue  # fully-masked chunk pair: provably zero weight
+            kj = kf[:, col0:col0 + nc]
+            vj = vf[:, col0:col0 + nc]
+            inj_s = _chunk_injection(injection, stream=ABFT_ACC,
+                                     rows_total=sq, cols_total=skv,
+                                     row0=row0, col0=col0, mc=mc, nc=nc,
+                                     gate=True)
+            s, rep_s = ft_matmul_diff(qi, _mT(kj), policy=policy,
+                                      injection=inj_s,
+                                      grad_probe=grad_probe,
+                                      out_dtype=jnp.float32)
+            if causal:
+                qpos = row0 + lax.broadcasted_iota(jnp.int32, (mc, nc), 0)
+                kpos = col0 + lax.broadcasted_iota(jnp.int32, (mc, nc), 1)
+                valid = qpos >= kpos
+            else:
+                valid = jnp.ones((mc, nc), jnp.bool_)
+            sm = jnp.where(valid, s * scale, NEG_INF)
+            m_cur = jnp.maximum(m, sm.max(-1))
+            p = jnp.where(valid, jnp.exp(sm - m_cur[..., None]), 0.0)
+            inj_c = _chunk_injection(injection, stream=ABFT_ACC_2,
+                                     rows_total=sq, cols_total=dh,
+                                     row0=row0, col0=0, mc=mc, nc=dh,
+                                     gate=(j == 0))
+            d, rep_c = ft_matmul_diff(p, vj, policy=policy,
+                                      injection=inj_c,
+                                      grad_probe=grad_probe,
+                                      out_dtype=jnp.float32)
+            c1 = jnp.exp(m - m_cur)
+            acc = acc * c1[..., None] + d
+            lsum = lsum * c1 + p.sum(-1)
+            m = m_cur
+            rep_total = ftreport.merge(rep_total, rep_s, rep_c)
+        out_chunks.append(acc / jnp.maximum(lsum, 1e-30)[..., None])
+    return jnp.concatenate(out_chunks, axis=1), rep_total
+
+
+# -- public entry points -------------------------------------------------------
+def ft_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool = True, scale=None,
+                 q_chunk: Optional[int] = None,
+                 kv_chunk: Optional[int] = None,
+                 policy: Optional[FTPolicy] = None,
+                 injection: Optional[Injection] = None,
+                 grad_probe: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, dict]:
+    """Policy-dispatched fault-tolerant attention.
+
+    q: (..., Sq, dh), k/v: (..., Skv, dh) with identical leading batch
+    dims (batch*heads; GQA repetition happens in the model layer).
+    Returns ``(out, FTReport)`` with ``out`` in q's dtype and shape.
+    Differentiable: under ``jax.grad`` the cotangent GEMMs run as
+    verification intervals (policy ``protect_grads``) and their counters
+    surface through ``grad_probe`` (see ``ft_matmul_diff``).
+    """
+    from repro.kernels.backend import attn_tile_config  # lazy import
+
+    policy = policy or default_policy()
+    inj = injection if injection is not None else Injection.none()
+    probe = grad_probe if grad_probe is not None else new_grad_probe()
+    lead = q.shape[:-2]
+    sq, dh = q.shape[-2:]
+    skv = k.shape[-2]
+    nb = int(math.prod(lead)) if lead else 1
+    q3 = q.reshape(nb, sq, dh)
+    k3 = k.reshape(nb, skv, dh)
+    v3 = v.reshape(nb, skv, dh)
+    sc = (_softmax_scale(dh) if scale is None
+          else jnp.asarray(scale, jnp.float32))
+    if q_chunk is None or kv_chunk is None:
+        tq, tk = attn_tile_config(nb, sq, skv, dh, q.dtype, policy.interpret)
+        q_chunk = q_chunk or tq
+        kv_chunk = kv_chunk or tk
+    qc = int(min(q_chunk, sq + (-sq) % 8))
+    kc = int(min(kv_chunk, skv + (-skv) % 8))
+
+    if policy.abft_on and not policy.fused:
+        out, rep = _unfused_attention(
+            q3, k3, v3, causal=causal, scale=sc, qc=qc, kc=kc,
+            policy=policy, injection=inj, grad_probe=probe)
+    else:
+        cfg = (policy, bool(causal), qc, kc)
+        (out, _, _), rep_f = _flash_diff(cfg, q3, k3, v3, sc,
+                                         inj.as_seam_rows(), probe)
+        rep = {f: lax.stop_gradient(c).astype(jnp.int32)
+               for f, c in rep_f.items()}
+    return out.astype(q.dtype).reshape(*lead, sq, dh), rep
+
+
+def _decode_seam_injection(inj: Injection, *, stream: int) -> Injection:
+    """SEAM_ATTN decode slots land verbatim: the unfused decode products
+    are (B, H, 1, S) / (B, H, 1, dh) GEMMs whose flat outputs coincide
+    with the fused kernel's logical (B, H, S) / (B, H, dh) domains."""
+    active = inj.active & (inj.seam == SEAM_ATTN) & (inj.stream == stream)
+    return Injection(active, inj.stream, inj.pos, inj.delta,
+                     jnp.zeros_like(inj.seam))
+
+
+def _unfused_decode(q, k, v, *, scale, pos, base, policy, injection):
+    """Two M=1 verification intervals per decode step (scores + context),
+    generalized GQA layout: q (B, H, dh), cache (B, S, H, dh)."""
+    B, H, dh = q.shape
+    S = k.shape[1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s4, rep_s = ft_matmul_batched(
+        qf[:, :, None, :], jnp.transpose(kf, (0, 2, 3, 1)), policy=policy,
+        injection=_decode_seam_injection(injection, stream=ABFT_ACC),
+        out_dtype=jnp.float32)
+    s = s4[:, :, 0]  # (B, H, S)
+    valid = ((jnp.asarray(base, jnp.int32) + jnp.arange(S, dtype=jnp.int32))
+             <= jnp.asarray(pos, jnp.int32))[None, None, :]
+    sm = jnp.where(valid, s * jnp.asarray(scale, jnp.float32), NEG_INF)
+    m = sm.max(-1)
+    e = jnp.where(valid, jnp.exp(sm - m[..., None]), 0.0)
+    l = e.sum(-1)
+    a4, rep_c = ft_matmul_batched(
+        e[:, :, None, :], jnp.transpose(vf, (0, 2, 1, 3)), policy=policy,
+        injection=_decode_seam_injection(injection, stream=ABFT_ACC_2),
+        out_dtype=jnp.float32)
+    return a4[:, :, 0], m, l, ftreport.merge(rep_s, rep_c)
+
+
+def ft_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale, pos, base=0,
+                        policy: Optional[FTPolicy] = None,
+                        injection: Optional[Injection] = None):
+    """Fault-tolerant single-token decode attention.
+
+    q: (B, H, dh) query for the current token, k/v: (B, S_loc, H, dh)
+    dequantized cache shard; ``pos``/``base`` traced scalars.  Returns
+    ``(acc, m, l, FTReport)`` with ``acc`` UNNORMALIZED f32 - the caller
+    owns the cross-shard flash combine and the final ``acc / l``.
+    """
+    from repro.kernels import ops as kops  # lazy: kernels import core
+
+    policy = policy or default_policy()
+    inj = injection if injection is not None else Injection.none()
+    if policy.abft_on and not policy.fused:
+        return _unfused_decode(q, k, v, scale=scale, pos=pos, base=base,
+                               policy=policy, injection=inj)
+    acc, m, l, cnt = kops.flash_decode(
+        q, k, v, scale=scale, pos=pos, base=base,
+        injection=inj.for_seam(SEAM_ATTN), protected=policy.abft_on,
+        tol_factor=policy.tol_factor,
+        max_corrections=policy.max_corrections, interpret=policy.interpret)
+    return acc, m, l, _counts_report(cnt)

@@ -52,6 +52,14 @@ class FTPolicy:
         the cotangent GEMMs of ``ft_matmul_diff``'s custom_vjp run as
         full ABFT verification intervals (False = paper-style
         forward-only protection; gradients compute unverified).
+      protect_attention: run attention score/context products as ABFT
+        verification intervals (``core.ft_attention``): the fused path
+        is ONE flash-attention pallas_call per prefill with in-kernel
+        checksum verify/correct on both contractions; decode attention
+        (incl. the int8-dequant cache path) rides the flash-decode
+        variant.  Off by default - the paper's verification-interval
+        trade-off protects the projection GEMMs only (they carry most
+        FLOPs at trainable sequence lengths).
       verify_collectives: checksum-verify cross-chip reductions
         (beyond-paper extension, Sec. 3.3 of DESIGN.md).
       interpret: the kernel BACKEND axis.  True runs Pallas kernels in
@@ -74,6 +82,7 @@ class FTPolicy:
     dmr_vote: bool = True
     collect_stats: bool = True
     protect_grads: bool = True
+    protect_attention: bool = False
     verify_collectives: bool = False
     interpret: bool = True  # CPU container default; launch layer overrides
 

@@ -33,6 +33,16 @@ addresses (the gradient-seam address space; docs/architecture.md):
                     leaves; stream selects the retry-timeline behavior
                     (COLLECTIVE_WIRE = transient, first attempt only;
                     COLLECTIVE_WIRE_STICKY = persistent, every attempt).
+  4 : SEAM_ATTN   - the fused flash-attention interval
+                    (core/ft_attention.py, kernels/flash_attn.py): an
+                    ABFT_ACC slot lands on the raw score product
+                    (pos indexes the flat logical (B*H, S_q, S_kv)
+                    score tensor, pre-softmax), an ABFT_ACC_2 slot on
+                    the context accumulator's first KV-chunk
+                    contribution (pos indexes flat (B*H, S_q, dh)).
+                    Attention code projects with ``for_seam`` so the
+                    projection matmuls (SEAM_FWD) and the attention
+                    interval have disjoint address spaces.
 
 Ops that are not differentiated simply never evaluate the bwd seams; FT
 entry points filter with ``for_seam`` so a mixed spec can drive a whole
@@ -58,6 +68,7 @@ SEAM_FWD = 0
 SEAM_BWD_DA = 1
 SEAM_BWD_DB = 2
 SEAM_COLLECTIVE = 3
+SEAM_ATTN = 4
 
 # Collective-seam streams: WHERE ON THE RETRY TIMELINE a wire fault lands.
 # Transient faults corrupt the first reduction only (a retried all-reduce

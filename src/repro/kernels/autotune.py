@@ -47,6 +47,19 @@ CANDIDATE_TILES: Tuple[Tuple[int, int, int], ...] = (
     (256, 128, 128),
 )
 
+DEFAULT_ATTN_TILES: Tuple[int, int] = (128, 128)
+
+# Flash-attention (q_chunk, kv_chunk) candidates.  kv_chunk keeps the
+# 128-lane alignment of the score tile's minor dim; q_chunk may drop to
+# sublane granularity (small-Sq decode-adjacent shapes).
+CANDIDATE_ATTN_TILES: Tuple[Tuple[int, int], ...] = (
+    (128, 128),
+    (64, 128),
+    (128, 256),
+    (256, 128),
+    (32, 128),
+)
+
 _SCHEMA = "ftblas-tiles-v1"
 _memo: Dict[str, dict] = {}
 _loaded_path: Optional[str] = None
@@ -76,6 +89,18 @@ def cache_key(nb: int, m: int, n: int, k: int, dtype, backend: str) -> str:
     name = str(np.dtype(dtype))   # "float32" for np/jnp types AND strings
     return (f"{backend}|{name}|nb{_bucket(nb)}"
             f"|m{_bucket(m)}|n{_bucket(n)}|k{_bucket(k)}")
+
+
+def attn_cache_key(nb: int, sq: int, skv: int, dh: int, dtype,
+                   backend: str) -> str:
+    """Flash-attention tile-cache key: the ``attn|`` prefix keeps the
+    (q_chunk, kv_chunk) family disjoint from the GEMM (bm, bn, bk) entries
+    in the same file; buckets are q_chunk x kv_chunk x head_dim shaped
+    (sq/skv drive the chunk grid, dh the resident accumulator width)."""
+    import numpy as np
+    name = str(np.dtype(dtype))
+    return (f"attn|{backend}|{name}|nb{_bucket(nb)}"
+            f"|sq{_bucket(sq)}|skv{_bucket(skv)}|dh{_bucket(dh)}")
 
 
 def _load() -> Dict[str, dict]:
@@ -125,6 +150,81 @@ def tile_for(nb: int, m: int, n: int, k: int, dtype,
             and len(entry["tiles"]) == 3:
         return tuple(int(t) for t in entry["tiles"])
     return DEFAULT_TILES
+
+
+def attn_tile_for(nb: int, sq: int, skv: int, dh: int, dtype,
+                  backend: str) -> Tuple[int, int]:
+    """Tuned (q_chunk, kv_chunk) for the fused flash-attention kernel, or
+    ``DEFAULT_ATTN_TILES``.  Lookup only - never searches."""
+    entry = _load().get(attn_cache_key(nb, sq, skv, dh, dtype, backend))
+    if entry and isinstance(entry.get("tiles"), list) \
+            and len(entry["tiles"]) == 2:
+        return tuple(int(t) for t in entry["tiles"])
+    return DEFAULT_ATTN_TILES
+
+
+def _default_attn_timer(nb, sq, skv, dh, dtype, interpret, tiles, reps):
+    """Best-of-``reps`` wall time (us) of one protected flash_attention
+    call with explicit chunks, after a compile warmup."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (nb, sq, dh), jnp.dtype(dtype))
+    k = jax.random.normal(k2, (nb, skv, dh), jnp.dtype(dtype))
+    v = jax.random.normal(k3, (nb, skv, dh), jnp.dtype(dtype))
+    qc, kc = tiles
+    scale = 1.0 / float(dh) ** 0.5
+
+    call = jax.jit(lambda: ops.flash_attention(
+        q, k, v, scale=scale, q_chunk=qc, kv_chunk=kc,
+        interpret=interpret))
+
+    jax.block_until_ready(call())     # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        best = min(best, time.perf_counter() - t0)
+    return 1e6 * best
+
+
+def autotune_attn(nb: int, sq: int, skv: int, dh: int, dtype, *,
+                  interpret: bool = True,
+                  candidates: Optional[Sequence[Tuple[int, int]]] = None,
+                  reps: int = 3, timer=None) -> dict:
+    """Search the flash-attention chunk candidates for one
+    (backend, dtype, shape bucket), persist the winner, return the entry.
+    Same contract as ``autotune``; ``timer(nb, sq, skv, dh, dtype,
+    interpret, tiles, reps) -> us`` is injectable."""
+    from repro.kernels.backend import backend_name, use_xla_fallback
+
+    backend = backend_name(interpret)
+    timer = timer or _default_attn_timer
+    if candidates is None:
+        candidates = CANDIDATE_ATTN_TILES
+    if use_xla_fallback(interpret):
+        # The XLA lowering scans kv chunks but has no real tile axis worth
+        # searching: record the default, keep the cache honest.
+        candidates = (DEFAULT_ATTN_TILES,)
+    timings = {}
+    for tiles in candidates:
+        timings["x".join(map(str, tiles))] = round(
+            timer(nb, sq, skv, dh, dtype, interpret, tiles, reps), 2)
+    best = min(timings, key=timings.get)
+    entry = {
+        "tiles": [int(t) for t in best.split("x")],
+        "us": timings[best],
+        "timings_us": timings,
+        "reps": reps,
+    }
+    entries = dict(_load())
+    entries[attn_cache_key(nb, sq, skv, dh, dtype, backend)] = entry
+    _save(entries)
+    invalidate()
+    return entry
 
 
 def _default_timer(nb, m, n, k, dtype, interpret, tiles, reps):
@@ -199,6 +299,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--shapes", default="1x128x128x128",
                     help="comma list of nb x M x N x K")
+    ap.add_argument("--attn-shapes", default="",
+                    help="comma list of nb x Sq x Skv x dh flash-attention "
+                         "shapes to tune (q_chunk x kv_chunk search)")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--backend", default="interpret",
                     choices=["interpret", "compiled"])
@@ -211,6 +314,13 @@ def main(argv=None) -> int:
         entry = autotune(nb, m, n, k, args.dtype, interpret=interpret,
                          reps=args.reps)
         print(f"[tune] {args.backend} {args.dtype} {spec}: "
+              f"tiles={'x'.join(map(str, entry['tiles']))} "
+              f"{entry['us']:.1f}us  (candidates: {entry['timings_us']})")
+    for spec in filter(None, args.attn_shapes.split(",")):
+        nb, sq, skv, dh = (int(s) for s in spec.split("x"))
+        entry = autotune_attn(nb, sq, skv, dh, args.dtype,
+                              interpret=interpret, reps=args.reps)
+        print(f"[tune] attn {args.backend} {args.dtype} {spec}: "
               f"tiles={'x'.join(map(str, entry['tiles']))} "
               f"{entry['us']:.1f}us  (candidates: {entry['timings_us']})")
     print(f"[tune] cache: {cache_path()}")

@@ -73,3 +73,15 @@ def tile_config(nb: int, m: int, n: int, k: int, dtype,
     from repro.kernels import autotune
     return autotune.tile_for(nb, m, n, k, dtype,
                              backend_name(interpret))
+
+
+def attn_tile_config(nb: int, sq: int, skv: int, dh: int, dtype,
+                     interpret: bool):
+    """Autotuned (q_chunk, kv_chunk) for the fused flash-attention kernel,
+    falling back to the defaults when untuned.  Same pure-Python
+    trace-safety contract as ``tile_config``; keyed by
+    q_chunk x kv_chunk x head_dim buckets (``autotune.attn_cache_key``).
+    """
+    from repro.kernels import autotune
+    return autotune.attn_tile_for(nb, sq, skv, dh, dtype,
+                                  backend_name(interpret))

@@ -1,0 +1,589 @@
+"""Fused flash-attention with in-kernel ABFT (docs/abft-math.md Sec. 7).
+
+The attention interval  O = softmax(scale * Q K^T + mask) V  is the first
+protected primitive whose verification interval spans a NON-GEMM dataflow:
+the online-softmax scan rescales the context accumulator by a per-row
+factor c1 = exp(m_old - m_new) at every KV step, which breaks the plain
+GEMM checksum invariants.  The fusion story (paper Sec. 5.2; FT-GEMM
+arXiv:2305.02444; TurboFFT arXiv:2412.05824 for the beyond-GEMM co-design):
+
+  - the SCORE tile S_ij = Q_i K_j^T is verified and corrected two-sided
+    IN-KERNEL, BEFORE the softmax: exp() is nonlinear, so a score fault
+    that survives into exp(S) is no longer linearly locatable.  The
+    reference checksums reuse the GEMM algebra on the raw product
+    (rowsum_ref = Q (K^T e), colsum_ref = (e^T Q) K^T) from the SAME
+    VMEM-resident tiles the MXU consumes.
+  - the per-step CONTEXT contribution D_j = P_j V_j is verified and
+    corrected two-sided BEFORE it is merged into the accumulator.
+  - the rescale chain  acc <- c1 * acc + D_j  is covered by a COVARIANT
+    RUNNING ROW REFERENCE  rowref <- c1 * rowref + rowsum_ref(D_j):
+    the per-row factor multiplies a row's sum and its reference
+    identically, so the invariant survives every rescale.  Column
+    checksums cannot be maintained across per-row scaling (each column
+    mixes all rows' factors) - the final whole-scan row check is
+    therefore DETECT-ONLY (a mismatch there means the merge arithmetic
+    itself faulted after both tile corrections; counted unrecoverable).
+
+Counters (detected / corrected / unrecoverable) become kernel outputs -
+this is the first kernel that verifies INSIDE the pallas_call (the GEMM
+kernel emits checksum partials and verifies outside).  The verification
+epilogue is ``core.checksum.verify_and_correct_with_tol`` called in the
+kernel body; the XLA lowering (``flash_attention_xla``) runs the SAME
+``_flash_tile_step`` per (q-chunk, kv-chunk) tile, so kernel and fallback
+have identical math, injection addressing and counters by construction.
+
+Grid: (nb, Sq/qc, Skv/kc), KV innermost ("arbitrary"); the out / m / l /
+running-reference blocks ignore the KV index so the accumulator stays
+resident across the whole scan - ONE pallas_call covers every
+(q-chunk, kv-chunk) step.  Causal masks are applied in-kernel and fully
+masked chunk pairs are SKIPPED (``pl.when`` on the block triangle), not
+computed-then-masked.
+
+Injection (SEAM_ATTN address space; core/injection.py): ABFT_ACC lands on
+the raw score product (flat (nb, Sq, Skv), pre-softmax, pre-verify);
+ABFT_ACC_2 on the first KV-chunk context contribution (flat (nb, Sq, dh)).
+Positions arrive PADDED-geometry remapped (kernels/ops.py), mirroring the
+GEMM kernel's contract.
+
+``flash_decode_*`` is the single-token variant: per-batch grid, the score
+check generalizes to the batched-by-head contraction s[h,c] = q[h,:] .
+k[c,h,:] (valid for any GQA group), verified PRE-MASK so faults on
+not-yet-valid cache positions are still caught.  The kernel returns the
+UNNORMALIZED accumulator plus (m, l) so the caller's sequence-shard
+flash combine (psum) stays outside the kernel.
+
+Portability: interpret mode and the XLA lowering are the tested surface
+in this container; the in-kernel verify uses median/sort + scatter, which
+Mosaic lowering has not been exercised against (compiled TPU/GPU runs
+should start from interpret parity).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core import checksum as cks
+from repro.core.checksum import ChecksumRefs
+from repro.core.injection import ABFT_ACC, ABFT_ACC_2, Injection
+
+N_SLOTS = Injection.N_SLOTS
+NEG_INF = -1e30
+_EPS32 = float(jnp.finfo(jnp.float32).eps)
+
+# Counter column layout of the (..., 8) kernel counter output (cols 3..7
+# reserved so the layout matches the report-field count headroom).
+CNT_DETECTED = 0
+CNT_CORRECTED = 1
+CNT_UNRECOVERABLE = 2
+
+
+def _inject_tile(x, inj_rows, *, stream, batch_idx, row0, col0,
+                 rows_total, cols_total, gate=None):
+    """Apply matching injection slots to one (r, c) tile of a batched
+    (nb, rows_total, cols_total) logical tensor.
+
+    ``inj_rows`` is the kernels' (N_SLOTS, 4) [active, stream, pos, delta]
+    table; ``pos`` flat-indexes the logical tensor.  ``gate`` (traced bool)
+    adds an extra fire condition (e.g. first-KV-chunk convention for the
+    context stream)."""
+    r, c = x.shape
+    rows = lax.broadcasted_iota(jnp.int32, (r, c), 0) + row0
+    cols = lax.broadcasted_iota(jnp.int32, (r, c), 1) + col0
+    slice_sz = rows_total * cols_total
+    for s in range(N_SLOTS):
+        active = inj_rows[s, 0] > 0.5
+        st = inj_rows[s, 1].astype(jnp.int32)
+        pos = inj_rows[s, 2].astype(jnp.int32)
+        delta = inj_rows[s, 3].astype(x.dtype)
+        pb = pos // slice_sz
+        rem = pos - pb * slice_sz
+        hit = ((pb == batch_idx)
+               & (rows == rem // cols_total) & (cols == rem % cols_total))
+        fire = active & (st == stream)
+        if gate is not None:
+            fire = fire & gate
+        x = x + jnp.where(fire, delta,
+                          jnp.zeros((), x.dtype)) * hit.astype(x.dtype)
+    return x
+
+
+def _score_refs(q, k) -> ChecksumRefs:
+    """Checksum references for the raw score tile S = q @ k.T.
+
+    q: (qc, dh), k: (kc, dh).  Same algebra as the GEMM encoding with
+    B = k.T, accumulated from the already-resident tiles."""
+    ksum = jnp.sum(k, axis=0)                      # (dh,) = k.T @ e
+    qsum = jnp.sum(q, axis=0)                      # (dh,) = e^T q
+    ka, qa = jnp.abs(k), jnp.abs(q)
+    return ChecksumRefs(
+        rowsum_ref=q @ ksum,
+        colsum_ref=k @ qsum,
+        abs_rowsum_ref=qa @ jnp.sum(ka, axis=0),
+        abs_colsum_ref=ka @ jnp.sum(qa, axis=0),
+    )
+
+
+def _ctx_refs(p, v) -> ChecksumRefs:
+    """Checksum references for the context contribution D = p @ v.
+
+    p: (qc, kc) softmax weights (>= 0, so |p| = p), v: (kc, dh)."""
+    vsum = jnp.sum(v, axis=1)                      # (kc,) = v @ e
+    psum = jnp.sum(p, axis=0)                      # (kc,) = e^T p
+    va = jnp.abs(v)
+    return ChecksumRefs(
+        rowsum_ref=p @ vsum,
+        colsum_ref=psum @ v,
+        abs_rowsum_ref=p @ jnp.sum(va, axis=1),
+        abs_colsum_ref=psum @ va,
+    )
+
+
+def _verify_tile(x, refs, *, k_dim, tol_factor, max_corrections):
+    """Two-sided verify + locate + correct of one tile (in-kernel or XLA)."""
+    m_dim, n_dim = x.shape
+    row_tol, col_tol = cks.tolerances(refs, k_dim, n_dim, m_dim,
+                                      tol_factor, _EPS32)
+    return cks.verify_and_correct_with_tol(
+        x, jnp.sum(x, axis=1), jnp.sum(x, axis=0),
+        refs.rowsum_ref, refs.colsum_ref, row_tol, col_tol,
+        max_corrections=max_corrections, tol_factor=tol_factor)
+
+
+def _final_row_tol(rref, aref, *, skv, dh, tol_factor):
+    """Round-off bound for the whole-scan row check rowsum(acc) vs the
+    covariant running reference: ~Skv accumulated terms per row, dh
+    elements summed per row check."""
+    z = jnp.zeros((1,), rref.dtype)
+    row_tol, _ = cks.tolerances(
+        ChecksumRefs(rref, z, aref, z), skv, dh, rref.shape[0],
+        tol_factor, _EPS32)
+    return row_tol
+
+
+def _flash_tile_step(acc, m_prev, l_prev, rref, aref, q, k, v, inj_rows,
+                     scale, batch_idx, row0, col0, *, sqp, skvp, skv_log,
+                     causal, first, protected, tol_factor, max_corrections):
+    """One (q-chunk, kv-chunk) online-softmax + ABFT update.
+
+    Shared VERBATIM by the Pallas kernel body and the XLA lowering, so the
+    two backends have identical math / injection semantics / counters by
+    construction.  All inputs f32; ``first`` (traced bool) gates the
+    context-stream injection to the first KV chunk; ``protected=False`` is
+    the bare baseline (same dataflow + fault addressing, no verification -
+    the control path).
+
+    Returns (acc, m, l, rref, aref, detected, corrected, unrecoverable).
+    """
+    qc, dh = q.shape
+    kc = k.shape[0]
+    det = jnp.zeros((), jnp.int32)
+    corr = jnp.zeros((), jnp.int32)
+    unrec = jnp.zeros((), jnp.int32)
+
+    # ---- score contraction: inject, then verify+correct PRE-softmax ----
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = _inject_tile(s, inj_rows, stream=ABFT_ACC, batch_idx=batch_idx,
+                     row0=row0, col0=col0, rows_total=sqp, cols_total=skvp)
+    if protected:
+        vs = _verify_tile(s, _score_refs(q, k), k_dim=dh,
+                          tol_factor=tol_factor,
+                          max_corrections=max_corrections)
+        s = vs.C
+        det = det + vs.detected
+        corr = corr + vs.corrected
+        unrec = unrec + vs.unrecoverable.astype(jnp.int32)
+
+    # ---- scale + mask + online softmax ---------------------------------
+    qpos = lax.broadcasted_iota(jnp.int32, (qc, kc), 0) + row0
+    kpos = lax.broadcasted_iota(jnp.int32, (qc, kc), 1) + col0
+    valid = kpos < skv_log
+    if causal:
+        valid = valid & (qpos >= kpos)
+    sm = jnp.where(valid, s * scale, NEG_INF)
+    m_cur = jnp.maximum(m_prev, jnp.max(sm, axis=1))
+    p = jnp.where(valid, jnp.exp(sm - m_cur[:, None]), 0.0)
+    c1 = jnp.exp(m_prev - m_cur)
+
+    # ---- context contraction: inject, verify+correct PRE-merge ---------
+    d = jnp.dot(p, v, preferred_element_type=jnp.float32)
+    d = _inject_tile(d, inj_rows, stream=ABFT_ACC_2, batch_idx=batch_idx,
+                     row0=row0, col0=0, rows_total=sqp, cols_total=dh,
+                     gate=first)
+    if protected:
+        refs_d = _ctx_refs(p, v)
+        vd = _verify_tile(d, refs_d, k_dim=kc, tol_factor=tol_factor,
+                          max_corrections=max_corrections)
+        d = vd.C
+        det = det + vd.detected
+        corr = corr + vd.corrected
+        unrec = unrec + vd.unrecoverable.astype(jnp.int32)
+        # Covariant running row reference across the rescale.
+        rref = rref * c1 + refs_d.rowsum_ref
+        aref = aref * c1 + refs_d.abs_rowsum_ref
+
+    acc = acc * c1[:, None] + d
+    l_cur = l_prev * c1 + jnp.sum(p, axis=1)
+    return acc, m_cur, l_cur, rref, aref, det, corr, unrec
+
+
+# ---------------------------------------------------------------------------
+# Prefill kernel
+# ---------------------------------------------------------------------------
+
+def flash_attn_kernel(inj_ref, sc_ref, q_ref, k_ref, v_ref,
+                      o_ref, m_ref, l_ref, rref_ref, aref_ref, cnt_ref, *,
+                      sqp: int, skvp: int, skv_log: int, qc: int, kc: int,
+                      nk: int, causal: bool, tol_factor: float,
+                      max_corrections: int):
+    """One (b, i, j) grid step; out/m/l/rref/aref blocks ignore j (resident
+    accumulators), counters accumulate per (b, i) and are summed outside."""
+    b, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+        m_ref[0] = jnp.full_like(m_ref[0], NEG_INF)
+        l_ref[0] = jnp.zeros_like(l_ref[0])
+        rref_ref[0] = jnp.zeros_like(rref_ref[0])
+        aref_ref[0] = jnp.zeros_like(aref_ref[0])
+        cnt_ref[0, 0] = jnp.zeros_like(cnt_ref[0, 0])
+
+    def _step():
+        inj = inj_ref[...]
+        acc, m_cur, l_cur, rref, aref, det, corr, unrec = _flash_tile_step(
+            o_ref[0], m_ref[0], l_ref[0], rref_ref[0], aref_ref[0],
+            q_ref[0].astype(jnp.float32), k_ref[0].astype(jnp.float32),
+            v_ref[0].astype(jnp.float32), inj, sc_ref[0, 0],
+            b, i * qc, j * kc,
+            sqp=sqp, skvp=skvp, skv_log=skv_log, causal=causal,
+            first=(j == 0), protected=True,
+            tol_factor=tol_factor, max_corrections=max_corrections)
+        o_ref[0] = acc
+        m_ref[0] = m_cur
+        l_ref[0] = l_cur
+        rref_ref[0] = rref
+        aref_ref[0] = aref
+        upd = (jnp.zeros((8,), jnp.int32)
+               .at[CNT_DETECTED].set(det)
+               .at[CNT_CORRECTED].set(corr)
+               .at[CNT_UNRECOVERABLE].set(unrec))
+        cnt_ref[0, 0] = cnt_ref[0, 0] + upd
+
+    if causal:
+        # Causal chunk skip: a KV chunk strictly above the q-chunk's last
+        # row is fully masked - skip it instead of compute-then-mask.
+        pl.when(j * kc <= i * qc + qc - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        acc = o_ref[0]
+        resid = jnp.sum(acc, axis=1) - rref_ref[0]
+        ftol = _final_row_tol(rref_ref[0], aref_ref[0], skv=skvp,
+                              dh=acc.shape[1], tol_factor=tol_factor)
+        nbad = jnp.sum(jnp.abs(resid) > ftol).astype(jnp.int32)
+        upd = (jnp.zeros((8,), jnp.int32)
+               .at[CNT_DETECTED].set(nbad)
+               .at[CNT_UNRECOVERABLE].set(nbad))
+        cnt_ref[0, 0] = cnt_ref[0, 0] + upd
+        o_ref[0] = acc / jnp.maximum(l_ref[0], 1e-30)[:, None]
+
+
+def flash_attn_call(q, k, v, inj_rows, scale_arr, *, qc: int, kc: int,
+                    skv_log: int, causal: bool, tol_factor: float,
+                    max_corrections: int, interpret: bool = True):
+    """pallas_call wrapper on PADDED batched inputs.
+
+    q: (nb, Sqp, dh), k/v: (nb, Skvp, dh) with Sqp % qc == Skvp % kc == 0;
+    inj_rows: (N_SLOTS, 4) padded-geometry remapped; scale_arr: (1, 1) f32.
+    Returns (out, m, l, rref, aref, cnt) - out normalized, cnt (nb, nq, 8)
+    i32; see ops.flash_attention for the padded->logical epilogue.
+    """
+    nb, sqp, dh = q.shape
+    skvp = k.shape[1]
+    assert sqp % qc == 0 and skvp % kc == 0, (q.shape, k.shape, qc, kc)
+    nq, nk = sqp // qc, skvp // kc
+
+    kernel = functools.partial(
+        flash_attn_kernel, sqp=sqp, skvp=skvp, skv_log=skv_log, qc=qc,
+        kc=kc, nk=nk, causal=causal, tol_factor=tol_factor,
+        max_corrections=max_corrections)
+
+    out_shape = [
+        jax.ShapeDtypeStruct((nb, sqp, dh), jnp.float32),   # out
+        jax.ShapeDtypeStruct((nb, sqp), jnp.float32),       # running max
+        jax.ShapeDtypeStruct((nb, sqp), jnp.float32),       # running sum
+        jax.ShapeDtypeStruct((nb, sqp), jnp.float32),       # running rowref
+        jax.ShapeDtypeStruct((nb, sqp), jnp.float32),       # running |.|ref
+        jax.ShapeDtypeStruct((nb, nq, 8), jnp.int32),       # counters
+    ]
+    vec_spec = pl.BlockSpec((1, qc), lambda b, i, j: (b, i))
+    out_specs = [
+        pl.BlockSpec((1, qc, dh), lambda b, i, j: (b, i, 0)),
+        vec_spec, vec_spec, vec_spec, vec_spec,
+        pl.BlockSpec((1, 1, 8), lambda b, i, j: (b, i, 0)),
+    ]
+    in_specs = [
+        pl.BlockSpec((N_SLOTS, 4), lambda b, i, j: (0, 0)),   # injection
+        pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),         # scale
+        pl.BlockSpec((1, qc, dh), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, kc, dh), lambda b, i, j: (b, j, 0)),
+        pl.BlockSpec((1, kc, dh), lambda b, i, j: (b, j, 0)),
+    ]
+    call_kw = {}
+    if not interpret:
+        from jax.experimental.pallas import tpu as pltpu
+        call_kw["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nq, nk),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        **call_kw,
+    )(inj_rows, scale_arr, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Prefill XLA lowering (the "compiled" backend on platforms without a
+# Pallas compiler; also the protected=False bare/control path)
+# ---------------------------------------------------------------------------
+
+def flash_attention_xla(q, k, v, inj_rows, scale, *, qc: int, kc: int,
+                        skv_log: int, causal: bool, protected: bool,
+                        tol_factor: float, max_corrections: int):
+    """XLA-compiled jnp lowering: the SAME ``_flash_tile_step`` per tile as
+    the kernel (scan over KV chunks, vmap over (nb, q-chunks)), identical
+    injection addressing and counters.  Skipped causal chunk pairs have
+    their state/counter updates masked out, matching the kernel's
+    ``pl.when`` skip."""
+    nb, sqp, dh = q.shape
+    skvp = k.shape[1]
+    nq, nk = sqp // qc, skvp // kc
+    qt = q.astype(jnp.float32).reshape(nb, nq, qc, dh)
+    kt = jnp.moveaxis(k.astype(jnp.float32).reshape(nb, nk, kc, dh), 1, 0)
+    vt = jnp.moveaxis(v.astype(jnp.float32).reshape(nb, nk, kc, dh), 1, 0)
+    b_arr = jnp.arange(nb, dtype=jnp.int32)
+    row0_arr = jnp.arange(nq, dtype=jnp.int32) * qc
+
+    def tile(acc, m, l, rref, aref, qq, kk, vv, b_, r0, c0, first_):
+        return _flash_tile_step(
+            acc, m, l, rref, aref, qq, kk, vv, inj_rows, scale, b_, r0, c0,
+            sqp=sqp, skvp=skvp, skv_log=skv_log, causal=causal,
+            first=first_, protected=protected, tol_factor=tol_factor,
+            max_corrections=max_corrections)
+
+    # inner vmap over q-chunks (k/v chunk shared), outer over batch slices
+    tile_i = jax.vmap(tile, in_axes=(0, 0, 0, 0, 0, 0, None, None, None,
+                                     0, None, None))
+    tile_bi = jax.vmap(tile_i, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0,
+                                        None, None, None))
+
+    def body(carry, inp):
+        acc, m, l, rref, aref, cnt = carry
+        kk, vv, j = inp
+        c0 = j * kc
+        nacc, nm, nl, nrref, naref, det, corr, unrec = tile_bi(
+            acc, m, l, rref, aref, qt, kk, vv, b_arr, row0_arr, c0,
+            j == 0)
+        if causal:
+            live = c0 <= row0_arr + qc - 1            # (nq,)
+            lv = live[None, :]
+            nacc = jnp.where(lv[..., None, None], nacc, acc)
+            nm = jnp.where(lv[..., None], nm, m)
+            nl = jnp.where(lv[..., None], nl, l)
+            nrref = jnp.where(lv[..., None], nrref, rref)
+            naref = jnp.where(lv[..., None], naref, aref)
+            det = jnp.where(lv, det, 0)
+            corr = jnp.where(lv, corr, 0)
+            unrec = jnp.where(lv, unrec, 0)
+        cnt = (cnt.at[..., CNT_DETECTED].add(det)
+               .at[..., CNT_CORRECTED].add(corr)
+               .at[..., CNT_UNRECOVERABLE].add(unrec))
+        return (nacc, nm, nl, nrref, naref, cnt), None
+
+    init = (
+        jnp.zeros((nb, nq, qc, dh), jnp.float32),
+        jnp.full((nb, nq, qc), NEG_INF, jnp.float32),
+        jnp.zeros((nb, nq, qc), jnp.float32),
+        jnp.zeros((nb, nq, qc), jnp.float32),
+        jnp.zeros((nb, nq, qc), jnp.float32),
+        jnp.zeros((nb, nq, 8), jnp.int32),
+    )
+    (acc, m, l, rref, aref, cnt), _ = lax.scan(
+        body, init, (kt, vt, jnp.arange(nk, dtype=jnp.int32)))
+
+    if protected:
+        # Whole-scan covariant row check (detect-only; see module doc).
+        resid = jnp.sum(acc, axis=-1) - rref
+        ftol = _final_row_tol(rref, aref, skv=skvp, dh=dh,
+                              tol_factor=tol_factor)
+        nbad = jnp.sum(jnp.abs(resid) > ftol, axis=-1).astype(jnp.int32)
+        cnt = (cnt.at[..., CNT_DETECTED].add(nbad)
+               .at[..., CNT_UNRECOVERABLE].add(nbad))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return (out.reshape(nb, sqp, dh), m.reshape(nb, sqp),
+            l.reshape(nb, sqp), cnt)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single query token per batch slice)
+# ---------------------------------------------------------------------------
+
+def _decode_tile(q, k, v, inj_rows, scale, pos, base, batch_idx, *,
+                 protected, tol_factor, max_corrections):
+    """Protected decode attention for ONE batch slice.
+
+    q: (H, dh), k/v: (S, H, dh) f32 (already dequantized); ``pos`` is the
+    global decode position, ``base`` this shard's first cache slot.  The
+    score check generalizes the GEMM relations to the batched-by-head
+    contraction s[h, c] = sum_d q[h, d] k[c, h, d] (any GQA group);
+    verification runs PRE-MASK on the raw product.  Returns the
+    UNNORMALIZED (acc, m, l) for the caller's seq-shard flash combine,
+    plus counters."""
+    h_dim, dh = q.shape
+    s_loc = k.shape[0]
+    det = jnp.zeros((), jnp.int32)
+    corr = jnp.zeros((), jnp.int32)
+    unrec = jnp.zeros((), jnp.int32)
+
+    kt = jnp.moveaxis(k, 0, 1)                       # (H, S, dh)
+    s = jnp.einsum("hd,hcd->hc", q, kt)              # (H, S)
+    s = _inject_tile(s, inj_rows, stream=ABFT_ACC, batch_idx=batch_idx,
+                     row0=0, col0=0, rows_total=h_dim, cols_total=s_loc)
+    if protected:
+        qa, ka = jnp.abs(q), jnp.abs(k)
+        refs_s = ChecksumRefs(
+            rowsum_ref=jnp.einsum("hd,hd->h", q, jnp.sum(k, axis=0)),
+            colsum_ref=k.reshape(s_loc, h_dim * dh) @ q.reshape(-1),
+            abs_rowsum_ref=jnp.einsum("hd,hd->h", qa, jnp.sum(ka, axis=0)),
+            abs_colsum_ref=ka.reshape(s_loc, h_dim * dh) @ qa.reshape(-1))
+        vs = _verify_tile(s, refs_s, k_dim=dh, tol_factor=tol_factor,
+                          max_corrections=max_corrections)
+        s = vs.C
+        det = det + vs.detected
+        corr = corr + vs.corrected
+        unrec = unrec + vs.unrecoverable.astype(jnp.int32)
+
+    cidx = lax.broadcasted_iota(jnp.int32, (h_dim, s_loc), 1)
+    valid = (base + cidx) <= pos
+    sm = jnp.where(valid, s * scale, NEG_INF)
+    m = jnp.max(sm, axis=1)
+    e = jnp.where(valid, jnp.exp(sm - m[:, None]), 0.0)
+    l = jnp.sum(e, axis=1)
+
+    acc = jnp.einsum("hc,chd->hd", e, v)             # (H, dh)
+    acc = _inject_tile(acc, inj_rows, stream=ABFT_ACC_2,
+                       batch_idx=batch_idx, row0=0, col0=0,
+                       rows_total=h_dim, cols_total=dh)
+    if protected:
+        va = jnp.abs(v)
+        et_flat = jnp.moveaxis(e, 0, 1).reshape(-1)  # (S*H,) matches v rows
+        refs_d = ChecksumRefs(
+            rowsum_ref=jnp.einsum("hc,ch->h", e, jnp.sum(v, axis=-1)),
+            colsum_ref=et_flat @ v.reshape(s_loc * h_dim, dh),
+            abs_rowsum_ref=jnp.einsum("hc,ch->h", e, jnp.sum(va, axis=-1)),
+            abs_colsum_ref=et_flat @ va.reshape(s_loc * h_dim, dh))
+        vd = _verify_tile(acc, refs_d, k_dim=s_loc, tol_factor=tol_factor,
+                          max_corrections=max_corrections)
+        acc = vd.C
+        det = det + vd.detected
+        corr = corr + vd.corrected
+        unrec = unrec + vd.unrecoverable.astype(jnp.int32)
+    return acc, m, l, det, corr, unrec
+
+
+def flash_decode_kernel(inj_ref, meta_ref, q_ref, k_ref, v_ref,
+                        o_ref, m_ref, l_ref, cnt_ref, *, tol_factor: float,
+                        max_corrections: int):
+    b = pl.program_id(0)
+    inj = inj_ref[...]
+    scale = meta_ref[0, 0]
+    pos = meta_ref[0, 1].astype(jnp.int32)
+    base = meta_ref[0, 2].astype(jnp.int32)
+    acc, m, l, det, corr, unrec = _decode_tile(
+        q_ref[0].astype(jnp.float32), k_ref[0].astype(jnp.float32),
+        v_ref[0].astype(jnp.float32), inj, scale, pos, base, b,
+        protected=True, tol_factor=tol_factor,
+        max_corrections=max_corrections)
+    o_ref[0] = acc
+    m_ref[0] = m
+    l_ref[0] = l
+    cnt_ref[0] = (jnp.zeros((8,), jnp.int32)
+                  .at[CNT_DETECTED].set(det)
+                  .at[CNT_CORRECTED].set(corr)
+                  .at[CNT_UNRECOVERABLE].set(unrec))
+
+
+def flash_decode_call(q, k, v, inj_rows, meta, *, tol_factor: float,
+                      max_corrections: int, interpret: bool = True):
+    """pallas_call wrapper: q (B, H, dh), k/v (B, S, H, dh), meta (1, 4)
+    f32 [scale, pos, base, 0].  Returns (acc, m, l, cnt) - acc
+    UNNORMALIZED, cnt (B, 8) i32."""
+    b_dim, h_dim, dh = q.shape
+    s_loc = k.shape[1]
+    kernel = functools.partial(flash_decode_kernel, tol_factor=tol_factor,
+                               max_corrections=max_corrections)
+    out_shape = [
+        jax.ShapeDtypeStruct((b_dim, h_dim, dh), jnp.float32),
+        jax.ShapeDtypeStruct((b_dim, h_dim), jnp.float32),
+        jax.ShapeDtypeStruct((b_dim, h_dim), jnp.float32),
+        jax.ShapeDtypeStruct((b_dim, 8), jnp.int32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, h_dim, dh), lambda b: (b, 0, 0)),
+        pl.BlockSpec((1, h_dim), lambda b: (b, 0)),
+        pl.BlockSpec((1, h_dim), lambda b: (b, 0)),
+        pl.BlockSpec((1, 8), lambda b: (b, 0)),
+    ]
+    in_specs = [
+        pl.BlockSpec((N_SLOTS, 4), lambda b: (0, 0)),
+        pl.BlockSpec((1, 4), lambda b: (0, 0)),
+        pl.BlockSpec((1, h_dim, dh), lambda b: (b, 0, 0)),
+        pl.BlockSpec((1, s_loc, h_dim, dh), lambda b: (b, 0, 0, 0)),
+        pl.BlockSpec((1, s_loc, h_dim, dh), lambda b: (b, 0, 0, 0)),
+    ]
+    call_kw = {}
+    if not interpret:
+        from jax.experimental.pallas import tpu as pltpu
+        call_kw["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",))
+    return pl.pallas_call(
+        kernel,
+        grid=(b_dim,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        **call_kw,
+    )(inj_rows, meta, q, k, v)
+
+
+def flash_decode_xla(q, k, v, inj_rows, scale, pos, base, *, protected,
+                     tol_factor: float, max_corrections: int):
+    """XLA lowering of the decode kernel: vmapped ``_decode_tile`` -
+    kernel-identical semantics (see kernels/backend.py)."""
+    b_dim = q.shape[0]
+
+    def one(qq, kk, vv, b_):
+        return _decode_tile(qq.astype(jnp.float32), kk.astype(jnp.float32),
+                            vv.astype(jnp.float32), inj_rows, scale, pos,
+                            base, b_, protected=protected,
+                            tol_factor=tol_factor,
+                            max_corrections=max_corrections)
+
+    acc, m, l, det, corr, unrec = jax.vmap(one)(
+        q, k, v, jnp.arange(b_dim, dtype=jnp.int32))
+    cnt = (jnp.zeros((b_dim, 8), jnp.int32)
+           .at[:, CNT_DETECTED].set(det)
+           .at[:, CNT_CORRECTED].set(corr)
+           .at[:, CNT_UNRECOVERABLE].set(unrec))
+    return acc, m, l, cnt

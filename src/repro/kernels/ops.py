@@ -30,6 +30,7 @@ from repro.kernels import abft_gemm as _ag
 from repro.kernels import dmr_ew as _ew
 from repro.kernels import dmr_gemv as _gv
 from repro.kernels import dmr_reduce as _rd
+from repro.kernels import flash_attn as _fa
 from repro.kernels.backend import use_xla_fallback
 
 LANE = 128
@@ -385,3 +386,124 @@ def dmr_gemv(A: jax.Array, x: jax.Array, *,
         y, cnt = _gv.dmr_gemv_call(Ap, xp, _inj_rows(injection), bm=bm,
                                    bk=bk, vote=vote, interpret=interpret)
     return y[:M, 0].astype(A.dtype), _counts_report(cnt)
+
+
+# -- fused flash attention ----------------------------------------------------
+def _remap_attn_rows(rows: jax.Array, *, sq: int, skv: int, dh: int,
+                     sqp: int, skvp: int) -> jax.Array:
+    """Stream-aware padded remap for the attention injection table.
+
+    ABFT_ACC positions index the flat logical (nb, Sq, Skv) score tensor,
+    ABFT_ACC_2 the flat logical (nb, Sq, dh) context accumulator; the
+    kernel decodes on the PADDED (Sqp, Skvp) / (Sqp, dh) geometry.  The
+    ``max(x, 1)`` clamps mirror ``_remap_matrix_pos``."""
+    stream = rows[:, 1].astype(jnp.int32)
+    pos = rows[:, 2].astype(jnp.int32)
+    # score domain (nb, sq, skv) -> (nb, sqp, skvp)
+    sz_s = max(sq * skv, 1)
+    pb = pos // sz_s
+    rem = pos % sz_s
+    pos_score = (pb * (sqp * skvp) + (rem // max(skv, 1)) * skvp
+                 + rem % max(skv, 1))
+    # context domain (nb, sq, dh) -> (nb, sqp, dh)
+    sz_c = max(sq * dh, 1)
+    pbc = pos // sz_c
+    remc = pos % sz_c
+    pos_ctx = pbc * (sqp * dh) + remc
+    new_pos = jnp.where(stream == ABFT_ACC, pos_score,
+                        jnp.where(stream == ABFT_ACC_2, pos_ctx, pos))
+    return rows.at[:, 2].set(new_pos.astype(rows.dtype))
+
+
+def _attn_counts(cnt: jax.Array) -> jax.Array:
+    """(..., 8) kernel counters -> (3,) i32 [detected, corrected, unrec]."""
+    flat = cnt.reshape(-1, cnt.shape[-1])
+    return jnp.stack([flat[:, _fa.CNT_DETECTED].sum(),
+                      flat[:, _fa.CNT_CORRECTED].sum(),
+                      flat[:, _fa.CNT_UNRECOVERABLE].sum()]).astype(jnp.int32)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale, causal: bool = True,
+                    injection: Optional[Injection] = None,
+                    q_chunk: Optional[int] = None,
+                    kv_chunk: Optional[int] = None,
+                    protected: bool = True,
+                    tol_factor: float = 4.0, max_corrections: int = 4,
+                    interpret: bool = True):
+    """Fused ABFT flash attention over batched heads.
+
+    q: (nb, Sq, dh), k/v: (nb, Skv, dh) - nb = batch*heads, any float
+    dtype (computed in f32).  ONE pallas_call covers the whole
+    (q-chunk, kv-chunk) grid; ``protected=False`` is the bare
+    online-softmax baseline (same dataflow + injection addressing, no
+    verification - pure jnp on every backend).  Chunks default to the
+    autotuned ``backend.attn_tile_config`` buckets.
+
+    Returns (out (nb, Sq, dh) f32 normalized, m (nb, Sq), l (nb, Sq),
+    counts (3,) i32 [abft_detected, abft_corrected, abft_unrecoverable]).
+    """
+    from repro.kernels.backend import attn_tile_config
+
+    nb, sq, dh = q.shape
+    skv = k.shape[1]
+    if q_chunk is None or kv_chunk is None:
+        tq, tk = attn_tile_config(nb, sq, skv, dh, q.dtype, interpret)
+        q_chunk = q_chunk or tq
+        kv_chunk = kv_chunk or tk
+    qc = min(q_chunk, _ceil_to(sq, 8))
+    kc = min(kv_chunk, _ceil_to(skv, 8))
+    sqp, skvp = _ceil_to(sq, qc), _ceil_to(skv, kc)
+    rows = _remap_attn_rows(_inj_rows(injection), sq=sq, skv=skv, dh=dh,
+                            sqp=sqp, skvp=skvp)
+    qp = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, skvp - skv), (0, 0)))
+    vp = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, skvp - skv), (0, 0)))
+    sc = jnp.asarray(scale, jnp.float32)
+    if (not protected) or use_xla_fallback(interpret):
+        out, m, l, cnt = _fa.flash_attention_xla(
+            qp, kp, vp, rows, sc, qc=qc, kc=kc, skv_log=skv, causal=causal,
+            protected=protected, tol_factor=tol_factor,
+            max_corrections=max_corrections)
+    else:
+        out, m, l, _, _, cnt = _fa.flash_attn_call(
+            qp, kp, vp, rows, sc.reshape(1, 1), qc=qc, kc=kc, skv_log=skv,
+            causal=causal, tol_factor=tol_factor,
+            max_corrections=max_corrections, interpret=interpret)
+    return out[:, :sq], m[:, :sq], l[:, :sq], _attn_counts(cnt)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 scale, pos, base=0,
+                 injection: Optional[Injection] = None,
+                 protected: bool = True,
+                 tol_factor: float = 4.0, max_corrections: int = 4,
+                 interpret: bool = True):
+    """Fused ABFT flash-decode attention (one query token).
+
+    q: (B, H, dh), k/v: (B, S_loc, H, dh) already dequantized/cast;
+    ``pos``/``base`` traced i32 scalars (global decode position, this
+    shard's first cache slot).  Injection: ABFT_ACC flat (B, H, S_loc)
+    score positions, ABFT_ACC_2 flat (B, H, dh) accumulator positions.
+
+    Returns (acc (B, H, dh) UNNORMALIZED f32, m (B, H), l (B, H),
+    counts (3,) i32) - the seq-shard flash combine and the final
+    normalization stay with the caller.
+    """
+    rows = _inj_rows(injection)
+    sc = jnp.asarray(scale, jnp.float32)
+    posf = jnp.asarray(pos, jnp.float32).reshape(())
+    basef = jnp.asarray(base, jnp.float32).reshape(())
+    if (not protected) or use_xla_fallback(interpret):
+        acc, m, l, cnt = _fa.flash_decode_xla(
+            q, k, v, rows, sc, posf.astype(jnp.int32),
+            basef.astype(jnp.int32), protected=protected,
+            tol_factor=tol_factor, max_corrections=max_corrections)
+    else:
+        meta = jnp.stack([sc, posf, basef,
+                          jnp.zeros((), jnp.float32)]).reshape(1, 4)
+        acc, m, l, cnt = _fa.flash_decode_call(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), rows, meta, tol_factor=tol_factor,
+            max_corrections=max_corrections, interpret=interpret)
+    return acc, m, l, _attn_counts(cnt)

@@ -3,8 +3,12 @@
 A minimal production-shaped serving loop: prefill via repeated decode of
 the prompt (single-token steps against the cache - exactly the lowered
 ``serve_step``), then generation, with per-step FT counters.  Soft-error
-drills (--inject-every) corrupt one accumulator mid-decode; the ABFT/DMR
-layers detect+correct and the stream continues bit-identically.
+drills (--inject-every) corrupt one accumulator mid-decode, alternating
+between a dense-GEMM cell (SEAM_FWD) and a raw decode attention score
+(SEAM_ATTN - the flash-decode kernel's in-kernel checksums catch it);
+the ABFT/DMR layers detect+correct and the stream continues
+bit-identically.  Serving decodes with ``protect_attention`` on, so the
+score/context products are verified on every step, not just drills.
 
 Serving runs the FUSED production kernels (the paper's Sec. 5.2
 configuration); ``--backend`` selects the lowering exactly as in
@@ -30,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import ARCH_IDS, get_config
 from repro.core import ft_config
 from repro.core import report as ftreport
-from repro.core.injection import ABFT_ACC, Injection
+from repro.core.injection import ABFT_ACC, Injection, SEAM_ATTN
 from repro.launch.mesh import smoke_mesh
 from repro.launch.steps import make_ctx, make_serve_step
 from repro.models import build_model, param_specs
@@ -61,7 +65,8 @@ def main(argv=None) -> int:
     mesh = smoke_mesh()
     compiled = args.backend == "compiled"
     policy = ft_config.FTPolicy(mode=args.ft, fused=True,
-                                interpret=not compiled) \
+                                interpret=not compiled,
+                                protect_attention=True) \
         if args.ft != "off" else ft_config.OFF
     ctx = make_ctx(multi_pod=False, data_size=1, model_size=1, policy=policy)
 
@@ -108,8 +113,18 @@ def main(argv=None) -> int:
         step_args = (params, cache, tok, jnp.int32(pos))
         if drill:
             fire = (pos + 1) % args.inject_every == 0
-            inj = Injection.at(stream=ABFT_ACC, pos=int(pos) % 7,
-                               delta=1e3) if fire else Injection.none()
+            if not fire:
+                inj = Injection.none()
+            elif n_injected % 2 == 0:
+                # dense forward seam: one GEMM accumulator cell
+                inj = Injection.at(stream=ABFT_ACC, pos=int(pos) % 7,
+                                   delta=1e3)
+            else:
+                # attention seam: a raw decode score (flat (B, H, S)
+                # cache domain; column 0 is unmasked at every position,
+                # so the fault always lands on a live softmax lane)
+                inj = Injection.at(stream=ABFT_ACC, pos=0, delta=1e3,
+                                   seam=SEAM_ATTN)
             n_injected += int(fire)
             step_args = step_args + (inj,)
         nxt, cache, rep = step_fn(*step_args)

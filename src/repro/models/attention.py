@@ -13,11 +13,14 @@ form bounds activation memory to (q_chunk x kv_chunk) per head and is what
 the dry-run memory analysis certifies.
 
 FT: the four projections route through ft_dense (ABFT).  Score/context
-inner products are GEMM-shaped and protectable via policy
-``protect_attention`` (per-slice ABFT on the kernel's native batch grid
-under a fused policy); the default protects
-projections only - at trainable sequence lengths they carry most FLOPs, and
-each chunk epilogue adds O(S) overhead (paper's verification-interval
+inner products are GEMM-shaped and protected under policy
+``protect_attention`` via ``core.ft_attention``: fused policies lower the
+whole prefill to ONE flash-attention pallas_call with in-kernel checksum
+verify/correct on both contractions, unfused policies layer per-chunk
+``ft_matmul_diff`` intervals, and decode (incl. the int8-dequant cache
+path) rides the flash-decode variant.  The default protects projections
+only - at trainable sequence lengths they carry most FLOPs, and each
+chunk epilogue adds O(S) overhead (paper's verification-interval
 trade-off, Sec. 2.1).
 
 Decode: one-token step against a (B_loc, S_max, Hkv_loc, dh) cache; the
@@ -35,7 +38,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import report as ftreport
-from repro.core.ft_dense import ft_bmm, ft_dense
+from repro.core.ft_attention import (_softmax_scale, ft_attention,
+                                     ft_decode_attention)
+from repro.core.ft_dense import ft_dense
 from repro.models.common import (ShardCtx, apply_rope, dense_init, rms_norm,
                                  split_keys)
 
@@ -136,98 +141,90 @@ def _qk_normalize(q, k, p, ctx):
     return q, k, reps
 
 
-def _scores_ctx(q, k, v, mask, ctx, protect):
-    """One chunk pair: softmax(q k^T / sqrt(dh) + mask) v with running stats.
-
-    q: (B, qc, H, dh) k/v: (B, kc, H, dh) mask: (qc, kc) or None.
-    Returns unnormalized (acc, m, l) for online-softmax merging + reports.
-    """
-    dh = q.shape[-1]
-    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
-    rep = ftreport.empty_report()
-    if protect:
-        qb = jnp.moveaxis(q, 2, 1).astype(jnp.float32)      # (B,H,qc,dh)
-        kb = jnp.moveaxis(k, 2, 1).astype(jnp.float32)
-        # Batched contractions hit the kernel's native batch grid: one
-        # pallas_call per chunk pair, every (batch, head) slice its own
-        # verification interval.  The _diff wrapper keeps the score /
-        # context products differentiable (cotangent GEMMs are ABFT
-        # intervals too) so protect_attention composes with training;
-        # the step's injection / grad probe ride along like every other
-        # protected matmul (backward counters reach metrics["report"]).
-        s, rep1 = ft_bmm(qb, jnp.swapaxes(kb, -1, -2), ctx=ctx)
-        rep = ftreport.merge(rep, rep1)
-    else:
-        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
-                       k.astype(jnp.float32))
-    s = s * scale
-    if mask is not None:
-        s = s + mask[None, None, :, :]
-    m = jnp.max(s, axis=-1)                                  # (B,H,qc)
-    e = jnp.exp(s - m[..., None])
-    l = jnp.sum(e, axis=-1)                                  # (B,H,qc)
-    if protect:
-        vb = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
-        acc, rep2 = ft_bmm(e, vb, ctx=ctx)
-        rep = ftreport.merge(rep, rep2)
-    else:
-        acc = jnp.einsum("bhqk,bkhd->bhqd", e, v.astype(jnp.float32))
-    return acc, m, l, rep
-
-
 def chunked_attention(q, k, v, cfg: AttnCfg, ctx: ShardCtx, *,
                       protect: bool = False) -> Tuple[jax.Array, dict]:
     """Online-softmax attention over KV chunks.
 
     q: (B, S_q, H, dh); k, v: (B, S_kv, H, dh) (S_kv != S_q for cross-attn).
+
+    ``protect`` (or policy ``protect_attention``) routes the whole prefill
+    through ``core.ft_attention``: under a fused policy that is ONE
+    flash-attention pallas_call with in-kernel checksum verify/correct on
+    both contractions; unfused runs per-chunk ``ft_matmul_diff``
+    intervals.  Both stay differentiable and thread the ctx's
+    injection/grad-probe seam.  The unprotected scan below is the plain
+    XLA baseline; causal chunk pairs that are provably fully masked
+    (first key position past the last query position) are skipped
+    outright via ``lax.cond`` rather than masked-and-discarded.
     """
     B, S, H, dh = q.shape
     S_kv = k.shape[1]
     qc = min(cfg.q_chunk, S)
     kc = min(cfg.kv_chunk, S_kv)
     assert S % qc == 0 and S_kv % kc == 0
+    protect = protect or ctx.policy.protect_attention
+    if protect:
+        out, rep = ft_attention(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), causal=cfg.causal,
+            scale=_softmax_scale(dh), q_chunk=qc, kv_chunk=kc,
+            policy=ctx.policy, injection=ctx.injection,
+            grad_probe=ctx.grad_probe)
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype), rep
     nq, nk = S // qc, S_kv // kc
     qs = jnp.moveaxis(q.reshape(B, nq, qc, H, dh), 1, 0)     # (nq,B,qc,H,dh)
     ks = jnp.moveaxis(k.reshape(B, nk, kc, H, dh), 1, 0)
     vs = jnp.moveaxis(v.reshape(B, nk, kc, H, dh), 1, 0)
     rows = jnp.arange(qc)
     cols = jnp.arange(kc)
+    scale = _softmax_scale(dh)
 
-    def q_step(carry_rep, qi_blk):
+    def q_step(_, qi_blk):
         qi, qblk = qi_blk
+        qf = qblk.astype(jnp.float32)
 
         def kv_step(carry, ki_blk):
             ki, kblk, vblk = ki_blk
-            acc, m, l, rep = carry
+
+            def step(c):
+                acc, m, l = c
+                s = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                               kblk.astype(jnp.float32)) * scale
+                if cfg.causal:
+                    qpos = qi * qc + rows
+                    kpos = ki * kc + cols
+                    mask = jnp.where(qpos[:, None] >= kpos[None, :],
+                                     0.0, NEG_INF)
+                    s = s + mask[None, None, :, :]
+                m2 = jnp.max(s, axis=-1)                     # (B,H,qc)
+                e = jnp.exp(s - m2[..., None])
+                l2 = jnp.sum(e, axis=-1)
+                a2 = jnp.einsum("bhqk,bkhd->bhqd", e,
+                                vblk.astype(jnp.float32))
+                m_new = jnp.maximum(m, m2)
+                c1 = jnp.exp(m - m_new)
+                c2 = jnp.exp(m2 - m_new)
+                return (acc * c1[..., None] + a2 * c2[..., None],
+                        m_new, l * c1 + l2 * c2)
+
             if cfg.causal:
-                qpos = qi * qc + rows
-                kpos = ki * kc + cols
-                mask = jnp.where(qpos[:, None] >= kpos[None, :], 0.0, NEG_INF)
+                # skip chunk pairs that are entirely above the diagonal
+                carry = lax.cond(ki * kc <= qi * qc + qc - 1,
+                                 step, lambda c: c, carry)
             else:
-                mask = None
-            skip = cfg.causal and False  # masks handle it; keep full scan
-            a2, m2, l2, rep2 = _scores_ctx(qblk, kblk, vblk, mask,
-                                           ctx, protect)
-            m_new = jnp.maximum(m, m2)
-            c1 = jnp.exp(m - m_new)
-            c2 = jnp.exp(m2 - m_new)
-            acc = acc * c1[..., None] + a2 * c2[..., None]
-            l = l * c1 + l2 * c2
-            return (acc, m_new, l, ftreport.merge(rep, rep2)), None
+                carry = step(carry)
+            return carry, None
 
         init = (jnp.zeros((B, H, qc, dh), jnp.float32),
                 jnp.full((B, H, qc), NEG_INF, jnp.float32),
-                jnp.zeros((B, H, qc), jnp.float32),
-                ftreport.empty_report())
-        (acc, m, l, rep), _ = lax.scan(
-            kv_step, init, (jnp.arange(nk), ks, vs))
+                jnp.zeros((B, H, qc), jnp.float32))
+        (acc, m, l), _ = lax.scan(kv_step, init, (jnp.arange(nk), ks, vs))
         out = acc / jnp.maximum(l[..., None], 1e-30)
-        return ftreport.merge(carry_rep, rep), jnp.moveaxis(out, 1, 2)
+        return None, jnp.moveaxis(out, 1, 2)
 
-    rep, outs = lax.scan(q_step, ftreport.empty_report(),
-                         (jnp.arange(nq), qs))
+    _, outs = lax.scan(q_step, None, (jnp.arange(nq), qs))
     out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, dh)      # (B,S,H,dh)
-    return out.astype(q.dtype), rep
+    return out.astype(q.dtype), ftreport.empty_report()
 
 
 def mha(p: Dict[str, Any], x: jax.Array, positions: jax.Array,
@@ -353,22 +350,40 @@ def mha_decode(p: Dict[str, Any], x: jax.Array, pos: jax.Array,
     group = H_loc // nkv_loc
     kk = jnp.repeat(ck_f, group, axis=2)                     # (B,S_loc,H,dh)
     vv = jnp.repeat(cv_f, group, axis=2)
-    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
-                   kk.astype(jnp.float32)) / jnp.sqrt(dh)
-    valid = (base + jnp.arange(s_loc)) <= pos
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
-    m = jnp.max(s, axis=-1)
-    e = jnp.exp(s - m[..., None])
-    l = jnp.sum(e, axis=-1)
-    acc = jnp.einsum("bhqk,bkhd->bhqd", e, vv.astype(jnp.float32))
-    if ctx.seq_shard:
-        # flash-decode combine across the data axes
-        m_g = lax.pmax(m, ctx.data_axis)
-        c = jnp.exp(m - m_g)
-        acc = lax.psum(acc * c[..., None], ctx.data_axis)
-        l = lax.psum(l * c, ctx.data_axis)
-    o = acc / jnp.maximum(l[..., None], 1e-30)
-    o = jnp.moveaxis(o, 1, 2).reshape(B, 1, H_loc * dh).astype(x.dtype)
+    scale = _softmax_scale(dh)
+    if ctx.policy.protect_attention:
+        # flash-decode verification interval: score + context products of
+        # the dequantized cache (incl. the int8 path) under ABFT; the
+        # kernel returns UNNORMALIZED (acc, m, l) so the cross-shard
+        # combine below is unchanged.  m/l are (B, H) here (one query).
+        acc, m, l, r_attn = ft_decode_attention(
+            q[:, 0], kk, vv, scale=scale, pos=pos, base=base,
+            policy=ctx.policy, injection=ctx.injection)
+        if ctx.seq_shard:
+            m_g = lax.pmax(m, ctx.data_axis)
+            c = jnp.exp(m - m_g)
+            acc = lax.psum(acc * c[..., None], ctx.data_axis)
+            l = lax.psum(l * c, ctx.data_axis)
+        o = acc / jnp.maximum(l[..., None], 1e-30)           # (B,H,dh)
+        o = o[:, None].reshape(B, 1, H_loc * dh).astype(x.dtype)
+    else:
+        r_attn = ftreport.empty_report()
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       kk.astype(jnp.float32)) * scale
+        valid = (base + jnp.arange(s_loc)) <= pos
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        e = jnp.exp(s - m[..., None])
+        l = jnp.sum(e, axis=-1)
+        acc = jnp.einsum("bhqk,bkhd->bhqd", e, vv.astype(jnp.float32))
+        if ctx.seq_shard:
+            # flash-decode combine across the data axes
+            m_g = lax.pmax(m, ctx.data_axis)
+            c = jnp.exp(m - m_g)
+            acc = lax.psum(acc * c[..., None], ctx.data_axis)
+            l = lax.psum(l * c, ctx.data_axis)
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        o = jnp.moveaxis(o, 1, 2).reshape(B, 1, H_loc * dh).astype(x.dtype)
     y, r4 = ft_dense(o, p["wo"], ctx=ctx)
     y = lax.psum(y, ctx.model_axis)
-    return y, new_cache, ftreport.merge(r1, r2, r3, r4, *qk_reps)
+    return y, new_cache, ftreport.merge(r1, r2, r3, r4, r_attn, *qk_reps)

@@ -1,0 +1,271 @@
+"""Fused flash-attention ABFT (the single-kernel verification interval).
+
+Covers the acceptance criteria:
+  - ``ft_attention`` under fused / unfused hybrid policies matches the
+    unprotected path and a float64 oracle on clean runs (fp32 AND bf16,
+    both backends) with all-zero FT counters;
+  - the fused protected prefill lowers to exactly ONE pallas_call - the
+    online-softmax scan and BOTH checksummed contractions live in a
+    single kernel, no host-level dot_general;
+  - an injected score fault whose (row, col) crosses a chunk boundary
+    (q-chunk 1 x kv-chunk 0) is located and corrected in-kernel, i.e. the
+    correction survives the later online-softmax rescale steps; context
+    accumulator faults likewise; the same faults corrupt the unprotected
+    control;
+  - flash decode: parity vs a masked-softmax f64 oracle, fault correction
+    on both decode products, and the model-level ``mha_decode``
+    int8-dequant cache path under ``protect_attention``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import report as ftreport
+from repro.core.ft_attention import ft_attention, ft_decode_attention
+from repro.core.ft_config import FTPolicy
+from repro.core.injection import (ABFT_ACC, ABFT_ACC_2, Injection,
+                                  SEAM_ATTN)
+
+NB, S, DH = 2, 16, 8
+QC = KC = 8                       # 2x2 chunk grid: faults can cross chunks
+OFF = FTPolicy(mode="off")
+
+# slice 1, row 9 (q-chunk 1), col 2 (kv-chunk 0): valid causal position
+# whose correction must survive the subsequent rescale steps
+SCORE_PIN = 1 * S * S + 9 * S + 2
+# slice 1, row 3, col 4 of the first-KV-chunk context contribution
+CTX_PIN = 1 * S * DH + 3 * DH + 4
+
+
+def _policy(fused=True, interpret=True):
+    return FTPolicy(mode="hybrid", fused=fused, interpret=interpret)
+
+
+def _qkv(dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(k, (NB, S, DH), jnp.float32).astype(dtype)
+                 for k in ks)
+
+
+def _np64(x):
+    return np.asarray(jnp.asarray(x, jnp.float32), np.float64)
+
+
+def _oracle(q, k, v):
+    qf, kf, vf = _np64(q), _np64(k), _np64(v)
+    s = np.einsum("bqd,bkd->bqk", qf, kf) / np.sqrt(DH)
+    s = np.where(np.tril(np.ones((S, S), bool)), s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bqk,bkd->bqd", p, vf)
+
+
+def _run(policy, injection=None, dtype=jnp.float32):
+    q, k, v = _qkv(dtype)
+    inj = injection if injection is not None else Injection.none()
+    out, rep = jax.jit(lambda a, b, c, i: ft_attention(
+        a, b, c, causal=True, q_chunk=QC, kv_chunk=KC,
+        policy=policy, injection=i))(q, k, v, inj)
+    return out, rep
+
+
+# -- clean parity + zero counters ---------------------------------------------
+@pytest.mark.parametrize("backend", ["interpret", "compiled"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_clean_parity_and_zero_counters(backend, dtype):
+    interpret = backend == "interpret"
+    ref, _ = _run(OFF, dtype=dtype)
+    atol = 1e-5 if dtype == jnp.float32 else 0.05
+    for pol in (_policy(fused=True, interpret=interpret),
+                _policy(fused=False, interpret=interpret)):
+        out, rep = _run(pol, dtype=dtype)
+        np.testing.assert_allclose(_np64(out), _np64(ref), atol=atol)
+        for field in ("abft_detected", "abft_corrected",
+                      "abft_unrecoverable"):
+            assert int(rep[field]) == 0, (pol.fused, field)
+    # and both agree with the f64 oracle
+    q, k, v = _qkv(dtype)
+    np.testing.assert_allclose(_np64(ref), _oracle(q, k, v),
+                               atol=2e-5 if dtype == jnp.float32 else 0.12)
+
+
+# -- jaxpr: ONE kernel launch for the whole protected prefill -----------------
+def _subjaxprs(v):
+    out = []
+    vals = v if isinstance(v, (list, tuple)) else [v]
+    for x in vals:
+        if hasattr(x, "jaxpr"):
+            out.append(x.jaxpr)
+        elif hasattr(x, "eqns"):
+            out.append(x)
+    return out
+
+
+def _count_prims(jaxpr, name, *, enter_kernels=True):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        if not enter_kernels and eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                n += _count_prims(sub, name, enter_kernels=enter_kernels)
+    return n
+
+
+def test_fused_prefill_is_single_pallas_call():
+    """The tentpole assertion: protected prefill = ONE kernel launch with
+    the softmax scan and both checksummed contractions inside - no
+    host-level matmul and no second verification pass."""
+    q, k, v = _qkv()
+
+    def f(a, b, c):
+        out, _ = ft_attention(a, b, c, causal=True, q_chunk=QC, kv_chunk=KC,
+                              policy=_policy(fused=True, interpret=True))
+        return out
+
+    jaxpr = jax.make_jaxpr(f)(q, k, v)
+    assert _count_prims(jaxpr.jaxpr, "pallas_call") == 1
+    assert _count_prims(jaxpr.jaxpr, "dot_general",
+                        enter_kernels=False) == 0
+
+
+# -- fault injection: locate + correct inside the kernel ----------------------
+@pytest.mark.parametrize("backend", ["interpret", "compiled"])
+@pytest.mark.parametrize("stream,pos", [(ABFT_ACC, SCORE_PIN),
+                                        (ABFT_ACC_2, CTX_PIN)],
+                         ids=["score", "ctx"])
+def test_fault_corrected_across_chunk_boundary(backend, stream, pos):
+    interpret = backend == "interpret"
+    pol = _policy(fused=True, interpret=interpret)
+    clean, _ = _run(pol)
+    inj = Injection.at(stream=stream, pos=pos, delta=8.0, seam=SEAM_ATTN)
+    out, rep = _run(pol, injection=inj)
+    assert int(rep["abft_detected"]) >= 1
+    assert int(rep["abft_corrected"]) >= 1
+    assert int(rep["abft_unrecoverable"]) == 0
+    np.testing.assert_allclose(_np64(out), _np64(clean), atol=1e-4)
+    # control: the identical fault corrupts the unprotected path
+    bad, rep_off = _run(OFF, injection=inj)
+    assert np.abs(_np64(bad) - _np64(clean)).max() > 1e-2
+    assert int(rep_off["abft_detected"]) == 0
+
+
+def test_unfused_layering_corrects_too():
+    """The per-chunk layered path (the A-B baseline the fusion replaces)
+    reaches the same corrected output."""
+    pol = _policy(fused=False, interpret=True)
+    clean, _ = _run(pol)
+    inj = Injection.at(stream=ABFT_ACC, pos=SCORE_PIN, delta=8.0,
+                       seam=SEAM_ATTN)
+    out, rep = _run(pol, injection=inj)
+    assert int(rep["abft_detected"]) >= 1
+    assert int(rep["abft_corrected"]) >= 1
+    np.testing.assert_allclose(_np64(out), _np64(clean), atol=1e-4)
+
+
+# -- flash decode -------------------------------------------------------------
+DB, DHD, DS, DPOS = 2, 2, 16, 11
+DEC_SCORE_PIN = 1 * DHD * DS + 1 * DS + 5    # col 5 <= DPOS: live lane
+DEC_CTX_PIN = 1 * DH + 3
+
+
+def _decode_ops(seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (DB, DHD, DH), jnp.float32)
+    k = jax.random.normal(ks[1], (DB, DS, DHD, DH), jnp.float32)
+    v = jax.random.normal(ks[2], (DB, DS, DHD, DH), jnp.float32)
+    return q, k, v
+
+
+def _decode_oracle(q, k, v):
+    qf, kf, vf = _np64(q), _np64(k), _np64(v)
+    s = np.einsum("bhd,bkhd->bhk", qf, kf) / np.sqrt(DH)
+    s = np.where((np.arange(DS) <= DPOS)[None, None, :], s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhk,bkhd->bhd", p, vf)
+
+
+def _run_decode(policy, injection=None):
+    q, k, v = _decode_ops()
+    inj = injection if injection is not None else Injection.none()
+    acc, m, l, rep = jax.jit(lambda a, b, c, i: ft_decode_attention(
+        a, b, c, scale=float(1.0 / np.sqrt(DH)), pos=DPOS, base=0,
+        policy=policy, injection=i))(q, k, v, inj)
+    return np.asarray(acc) / np.maximum(np.asarray(l), 1e-30)[..., None], rep
+
+
+@pytest.mark.parametrize("backend", ["interpret", "compiled"])
+def test_decode_parity_and_fault_correction(backend):
+    interpret = backend == "interpret"
+    pol = _policy(fused=True, interpret=interpret)
+    out, rep = _run_decode(pol)
+    np.testing.assert_allclose(out, _decode_oracle(*_decode_ops()),
+                               atol=2e-5)
+    assert int(rep["abft_detected"]) == 0
+    for stream, pos in ((ABFT_ACC, DEC_SCORE_PIN),
+                        (ABFT_ACC_2, DEC_CTX_PIN)):
+        inj = Injection.at(stream=stream, pos=pos, delta=8.0,
+                           seam=SEAM_ATTN)
+        fixed, repi = _run_decode(pol, injection=inj)
+        assert int(repi["abft_detected"]) >= 1
+        assert int(repi["abft_corrected"]) >= 1
+        np.testing.assert_allclose(fixed, out, atol=1e-4)
+
+
+def test_mha_decode_int8_cache_protected():
+    """Model layer: the int8-dequant decode cache path runs its score /
+    context products through the flash-decode verification interval and
+    corrects a mid-decode fault (output matches the unprotected clean
+    run)."""
+    from repro.models.attention import (AttnCfg, attn_init, init_cache,
+                                        mha_decode)
+    from repro.models.common import ShardCtx
+
+    cfg = AttnCfg(d_model=32, n_heads=2, n_kv=2, head_dim=16,
+                  cache_dtype="int8")
+    params = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rspec = {k: P() for k in ftreport.FIELDS}
+    B, SMAX = 2, 8
+    xs = jax.random.normal(jax.random.PRNGKey(1), (4, B, 1, cfg.d_model),
+                           jnp.float32)
+
+    def run(policy, inj):
+        ctx = ShardCtx(data_axis=("data",), model_axis="model",
+                       data_size=1, model_size=1, policy=policy,
+                       injection=inj)
+        cache = init_cache(cfg, B, SMAX, ctx, jnp.float32)
+        outs = []
+        rep_last = None
+        for pos in range(4):
+            fire = inj is not None and pos == 3
+            step_ctx = ctx if fire else ShardCtx(
+                data_axis=("data",), model_axis="model", data_size=1,
+                model_size=1, policy=policy, injection=None)
+            fn = jax.jit(jax.shard_map(
+                lambda p, x, c: mha_decode(p, x, jnp.int32(pos), c, cfg,
+                                           step_ctx),
+                mesh=mesh, in_specs=(P(), P(), P()),
+                out_specs=(P(), P(), rspec), check_vma=False))
+            y, cache, rep_last = fn(params, xs[pos], cache)
+            outs.append(np.asarray(y))
+        return np.stack(outs), rep_last
+
+    clean, _ = run(OFF, None)
+    pol = FTPolicy(mode="hybrid", fused=True, interpret=False,
+                   protect_attention=True)
+    prot, rep0 = run(pol, None)
+    np.testing.assert_allclose(prot, clean, atol=1e-4)
+    inj = Injection.at(stream=ABFT_ACC, pos=0, delta=1e3, seam=SEAM_ATTN)
+    fixed, rep = run(pol, inj)
+    np.testing.assert_allclose(fixed, clean, atol=1e-4)
+    assert int(rep["abft_detected"]) >= 1
+    assert int(rep["abft_corrected"]) >= 1
+    assert int(rep["abft_unrecoverable"]) == 0
